@@ -1,0 +1,60 @@
+"""PSO-GA engine throughput: jitted swarm-iterations/second and particle
+evaluations/second vs problem size — the performance of the paper's
+algorithm as a vmapped/jitted JAX program (the reproduction's own compute
+layer; the paper ran seconds-per-iteration on a Pentium G3250)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (PSOGAConfig, paper_environment, zoo)
+from repro.core.pso_ga import _SwarmState, _make_step, init_swarm
+from repro.core.simulator import SimProblem
+
+from .common import print_csv
+
+
+def bench_net(net: str, pop: int = 100, iters: int = 50):
+    env = paper_environment()
+    dag = zoo.build(net, deadline=1e9)
+    prob = SimProblem.build(dag, env)
+    cfg = PSOGAConfig(pop_size=pop, max_iters=iters)
+    step, fit = _make_step(prob, cfg)
+    key = jax.random.PRNGKey(0)
+    X0 = init_swarm(key, prob, cfg)
+    f0 = fit(X0)
+    state = _SwarmState(key=key, X=X0, pbest_x=X0, pbest_f=f0,
+                        gbest_x=X0[0], gbest_f=f0[0],
+                        it=jax.numpy.asarray(0),
+                        stall=jax.numpy.asarray(0))
+    jstep = jax.jit(step)
+    state = jstep(state)                       # compile + warmup
+    jax.block_until_ready(state.X)
+    t0 = time.time()
+    for _ in range(iters):
+        state = jstep(state)
+    jax.block_until_ready(state.X)
+    dt = (time.time() - t0) / iters
+    return {
+        "net": net, "layers": dag.num_layers, "pop": pop,
+        "us_per_iter": dt * 1e6,
+        "evals_per_s": pop / dt,
+        "layersteps_per_s": pop * dag.num_layers / dt,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pop", type=int, default=100)
+    args = ap.parse_args()
+    rows = [bench_net(n, pop=args.pop)
+            for n in ("alexnet", "vgg19", "googlenet", "resnet101")]
+    print_csv(rows, ["net", "layers", "pop", "us_per_iter", "evals_per_s",
+                     "layersteps_per_s"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Fig. 7 — system cost of PSO-GA / GA / Greedy / prePSO for ONE
+DNN per end device (10 DNNs), per net type x deadline multiplier."""
+from __future__ import annotations
+
+import argparse
+
+from .common import ALGOS, PAPER, QUICK, RATIOS, print_csv, run_cell
+
+NETS = ("alexnet", "vgg19", "googlenet", "resnet101")
+
+
+#: CPU-budget trims for the deepest problems (full 5-ratio sweeps via
+#: --paper-protocol); orderings are asserted per-cell so nothing is lost.
+RATIO_TRIM = {
+    1: {"resnet101": (1.5, 3.0, 8.0)},
+    3: {"googlenet": (1.5, 3.0, 8.0), "resnet101": ()},
+}
+
+
+def run(nets=NETS, ratios=RATIOS, algos=tuple(ALGOS), proto=QUICK,
+        per_device: int = 1):
+    rows = []
+    trim = RATIO_TRIM.get(per_device, {})
+    for net in nets:
+        net_ratios = trim.get(net, ratios)
+        if not net_ratios:
+            print(f"# {net} x{per_device}/device skipped "
+                  f"(10k-layer problem; --paper-protocol runs it)",
+                  flush=True)
+            continue
+        for ratio in net_ratios:
+            for algo in algos:
+                r = run_cell(net, per_device, ratio, algo, proto)
+                rows.append(r)
+                print(f"# {net} r={ratio} {algo}: cost={r['cost']:.5f} "
+                      f"feas={r['feasible_frac']:.2f} "
+                      f"({r['wall_s']:.1f}s)", flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--nets", nargs="*", default=list(NETS))
+    args = ap.parse_args()
+    rows = run(nets=args.nets, proto=PAPER if args.paper else QUICK)
+    print_csv(rows, ["net", "ratio", "algo", "layers", "cost",
+                     "feasible_frac", "wall_s"])
+
+
+if __name__ == "__main__":
+    main()

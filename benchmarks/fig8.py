@@ -1,0 +1,22 @@
+"""Paper Fig. 8 — THREE DNNs per end device (30 DNNs, deadlines x2)."""
+from __future__ import annotations
+
+import argparse
+
+from .common import ALGOS, PAPER, QUICK, RATIOS, print_csv
+from .fig7 import NETS, run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--nets", nargs="*", default=list(NETS))
+    args = ap.parse_args()
+    rows = run(nets=args.nets, proto=PAPER if args.paper else QUICK,
+               per_device=3)
+    print_csv(rows, ["net", "ratio", "algo", "layers", "cost",
+                     "feasible_frac", "wall_s"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""§Roofline table from the dry-run JSONs (results/dryrun by default).
+
+Reads every per-cell record the dry-run wrote, prints the three roofline
+terms + dominant bottleneck + useful-compute ratio per (arch x shape x
+mesh) and flags cells whose HBM footprint exceeds a v5e chip."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import print_csv
+
+
+def load(dirname: str, tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rec = json.load(open(path))
+        name = os.path.basename(path)[:-5]
+        want_tagged = name.endswith("_roofline")
+        if (tag == "roofline") != want_tagged:
+            continue
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                rows.append({
+                    "arch": rec["arch"], "shape": rec["shape"],
+                    "mesh": "mp" if rec.get("multi_pod") else "sp",
+                    "compute_s": 0.0, "memory_s": 0.0, "collective_s": 0.0,
+                    "dominant": "SKIPPED", "useful_ratio": 0.0,
+                    "fits_hbm": True, "peak_gb": 0.0})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "mesh": "mp" if rec.get("multi_pod") else "sp",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_ratio": rec.get("useful_compute_ratio", 0.0),
+            "fits_hbm": rec.get("fits_hbm", False),
+            "peak_gb": rec["memory"]["peak_bytes"] / 1e9,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="'' (fit pass) | roofline")
+    args = ap.parse_args()
+    rows = load(args.dir, args.tag)
+    if not rows:
+        print("# no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all --out-dir results/dryrun`")
+        return
+    print_csv(rows, ["arch", "shape", "mesh", "compute_s", "memory_s",
+                     "collective_s", "dominant", "useful_ratio",
+                     "fits_hbm", "peak_gb"])
+
+
+if __name__ == "__main__":
+    main()

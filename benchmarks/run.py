@@ -1,0 +1,109 @@
+"""Benchmark driver — one section per paper table/figure + the framework
+benches. CSV blocks to stdout.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only X]
+
+Sections:
+    fig7       paper Fig. 7  (1 DNN/device, 4 nets x 5 deadlines x 4 algos)
+    fig8       paper Fig. 8  (3 DNNs/device)
+    fig9       paper Fig. 9  (edge/cloud power scaling, AlexNet @ D2)
+    pso        PSO-GA engine throughput (jitted swarm iterations/s)
+    fleet      the technique on the TPU fleet (PSO-GA vs greedy vs uniform)
+    roofline   §Roofline table from the dry-run artifacts
+
+--quick trims fig7/fig8 to 2 nets x 3 deadlines (CI-sized); the default
+runs everything at the CPU protocol; --paper-protocol uses the paper's
+pop=100/iters=1000/50-seed settings — hours on this container."""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import PAPER, QUICK, RATIOS, print_csv
+
+
+def section(name: str) -> None:
+    print(f"\n## {name}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="fig7|fig8|fig9|pso|fleet|roofline")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--paper-protocol", action="store_true")
+    args = ap.parse_args()
+    proto = PAPER if args.paper_protocol else QUICK
+
+    want = lambda s: args.only in (None, s)
+    t00 = time.time()
+
+    if want("fig7"):
+        from .fig7 import NETS, run as run7
+        section("fig7: one DNN per device (paper Fig. 7)")
+        nets = ("alexnet", "googlenet") if args.quick else NETS
+        ratios = (1.2, 3.0, 8.0) if args.quick else RATIOS
+        rows = run7(nets=nets, ratios=ratios, proto=proto)
+        print_csv(rows, ["net", "ratio", "algo", "layers", "cost",
+                         "feasible_frac", "wall_s"])
+
+    if want("fig8"):
+        from .fig7 import NETS, run as run7
+        section("fig8: three DNNs per device (paper Fig. 8)")
+        nets = ("alexnet",) if args.quick else ("alexnet", "vgg19",
+                                                "googlenet")
+        ratios = (1.5, 5.0) if args.quick else RATIOS
+        rows = run7(nets=nets, ratios=ratios, proto=proto, per_device=3)
+        print_csv(rows, ["net", "ratio", "algo", "layers", "cost",
+                         "feasible_frac", "wall_s"])
+
+    if want("fig9"):
+        from .fig9 import run as run9
+        section("fig9: computing-power scaling (paper Fig. 9)")
+        rows = run9(proto=proto)
+        print_csv(rows, ["tier", "mult", "algo", "cost", "feasible_frac",
+                         "wall_s"])
+
+    if want("pso"):
+        from .bench_pso import bench_net
+        section("pso: PSO-GA engine throughput")
+        nets = ("alexnet", "googlenet") if args.quick \
+            else ("alexnet", "vgg19", "googlenet", "resnet101")
+        rows = [bench_net(n) for n in nets]
+        print_csv(rows, ["net", "layers", "pop", "us_per_iter",
+                         "evals_per_s", "layersteps_per_s"])
+
+    if want("fleet"):
+        from .fleet_plan import run as runf
+        section("fleet: cost-driven placement over the TPU fleet")
+        if args.quick:
+            archs = ["qwen3-0.6b", "whisper-medium"]
+        else:
+            from repro.configs import names
+            archs = list(names())
+        rows = runf(archs)
+        print_csv(rows, ["arch", "ratio", "psoga_cost", "greedy_cost",
+                         "uniform_cost", "psoga_stages", "wall_s"])
+
+    if want("roofline"):
+        from .roofline import load
+        section("roofline: dry-run derived terms (fit pass)")
+        rows = load("results/dryrun")
+        if rows:
+            print_csv(rows, ["arch", "shape", "mesh", "compute_s",
+                             "memory_s", "collective_s", "dominant",
+                             "useful_ratio", "fits_hbm", "peak_gb"])
+        else:
+            print("# (no dry-run artifacts; see EXPERIMENTS.md)")
+        rows = load("results/dryrun", tag="roofline")
+        if rows:
+            section("roofline: unrolled accum=1 pass (truthful HLO counts)")
+            print_csv(rows, ["arch", "shape", "mesh", "compute_s",
+                             "memory_s", "collective_s", "dominant",
+                             "useful_ratio", "fits_hbm", "peak_gb"])
+
+    print(f"\n# total bench wall time: {time.time()-t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family LM for a few
+hundred steps on CPU with the full production stack — sharded train step,
+ZeRO-1 AdamW, deterministic data stream, async checkpointing, an injected
+mid-run crash, and automatic restart from the latest checkpoint.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    (use --steps 30 for a fast smoke)
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get
+from repro.configs.base import ShapeSpec
+from repro.launch.train import Trainer, TrainerConfig
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a failure at this step (default midway)")
+    args = ap.parse_args()
+
+    # ~100M params: qwen3 dims shrunk to 12 layers x 768 wide, 32k vocab
+    cfg = dataclasses.replace(
+        get("qwen3-0.6b"), name="qwen3-100m", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32_000,
+        dtype="float32")
+    from repro.models import param_count
+    print(f"model: {cfg.name}  params={param_count(cfg)/1e6:.1f}M")
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="train_lm_")
+    crash = args.crash_at if args.crash_at is not None else args.steps // 2
+    shape = ShapeSpec("train", args.seq, args.batch, "train")
+    trainer = Trainer(
+        cfg, shape,
+        TrainerConfig(steps=args.steps, ckpt_dir=ckpt,
+                      ckpt_every=max(args.steps // 10, 5), log_every=10),
+        AdamWConfig(lr=6e-4, warmup_steps=args.steps // 10,
+                    total_steps=args.steps),
+        injector=FailureInjector(fail_at=(crash,)))
+    print(f"checkpoints -> {ckpt}; simulated crash at step {crash}")
+    out = trainer.train()
+    losses = [m["loss"] for m in out["metrics"]]
+    print(f"\nfinal step {out['final_step']}: "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(stragglers flagged: {out['stragglers']})")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

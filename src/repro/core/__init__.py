@@ -1,0 +1,39 @@
+"""The paper's primary contribution: cost-driven offloading of DNN layers
+over cloud / edge / end devices via PSO-GA (Lin et al., 2019).
+
+Public surface:
+  * LayerDAG / preprocess / merge_dags      — paper §III-A, Alg. 1
+  * Environment / paper_environment / ...   — paper §III-A, Tables II-IV
+  * SimProblem / simulate_np / build_simulator — paper Alg. 2
+  * run_pso_ga / PSOGAConfig                — paper §IV (Eq. 17-23)
+  * greedy_offload / run_ga / run_pso_linear / heft_makespan / pre_pso
+                                            — paper §V-B competitors
+  * zoo                                     — AlexNet/VGG19/GoogleNet/ResNet101
+  * placement / partition                   — TPU-fleet bridge (DESIGN.md §3)
+"""
+from .dag import LayerDAG, merge_dags, preprocess, topological_order
+from .environment import (CLOUD, DEVICE, EDGE, Environment,
+                          paper_environment, sample_environment,
+                          tpu_fleet_environment)
+from .fitness import INFEASIBLE_OFFSET, fitness_key
+from .simulator import SimProblem, SimResult, build_simulator, simulate_np
+from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga
+from .baselines import (GAConfig, greedy_offload, heft_makespan, pre_pso,
+                        run_ga, run_pso_linear)
+from .partition import Stage, contiguous_stages, stage_cut_cost, \
+    uniform_stages
+from .placement import OffloadPlan, arch_to_dag, block_flops, plan_offload
+from . import zoo
+
+__all__ = [
+    "LayerDAG", "merge_dags", "preprocess", "topological_order",
+    "Environment", "paper_environment", "sample_environment",
+    "tpu_fleet_environment", "CLOUD", "EDGE", "DEVICE",
+    "INFEASIBLE_OFFSET", "fitness_key",
+    "SimProblem", "SimResult", "build_simulator", "simulate_np",
+    "PSOGAConfig", "PSOGAResult", "run_pso_ga",
+    "GAConfig", "greedy_offload", "heft_makespan", "pre_pso", "run_ga",
+    "run_pso_linear", "zoo",
+    "Stage", "contiguous_stages", "stage_cut_cost", "uniform_stages",
+    "OffloadPlan", "arch_to_dag", "block_flops", "plan_offload",
+]

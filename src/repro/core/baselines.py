@@ -1,0 +1,369 @@
+"""Competitive algorithms (paper §V-B) + HEFT (used to set deadlines).
+
+* ``greedy_offload``   — offload each layer (topological order) to the
+  cheapest server that keeps the *partial* schedule within its deadline;
+  fall back to next-cheapest (paper's modified Greedy [24]).
+* ``run_ga``           — genetic algorithm with tournament selection,
+  two-point crossover and uniform mutation over the same encoding and the
+  same 3-case fitness (paper's modified GA [18]).
+* ``run_pso_linear``   — PSO with the same GA operators but the *linear*
+  inertia schedule of Eq. 21 (the non-adaptive ablation; "PSO" in Fig. 8d).
+* ``heft_makespan``    — HEFT [35]; the paper derives every deadline as
+  D_i = r_i · H(G_i) with r ∈ {1.2, 1.5, 3, 5, 8} (Eq. 24).
+* ``pre_pso``          — preprocessing (Alg. 1) + PSO-GA, expanded back to
+  per-original-layer placement ("prePSO").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dag import LayerDAG, preprocess, topological_order
+from .environment import Environment
+from .fitness import INFEASIBLE_OFFSET, fitness_key
+from .pso_ga import PSOGAConfig, PSOGAResult, _SwarmState, _make_step, \
+    init_swarm, run_pso_ga
+from .simulator import SimProblem, build_simulator, simulate_np
+
+__all__ = ["greedy_offload", "run_ga", "run_pso_linear", "heft_makespan",
+           "pre_pso", "GAConfig"]
+
+
+# ---------------------------------------------------------------------------
+# Greedy
+# ---------------------------------------------------------------------------
+
+def greedy_offload(dag: LayerDAG, env: Environment, faithful: bool = False
+                   ) -> PSOGAResult:
+    """Cheapest-server-first greedy (paper §V-B / Alg. 2 line 15).
+
+    Incremental O(p · S · deg): per layer, candidate servers are tried in
+    ascending rental rate (ties: descending power, then index); the first
+    whose schedule keeps THIS layer's end time within its app deadline
+    (exactly Alg. 2's per-layer check) wins. Outgoing-transfer busy time
+    is charged to the parent's server when the child is placed (the
+    information only exists then — same accounting Alg. 2 line 21 does
+    once placements are known).
+    """
+    prob = SimProblem.build(dag, env)
+    order = prob.order
+    p, s = prob.num_layers, prob.num_servers
+    pref = np.lexsort((np.arange(s), -env.power, env.cost_per_sec))
+    x = np.full(p, -1, np.int64)
+    lease = np.zeros(s)
+    end = np.zeros(p)
+    trans_cost = 0.0
+    feasible = True
+
+    for j in order:
+        dl = prob.deadline[prob.app_id[j]]
+        pars = prob.parent_idx[j]
+        pmask = pars >= 0
+        pidx = pars[pmask]
+        pmb = prob.parent_mb[j][pmask]
+        cands = ([int(prob.pinned[j])] if prob.pinned[j] >= 0 else
+                 [int(c) for c in pref])
+        placed_srv, placed_end = -1, np.inf
+        for srv in cands:
+            if pidx.size:
+                psrv = x[pidx]
+                if np.any(~prob.link_ok[psrv, srv] & (psrv != srv)):
+                    continue
+                tt = pmb * prob.inv_bw[psrv, srv]
+                if faithful:
+                    start = lease[srv] + tt.max()
+                else:
+                    start = max(lease[srv], float((end[pidx] + tt).max()))
+            else:
+                start = lease[srv]
+            t_end = start + prob.compute[j] / prob.power[srv]
+            if t_end <= dl or srv == cands[-1]:
+                ok_here = t_end <= dl
+                placed_srv, placed_end = srv, t_end
+                if not ok_here:
+                    feasible = False
+                break
+        x[j] = placed_srv
+        end[j] = placed_end
+        # this layer occupies its server; charge incoming-transfer wait to
+        # the chosen server per the selected fidelity mode
+        lease[placed_srv] = placed_end if not faithful else \
+            lease[placed_srv] + prob.compute[j] / prob.power[placed_srv]
+        # charge outgoing transfers of each parent now that the link is
+        # known (Alg. 2 line 21's `transfer` term) + transmission cost
+        if pidx.size:
+            psrv = x[pidx]
+            tt = pmb * prob.inv_bw[psrv, placed_srv]
+            for k, pj in enumerate(pidx):
+                if psrv[k] != placed_srv:
+                    lease[psrv[k]] += tt[k]
+            trans_cost += float(
+                np.sum(prob.tran_cost[psrv, placed_srv] * pmb))
+
+    res = simulate_np(prob, x, faithful=faithful)
+    ok = bool(res.feasible) and feasible
+    return PSOGAResult(best_x=x.astype(np.int32),
+                       best_fitness=float(res.total_cost) if ok
+                       else float(INFEASIBLE_OFFSET + res.app_completion.sum()),
+                       best_cost=float(res.total_cost) if ok else float("inf"),
+                       feasible=ok, iterations=1, history=None)
+
+
+# ---------------------------------------------------------------------------
+# GA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    pop_size: int = 100
+    max_iters: int = 1000
+    stall_iters: int = 50
+    tournament: int = 3
+    p_crossover: float = 0.9
+    p_mutation: float = 0.02          # per-gene
+    elite: int = 2
+    faithful_sim: bool = False        # match PSOGAConfig (paper-consistent)
+
+
+def run_ga(dag: LayerDAG, env: Environment, cfg: GAConfig = GAConfig(),
+           seed: int = 0) -> PSOGAResult:
+    prob = SimProblem.build(dag, env)
+    sim = build_simulator(prob, faithful=cfg.faithful_sim)
+    fit = jax.vmap(lambda x: fitness_key(sim(x)))
+    pinned = jnp.asarray(prob.pinned)
+    p, s, P = prob.num_layers, prob.num_servers, cfg.pop_size
+
+    def clamp(X):
+        return jnp.where(pinned[None, :] >= 0, pinned[None, :], X)
+
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    X = clamp(jax.random.randint(k0, (P, p), 0, s, dtype=jnp.int32))
+    f = fit(X)
+
+    def step(state):
+        key, X, f, best_f, stall, it = state
+        key, kt, kxp, kseg, kmu, kmuv = jax.random.split(key, 6)
+        # tournament selection (2 parents per offspring)
+        cand = jax.random.randint(kt, (P, 2, cfg.tournament), 0, P)
+        cf = f[cand]                                    # (P,2,T)
+        parents = jnp.take_along_axis(
+            cand, jnp.argmin(cf, axis=-1)[..., None], axis=-1)[..., 0]
+        pa, pb = X[parents[:, 0]], X[parents[:, 1]]
+        # two-point crossover
+        do_x = jax.random.uniform(kxp, (P,)) < cfg.p_crossover
+        seg = jax.random.randint(kseg, (P, 2), 0, p)
+        lo = jnp.min(seg, axis=1)[:, None]
+        hi = jnp.max(seg, axis=1)[:, None]
+        in_seg = (jnp.arange(p)[None, :] >= lo) & (jnp.arange(p)[None, :] <= hi)
+        child = jnp.where(in_seg & do_x[:, None], pb, pa)
+        # uniform mutation
+        mu = jax.random.uniform(kmu, (P, p)) < cfg.p_mutation
+        rand_vals = jax.random.randint(kmuv, (P, p), 0, s, dtype=jnp.int32)
+        child = clamp(jnp.where(mu, rand_vals, child))
+        cf_new = fit(child)
+        # elitism: keep `elite` best of previous generation
+        elite_idx = jnp.argsort(f)[: cfg.elite]
+        child = child.at[: cfg.elite].set(X[elite_idx])
+        cf_new = cf_new.at[: cfg.elite].set(f[elite_idx])
+        new_best = jnp.min(cf_new)
+        improved = new_best < best_f
+        stall = jnp.where(improved, 0, stall + 1)
+        best_f = jnp.minimum(best_f, new_best)
+        return (key, child, cf_new, best_f, stall, it + 1)
+
+    def cond(state):
+        _, _, _, _, stall, it = state
+        return (it < cfg.max_iters) & (stall < cfg.stall_iters)
+
+    state = (key, X, f, jnp.min(f), jnp.asarray(0), jnp.asarray(0))
+    key, X, f, best_f, stall, it = jax.lax.while_loop(cond, step, state)
+    i = int(jnp.argmin(f))
+    res = sim(X[i])
+    ok = bool(res.feasible)
+    return PSOGAResult(best_x=np.asarray(X[i]), best_fitness=float(f[i]),
+                       best_cost=float(res.total_cost) if ok else float("inf"),
+                       feasible=ok, iterations=int(it), history=None)
+
+
+# ---------------------------------------------------------------------------
+# PSO with linear inertia (Eq. 21) — the non-adaptive ablation
+# ---------------------------------------------------------------------------
+
+def run_pso_linear(dag: LayerDAG, env: Environment,
+                   cfg: PSOGAConfig = PSOGAConfig(), seed: int = 0
+                   ) -> PSOGAResult:
+    """Same operators as PSO-GA but w follows Eq. 21 (linear decay)."""
+    prob = SimProblem.build(dag, env)
+    sim = build_simulator(prob, faithful=cfg.faithful_sim)
+    fit = jax.vmap(lambda x: fitness_key(sim(x)))
+    pinned = jnp.asarray(prob.pinned)
+    p, s, P = prob.num_layers, prob.num_servers, cfg.pop_size
+
+    def clamp(X):
+        return jnp.where(pinned[None, :] >= 0, pinned[None, :], X)
+
+    def step(state: _SwarmState) -> _SwarmState:
+        key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
+            state.key, 8)
+        t = state.it.astype(jnp.float32) / cfg.max_iters
+        w = cfg.w_max - (cfg.w_max - cfg.w_min) * t        # Eq. 21
+        c1 = cfg.c1_start + (cfg.c1_end - cfg.c1_start) * t
+        c2 = cfg.c2_start + (cfg.c2_end - cfg.c2_start) * t
+        do_mu = jax.random.uniform(kmu, (P,)) < w
+        pos = jax.random.randint(kmu_pos, (P,), 0, p)
+        val = jax.random.randint(kmu_val, (P,), 0, s, dtype=jnp.int32)
+        A = jnp.where(
+            (jnp.arange(p)[None, :] == pos[:, None]) & do_mu[:, None],
+            val[:, None], state.X)
+        do_c1 = jax.random.uniform(kc1, (P,)) < c1
+        seg1 = jax.random.randint(kx1, (P, 2), 0, p)
+        lo1, hi1 = (jnp.min(seg1, 1)[:, None], jnp.max(seg1, 1)[:, None])
+        m1 = (jnp.arange(p)[None, :] >= lo1) & (jnp.arange(p)[None, :] <= hi1)
+        B = jnp.where(m1 & do_c1[:, None], state.pbest_x, A)
+        do_c2 = jax.random.uniform(kc2, (P,)) < c2
+        seg2 = jax.random.randint(kx2, (P, 2), 0, p)
+        lo2, hi2 = (jnp.min(seg2, 1)[:, None], jnp.max(seg2, 1)[:, None])
+        m2 = (jnp.arange(p)[None, :] >= lo2) & (jnp.arange(p)[None, :] <= hi2)
+        C = jnp.where(m2 & do_c2[:, None], state.gbest_x[None, :], B)
+        X = clamp(C)
+        f = fit(X)
+        improved = f < state.pbest_f
+        pbest_x = jnp.where(improved[:, None], X, state.pbest_x)
+        pbest_f = jnp.where(improved, f, state.pbest_f)
+        i_best = jnp.argmin(pbest_f)
+        better = pbest_f[i_best] < state.gbest_f
+        return _SwarmState(
+            key=key, X=X, pbest_x=pbest_x, pbest_f=pbest_f,
+            gbest_x=jnp.where(better, pbest_x[i_best], state.gbest_x),
+            gbest_f=jnp.where(better, pbest_f[i_best], state.gbest_f),
+            it=state.it + 1,
+            stall=jnp.where(better, 0, state.stall + 1))
+
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    X0 = init_swarm(k_init, prob, cfg)
+    f0 = fit(X0)
+    i0 = jnp.argmin(f0)
+    state = _SwarmState(key=key, X=X0, pbest_x=X0, pbest_f=f0,
+                        gbest_x=X0[i0], gbest_f=f0[i0],
+                        it=jnp.asarray(0), stall=jnp.asarray(0))
+    state = jax.lax.while_loop(
+        lambda s: (s.it < cfg.max_iters) & (s.stall < cfg.stall_iters),
+        step, state)
+    res = sim(state.gbest_x)
+    ok = bool(res.feasible)
+    return PSOGAResult(best_x=np.asarray(state.gbest_x),
+                       best_fitness=float(state.gbest_f),
+                       best_cost=float(res.total_cost) if ok else float("inf"),
+                       feasible=ok, iterations=int(state.it), history=None)
+
+
+# ---------------------------------------------------------------------------
+# HEFT
+# ---------------------------------------------------------------------------
+
+def heft_makespan(dag: LayerDAG, env: Environment
+                  ) -> Tuple[float, np.ndarray]:
+    """Classic HEFT [35]: upward-rank priority + earliest-finish-time
+    server selection (non-insertion). Pinned layers stay pinned. Returns
+    (makespan, assignment). Used for the deadline rule D_i = r_i · H(G_i).
+    """
+    prob = SimProblem.build(dag, env)
+    p, s = prob.num_layers, prob.num_servers
+    avg_exec = dag.compute[:, None] / env.power[None, :]
+    w_bar = avg_exec.mean(axis=1)                         # (p,)
+    # average comm rate over distinct-server pairs with real links
+    off_diag = ~np.eye(s, dtype=bool)
+    ok = prob.link_ok & off_diag
+    inv_bw_avg = prob.inv_bw[ok].mean() if ok.any() else 0.0
+
+    children = [[] for _ in range(p)]
+    child_mb = [[] for _ in range(p)]
+    for (u, v), mb in zip(dag.edges, dag.edge_mb):
+        children[int(u)].append(int(v))
+        child_mb[int(u)].append(float(mb))
+
+    rank = np.zeros(p)
+    for j in reversed(topological_order(dag)):
+        best = 0.0
+        for c, mb in zip(children[j], child_mb[j]):
+            best = max(best, mb * inv_bw_avg + rank[c])
+        rank[j] = w_bar[j] + best
+
+    order = np.argsort(-rank, kind="stable")
+    # respect topology: stable-sort by rank is not guaranteed topological
+    # for general DAGs; enforce by Kahn with rank priority.
+    import heapq
+    indeg = dag.in_degree().copy()
+    prio = {j: (-rank[j], j) for j in range(p)}
+    ready = [prio[j] for j in range(p) if indeg[j] == 0]
+    heapq.heapify(ready)
+    sched_order = []
+    while ready:
+        _, j = heapq.heappop(ready)
+        sched_order.append(j)
+        for c in children[j]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                heapq.heappush(ready, prio[c])
+
+    parents = [[] for _ in range(p)]
+    parent_mb = [[] for _ in range(p)]
+    for (u, v), mb in zip(dag.edges, dag.edge_mb):
+        parents[int(v)].append(int(u))
+        parent_mb[int(v)].append(float(mb))
+
+    ready_srv = np.zeros(s)
+    aft = np.zeros(p)
+    x = np.zeros(p, np.int64)
+    for j in sched_order:
+        cands = ([int(prob.pinned[j])] if prob.pinned[j] >= 0
+                 else list(range(s)))
+        best_ft, best_srv = np.inf, cands[0]
+        for srv in cands:
+            gate = ready_srv[srv]
+            bad = False
+            for pj, mb in zip(parents[j], parent_mb[j]):
+                if x[pj] != srv and not prob.link_ok[x[pj], srv]:
+                    bad = True
+                    break
+                gate = max(gate, aft[pj] + mb * prob.inv_bw[x[pj], srv])
+            if bad:
+                continue
+            ft = gate + dag.compute[j] / env.power[srv]
+            if ft < best_ft:
+                best_ft, best_srv = ft, srv
+        x[j] = best_srv
+        aft[j] = best_ft
+        ready_srv[best_srv] = best_ft
+    return float(aft.max() if p else 0.0), x
+
+
+# ---------------------------------------------------------------------------
+# prePSO
+# ---------------------------------------------------------------------------
+
+def pre_pso(dag: LayerDAG, env: Environment,
+            cfg: PSOGAConfig = PSOGAConfig(), seed: int = 0) -> PSOGAResult:
+    """Alg. 1 preprocessing, PSO-GA on the compressed DAG, then expansion
+    of the placement back to original layers (every member of a merged
+    group runs on the group's server)."""
+    small, group = preprocess(dag)
+    res = run_pso_ga(small, env, cfg, seed=seed)
+    expanded = res.best_x[group]
+    # Re-evaluate on the ORIGINAL problem for apples-to-apples cost:
+    # merged execution removes intra-group transfers, which is exactly
+    # what same-server placement does in the original DAG too.
+    prob = SimProblem.build(dag, env)
+    r = simulate_np(prob, expanded, faithful=cfg.faithful_sim)
+    ok = bool(r.feasible)
+    return PSOGAResult(best_x=expanded.astype(np.int32),
+                       best_fitness=float(r.total_cost) if ok
+                       else float(INFEASIBLE_OFFSET + r.app_completion.sum()),
+                       best_cost=float(r.total_cost) if ok else float("inf"),
+                       feasible=ok, iterations=res.iterations, history=None)

@@ -1,0 +1,236 @@
+"""PSO-GA — self-adaptive discrete PSO with GA operators (paper §IV-B).
+
+The particle position is the server-assignment vector (the order genes φ
+are frozen to the topological order at init — §IV-B.3). One iteration
+applies, per particle (Eq. 17–20):
+
+    A = w  ⊕ Mu(X)            mutation       (inertia component)
+    B = c1 ⊕ Cp(A, pBest)     crossover      (individual cognition)
+    C = c2 ⊕ Cg(B, gBest)     crossover      (social cognition)
+
+with the self-adaptive inertia weight (Eq. 22–23)
+
+    w = w_max − (w_max − w_min) · exp(d / (d − 1.01)),
+    d = div(gBest, X) / p_dims       (fraction of differing genes)
+
+(d→0 ⇒ w→w_min: converged particles mutate rarely; d→1 ⇒ w→w_max).
+Acceleration coefficients ramp linearly: c1 0.9→0.2, c2 0.4→0.9 [34].
+
+The whole swarm advances in one jitted step: fitness is the vmapped
+Algorithm-2 simulator, mutation/crossover are vectorized index ops, and
+the iteration loop is a ``lax.while_loop`` with the paper's stopping rule
+(terminate when gBest is unchanged for ``stall_iters`` iterations, or at
+``max_iters``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dag import LayerDAG
+from .environment import Environment
+from .fitness import fitness_key
+from .simulator import SimProblem, build_simulator
+
+__all__ = ["PSOGAConfig", "PSOGAResult", "run_pso_ga", "init_swarm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PSOGAConfig:
+    pop_size: int = 100
+    max_iters: int = 1000
+    stall_iters: int = 50           # paper §V-C: stop after 50 unchanged
+    w_max: float = 0.9
+    w_min: float = 0.4
+    c1_start: float = 0.9
+    c1_end: float = 0.2
+    c2_start: float = 0.4
+    c2_end: float = 0.9
+    faithful_sim: bool = False      # False = parent-gated recurrence, which
+    #   matches the paper's own worked example (Fig. 2: 3.41 s / 3.65 s /
+    #   ">4 s" are only reproduced with parent gating); True = the printed
+    #   Alg. 2 line-21 recurrence verbatim (see DESIGN.md §2).
+    bias_init_to_tiers: bool = True  # seed swarm with tier-aware particles
+
+
+class PSOGAResult(NamedTuple):
+    best_x: np.ndarray           # (p,) best server assignment found
+    best_fitness: float          # scalar key (cost if feasible)
+    best_cost: float             # C_total of best (inf if infeasible)
+    feasible: bool
+    iterations: int              # iterations actually executed
+    history: Optional[np.ndarray] = None  # (max_iters,) gBest key per iter
+
+
+class _SwarmState(NamedTuple):
+    key: jnp.ndarray
+    X: jnp.ndarray               # (P, p) int32
+    pbest_x: jnp.ndarray         # (P, p)
+    pbest_f: jnp.ndarray         # (P,)
+    gbest_x: jnp.ndarray         # (p,)
+    gbest_f: jnp.ndarray         # ()
+    it: jnp.ndarray              # ()
+    stall: jnp.ndarray           # ()
+
+
+def _clamp_pins(X: jnp.ndarray, pinned: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(pinned[None, :] >= 0, pinned[None, :], X)
+
+
+def _home_servers(prob: SimProblem) -> np.ndarray:
+    """Per-layer home server: the pinned server of the layer's app (or 0)."""
+    pin_per_app = {}
+    pinned_np = np.asarray(prob.pinned)
+    app_np = np.asarray(prob.app_id)
+    for j in range(prob.num_layers):
+        if pinned_np[j] >= 0:
+            pin_per_app.setdefault(int(app_np[j]), int(pinned_np[j]))
+    return np.array([pin_per_app.get(int(a), 0) for a in app_np], np.int32)
+
+
+def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
+               ) -> jnp.ndarray:
+    """Link-aware random initialization.
+
+    Genes are drawn uniformly over the servers *reachable from the app's
+    home device* ({home} ∪ {s : ℓ(home, s) > 0}) so the initial swarm has
+    zero forbidden-link placements. Mutation still draws from ALL servers,
+    so the full space remains reachable — this is a search-space seeding
+    choice the paper leaves unspecified, not a restriction of the encoding
+    (see EXPERIMENTS.md §Perf for its ablation). One particle is seeded
+    with the everything-stays-home placement: the paper's own limiting
+    solution (zero cost when the deadline is loose, Fig. 8(b)).
+    """
+    p, s = prob.num_layers, prob.num_servers
+    home = _home_servers(prob)
+    link_ok = np.asarray(prob.link_ok)
+    allowed = link_ok[home, :].copy()            # (p, S)
+    allowed[np.arange(p), home] = True
+    # never initialize onto a *foreign* end device (free but slowest and
+    # behind two WIFI hops); mutation may still propose them.
+    logits = jnp.where(jnp.asarray(allowed), 0.0, -jnp.inf)   # (p, S)
+    k1, _ = jax.random.split(key)
+    X = jax.random.categorical(
+        k1, logits[None, :, :].repeat(cfg.pop_size, axis=0), axis=-1
+    ).astype(jnp.int32)
+    if cfg.bias_init_to_tiers:
+        # Warm-start anchors (standard metaheuristic practice; ≤ S+1 of the
+        # swarm): the all-home placement (the paper's loose-deadline
+        # limiting solution) and the S single-server placements. The
+        # remaining ~P−S−1 particles stay random — diversity is preserved
+        # and every anchor can be displaced by a fitter random particle.
+        n_anchor = min(s + 1, cfg.pop_size - 1)
+        X = X.at[0].set(jnp.asarray(home))
+        for k in range(n_anchor - 1):
+            X = X.at[1 + k].set(jnp.full((p,), k, jnp.int32))
+    return _clamp_pins(X, jnp.asarray(prob.pinned))
+
+
+def _make_step(prob: SimProblem, cfg: PSOGAConfig):
+    sim = build_simulator(prob, faithful=cfg.faithful_sim)
+    fit = jax.vmap(lambda x: fitness_key(sim(x)))
+    pinned = jnp.asarray(prob.pinned)
+    p, s = prob.num_layers, prob.num_servers
+    P = cfg.pop_size
+
+    def step(state: _SwarmState) -> _SwarmState:
+        key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
+            state.key, 8)
+        t = state.it.astype(jnp.float32) / cfg.max_iters
+        c1 = cfg.c1_start + (cfg.c1_end - cfg.c1_start) * t
+        c2 = cfg.c2_start + (cfg.c2_end - cfg.c2_start) * t
+
+        # --- adaptive inertia (Eq. 22-23): per-particle w from divergence
+        d = jnp.mean((state.X != state.gbest_x[None, :]).astype(jnp.float32),
+                     axis=1)                                   # (P,)
+        w = cfg.w_max - (cfg.w_max - cfg.w_min) * jnp.exp(d / (d - 1.01))
+
+        # --- inertia: mutation Mu with prob w (Eq. 20)
+        do_mu = jax.random.uniform(kmu, (P,)) < w
+        pos = jax.random.randint(kmu_pos, (P,), 0, p)
+        val = jax.random.randint(kmu_val, (P,), 0, s, dtype=jnp.int32)
+        A = jnp.where(
+            (jnp.arange(p)[None, :] == pos[:, None]) & do_mu[:, None],
+            val[:, None], state.X)
+
+        # --- individual cognition: crossover with pBest (Eq. 18)
+        do_c1 = jax.random.uniform(kc1, (P,)) < c1
+        seg1 = jax.random.randint(kx1, (P, 2), 0, p)
+        lo1 = jnp.min(seg1, axis=1)[:, None]
+        hi1 = jnp.max(seg1, axis=1)[:, None]
+        in_seg1 = (jnp.arange(p)[None, :] >= lo1) & (jnp.arange(p)[None, :] <= hi1)
+        B = jnp.where(in_seg1 & do_c1[:, None], state.pbest_x, A)
+
+        # --- social cognition: crossover with gBest (Eq. 19)
+        do_c2 = jax.random.uniform(kc2, (P,)) < c2
+        seg2 = jax.random.randint(kx2, (P, 2), 0, p)
+        lo2 = jnp.min(seg2, axis=1)[:, None]
+        hi2 = jnp.max(seg2, axis=1)[:, None]
+        in_seg2 = (jnp.arange(p)[None, :] >= lo2) & (jnp.arange(p)[None, :] <= hi2)
+        C = jnp.where(in_seg2 & do_c2[:, None], state.gbest_x[None, :], B)
+
+        X = _clamp_pins(C, pinned)
+        f = fit(X)
+
+        improved = f < state.pbest_f
+        pbest_x = jnp.where(improved[:, None], X, state.pbest_x)
+        pbest_f = jnp.where(improved, f, state.pbest_f)
+        i_best = jnp.argmin(pbest_f)
+        cand_f = pbest_f[i_best]
+        better = cand_f < state.gbest_f
+        gbest_x = jnp.where(better, pbest_x[i_best], state.gbest_x)
+        gbest_f = jnp.where(better, cand_f, state.gbest_f)
+        stall = jnp.where(better, 0, state.stall + 1)
+        return _SwarmState(key=key, X=X, pbest_x=pbest_x, pbest_f=pbest_f,
+                           gbest_x=gbest_x, gbest_f=gbest_f,
+                           it=state.it + 1, stall=stall)
+
+    return step, fit
+
+
+def run_pso_ga(dag: LayerDAG, env: Environment,
+               cfg: PSOGAConfig = PSOGAConfig(),
+               seed: int = 0,
+               record_history: bool = False) -> PSOGAResult:
+    """Run PSO-GA to convergence. Returns the best assignment found."""
+    prob = SimProblem.build(dag, env)
+    step, fit = _make_step(prob, cfg)
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    X0 = init_swarm(k_init, prob, cfg)
+    f0 = fit(X0)
+    i0 = jnp.argmin(f0)
+    state = _SwarmState(key=key, X=X0, pbest_x=X0, pbest_f=f0,
+                        gbest_x=X0[i0], gbest_f=f0[i0],
+                        it=jnp.asarray(0), stall=jnp.asarray(0))
+
+    if record_history:
+        def body(state, _):
+            state = step(state)
+            return state, state.gbest_f
+        state, hist = jax.lax.scan(
+            jax.jit(body), state, None, length=cfg.max_iters)
+        history = np.asarray(hist)
+        iters = cfg.max_iters
+    else:
+        def cond(s: _SwarmState):
+            return (s.it < cfg.max_iters) & (s.stall < cfg.stall_iters)
+        state = jax.lax.while_loop(cond, step, state)
+        history = None
+        iters = int(state.it)
+
+    sim = build_simulator(prob, faithful=cfg.faithful_sim)
+    res = sim(state.gbest_x)
+    feasible = bool(res.feasible)
+    return PSOGAResult(
+        best_x=np.asarray(state.gbest_x),
+        best_fitness=float(state.gbest_f),
+        best_cost=float(res.total_cost) if feasible else float("inf"),
+        feasible=feasible,
+        iterations=iters,
+        history=history)

@@ -1,0 +1,259 @@
+"""Schedule simulator — paper Algorithm 2 ("map from a particle to DNN
+layers offloading").
+
+Given an assignment vector ``x`` (server index per layer) the simulator
+replays the offloading: layers execute in a fixed topological order (the
+paper freezes the order genes φ at initialization — §IV-B.3 "the value of
+the order φ_j for each layer remains the same"), each server is a serial
+queue, incoming datasets pay ``∂ / ℓ`` transfer time, and the server stays
+busy for its outgoing transfers (Alg. 2 line 21).
+
+Two fidelity modes (see DESIGN.md §2):
+  * ``faithful=True``  — the printed recurrence, verbatim:
+        T_start = T_lease(s) + maxTrans            (lines 4/11)
+        T_lease(s) += exe + transfer_out           (line 21)
+    (the incoming wait is *not* added to the server busy time, exactly as
+    printed in the paper).
+  * ``faithful=False`` — "corrected": serial processing is preserved and
+    a layer cannot start before its parents finished and shipped:
+        T_start = max(T_lease(s), max_p(T_end(p) + trans_p))
+        T_lease(s) = T_end + transfer_out
+
+Cost model (Eq. 8): per-server rental  c_com · (T_off − T_on)  with
+T_on = first T_start on the server, T_off = final lease (includes trailing
+outgoing transfers), plus per-edge transmission  c_tran · ∂  for every
+edge crossing two distinct servers.
+
+Missing links (ℓ = 0, e.g. device↔device) are clamped to ``MIN_BW`` MB/s
+so infeasible placements get enormous-but-finite times — this keeps the
+paper's Case-2 fitness (compare total completion times of two infeasible
+particles) a meaningful total order instead of inf == inf.
+
+Both a pure-numpy reference (`simulate_np`) and a jit/vmap-able JAX
+implementation (`build_simulator`) are provided; tests assert they agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dag import LayerDAG, topological_order
+from .environment import Environment
+
+MIN_BW = 1e-9   # MB/s stand-in for "no link"
+__all__ = ["SimResult", "SimProblem", "simulate_np", "build_simulator",
+           "MIN_BW"]
+
+
+class SimResult(NamedTuple):
+    """All fields are jnp/np arrays; scalar fields are 0-d."""
+    end_times: jnp.ndarray        # (p,) per-layer completion time
+    app_completion: jnp.ndarray   # (n_apps,) T_i^comp
+    comp_cost: jnp.ndarray        # $ rental
+    trans_cost: jnp.ndarray       # $ transmission
+    total_cost: jnp.ndarray       # Eq. 8
+    feasible: jnp.ndarray         # bool: all deadlines met AND pins honored
+    makespan: jnp.ndarray         # max end time
+
+
+@dataclasses.dataclass(frozen=True)
+class SimProblem:
+    """Static, device-ready arrays describing (dag, env) for the simulator."""
+    compute: np.ndarray       # (p,)
+    order: np.ndarray         # (p,) topological order
+    parent_idx: np.ndarray    # (p, max_in) padded -1
+    parent_mb: np.ndarray     # (p, max_in)
+    child_idx: np.ndarray     # (p, max_out) padded -1
+    child_mb: np.ndarray      # (p, max_out)
+    app_id: np.ndarray        # (p,)
+    deadline: np.ndarray      # (n_apps,)
+    pinned: np.ndarray        # (p,)
+    power: np.ndarray         # (S,)
+    cost_per_sec: np.ndarray  # (S,)
+    inv_bw: np.ndarray        # (S, S) seconds per MB (0 on diagonal)
+    tran_cost: np.ndarray     # (S, S) $/MB (0 on diagonal)
+    link_ok: np.ndarray       # (S, S) bool
+
+    @property
+    def num_layers(self) -> int:
+        return int(self.compute.shape[0])
+
+    @property
+    def num_servers(self) -> int:
+        return int(self.power.shape[0])
+
+    @property
+    def num_apps(self) -> int:
+        return int(self.deadline.shape[0])
+
+    @staticmethod
+    def build(dag: LayerDAG, env: Environment) -> "SimProblem":
+        pi, pm, ci, cm = dag.padded_relatives()
+        bw = np.where(env.bandwidth <= 0.0, MIN_BW, env.bandwidth)
+        inv_bw = 1.0 / bw                     # diagonal is 1/inf = 0
+        return SimProblem(
+            compute=dag.compute, order=topological_order(dag),
+            parent_idx=pi, parent_mb=pm, child_idx=ci, child_mb=cm,
+            app_id=dag.app_id, deadline=dag.deadline, pinned=dag.pinned,
+            power=env.power, cost_per_sec=env.cost_per_sec,
+            inv_bw=inv_bw, tran_cost=env.tran_cost,
+            link_ok=env.bandwidth > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+def simulate_np(prob: SimProblem, x: np.ndarray, faithful: bool = True
+                ) -> SimResult:
+    x = np.asarray(x, np.int64)
+    p, s = prob.num_layers, prob.num_servers
+    lease = np.zeros(s)
+    t_on = np.full(s, np.inf)
+    used = np.zeros(s, bool)
+    end = np.zeros(p)
+    trans_cost = 0.0
+    link_violation = False
+
+    for j in prob.order:
+        srv = x[j]
+        exe = prob.compute[j] / prob.power[srv]
+        pars = prob.parent_idx[j]
+        mask = pars >= 0
+        max_trans = 0.0
+        parent_gate = 0.0
+        for k in np.nonzero(mask)[0]:
+            pj = pars[k]
+            mb = prob.parent_mb[j, k]
+            t = mb * prob.inv_bw[x[pj], srv]
+            if not prob.link_ok[x[pj], srv] and x[pj] != srv:
+                link_violation = True
+            max_trans = max(max_trans, t)
+            parent_gate = max(parent_gate, end[pj] + t)
+            trans_cost += prob.tran_cost[x[pj], srv] * mb
+        if faithful:
+            start = lease[srv] + max_trans
+        else:
+            start = max(lease[srv], parent_gate)
+        t_end = start + exe
+        end[j] = t_end
+        t_on[srv] = min(t_on[srv], start)
+        used[srv] = True
+        transfer_out = 0.0
+        cidx = prob.child_idx[j]
+        for k in np.nonzero(cidx >= 0)[0]:
+            transfer_out += prob.child_mb[j, k] * prob.inv_bw[srv, x[cidx[k]]]
+        if faithful:
+            lease[srv] = lease[srv] + exe + transfer_out   # line 21, verbatim
+        else:
+            lease[srv] = t_end + transfer_out
+
+    app_completion = np.zeros(prob.num_apps)
+    np.maximum.at(app_completion, prob.app_id, end)
+    comp_cost = float(np.sum(np.where(used, prob.cost_per_sec * (lease - np.where(np.isinf(t_on), 0.0, t_on)), 0.0)))
+    pin_ok = np.all((prob.pinned < 0) | (x == prob.pinned))
+    feasible = bool(np.all(app_completion <= prob.deadline) and pin_ok
+                    and not link_violation)
+    total = comp_cost + trans_cost
+    return SimResult(end_times=end, app_completion=app_completion,
+                     comp_cost=np.float64(comp_cost),
+                     trans_cost=np.float64(trans_cost),
+                     total_cost=np.float64(total),
+                     feasible=np.bool_(feasible),
+                     makespan=np.float64(end.max() if p else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# JAX implementation — lax.scan over layers, vmap over particles
+# ---------------------------------------------------------------------------
+
+def build_simulator(prob: SimProblem, faithful: bool = True):
+    """Returns a jit-able ``sim(x) -> SimResult`` closed over static arrays.
+
+    ``x``: (p,) int32 server assignment. vmap over a swarm:
+    ``jax.vmap(sim)(X)`` with X (P, p).
+    """
+    compute = jnp.asarray(prob.compute)
+    order = jnp.asarray(prob.order)
+    parent_idx = jnp.asarray(prob.parent_idx)
+    parent_mb = jnp.asarray(prob.parent_mb)
+    child_idx = jnp.asarray(prob.child_idx)
+    child_mb = jnp.asarray(prob.child_mb)
+    app_id = jnp.asarray(prob.app_id)
+    deadline = jnp.asarray(prob.deadline)
+    pinned = jnp.asarray(prob.pinned)
+    power = jnp.asarray(prob.power)
+    cost_per_sec = jnp.asarray(prob.cost_per_sec)
+    inv_bw = jnp.asarray(prob.inv_bw)
+    tran_cost = jnp.asarray(prob.tran_cost)
+    link_ok = jnp.asarray(prob.link_ok)
+    n_apps = prob.num_apps
+    p = prob.num_layers
+    s = prob.num_servers
+
+    def sim(x: jnp.ndarray) -> SimResult:
+        x = jnp.asarray(x).astype(jnp.int32)
+
+        def step(carry, j):
+            lease, t_on, used, end, trans_cost, link_bad = carry
+            srv = x[j]
+            exe = compute[j] / power[srv]
+            pars = parent_idx[j]                  # (max_in,)
+            pmask = pars >= 0
+            psafe = jnp.where(pmask, pars, 0)
+            psrv = x[psafe]
+            mb = parent_mb[j]
+            tt = mb * inv_bw[psrv, srv]           # (max_in,)
+            max_trans = jnp.max(jnp.where(pmask, tt, 0.0), initial=0.0)
+            parent_gate = jnp.max(jnp.where(pmask, end[psafe] + tt, 0.0),
+                                  initial=0.0)
+            trans_cost = trans_cost + jnp.sum(
+                jnp.where(pmask, tran_cost[psrv, srv] * mb, 0.0))
+            link_bad = link_bad | jnp.any(
+                pmask & ~link_ok[psrv, srv] & (psrv != srv))
+            if faithful:
+                start = lease[srv] + max_trans
+            else:
+                start = jnp.maximum(lease[srv], parent_gate)
+            t_end = start + exe
+            end = end.at[j].set(t_end)
+            t_on = t_on.at[srv].min(start)
+            used = used.at[srv].set(True)
+            kids = child_idx[j]
+            kmask = kids >= 0
+            ksafe = jnp.where(kmask, kids, 0)
+            out_t = jnp.sum(jnp.where(kmask,
+                                      child_mb[j] * inv_bw[srv, x[ksafe]],
+                                      0.0))
+            link_bad = link_bad | jnp.any(
+                kmask & ~link_ok[srv, x[ksafe]] & (x[ksafe] != srv))
+            if faithful:
+                new_lease = lease[srv] + exe + out_t
+            else:
+                new_lease = t_end + out_t
+            lease = lease.at[srv].set(new_lease)
+            return (lease, t_on, used, end, trans_cost, link_bad), None
+
+        init = (jnp.zeros(s), jnp.full(s, jnp.inf), jnp.zeros(s, bool),
+                jnp.zeros(p), jnp.asarray(0.0), jnp.asarray(False))
+        (lease, t_on, used, end, trans_cost, link_bad), _ = jax.lax.scan(
+            step, init, order)
+
+        app_completion = jax.ops.segment_max(end, app_id, num_segments=n_apps)
+        t_on_safe = jnp.where(jnp.isinf(t_on), 0.0, t_on)
+        comp_cost = jnp.sum(jnp.where(used,
+                                      cost_per_sec * (lease - t_on_safe), 0.0))
+        pin_ok = jnp.all((pinned < 0) | (x == pinned))
+        feasible = (jnp.all(app_completion <= deadline) & pin_ok & ~link_bad)
+        total = comp_cost + trans_cost
+        return SimResult(end_times=end, app_completion=app_completion,
+                         comp_cost=comp_cost, trans_cost=trans_cost,
+                         total_cost=total, feasible=feasible,
+                         makespan=jnp.max(end, initial=0.0))
+
+    return sim

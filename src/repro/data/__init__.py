@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, SyntheticStream, byte_tokenize,
+                       host_slice, make_stream)
+
+__all__ = ["DataConfig", "SyntheticStream", "byte_tokenize", "host_slice",
+           "make_stream"]

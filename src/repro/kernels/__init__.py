@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the runtime's compute hot-spots.
+
+The paper itself has no kernel-level contribution (it is a scheduling
+paper); these kernels are the hot inner loops of the serving/training
+substrate its placements execute on (DESIGN.md §3):
+
+  * flash_attention — causal / sliding-window prefill attention
+  * ssd_scan        — Mamba2 intra-chunk SSD quadratic form
+  * decode_attention — flash-decode against long KV caches
+
+Each has ``ops.py`` (jit'd layout wrapper) and ``ref.py`` (pure-jnp
+oracle); tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for single-token decode attention (flash-decode).
+
+Decode is memory-bound: the whole KV cache (B, C, K, hd) streams through
+VMEM once while the query is a single token. The kernel tiles the cache
+length C and carries the flash running-softmax state across tiles, so
+arbitrarily long caches (the 500k-context cells) never materialize a
+(1 x C) score row in HBM and the HBM traffic is exactly one read of K and
+V — the roofline floor for decode.
+
+Grid = (B*K kv-head rows, cache tiles); the cache-tile axis is innermost
+(sequential on TPU) and accumulates in fp32 VMEM scratch. All G grouped
+query heads of a kv head ride in the same tile — (G, hd) x (hd, c_blk)
+keeps the MXU lanes busier than one-head-at-a-time.
+
+``valid_len`` masks dead cache slots (slots >= pos+1, or ring-cache slots
+not yet written); it arrives as a (1,1) int32 tile.
+
+Validated in interpret mode against ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+__all__ = ["decode_attention_folded"]
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, c_blk: int, n_c: int, cache: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = valid_ref[0, 0]
+    k0 = j * c_blk
+
+    @pl.when(k0 < valid)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale            # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (c_blk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(j == n_c - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_folded(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            valid_len: jnp.ndarray, *,
+                            c_blk: int = 1024, interpret: bool = True
+                            ) -> jnp.ndarray:
+    """q: (BK, G, hd); k/v: (BK, C, hd); valid_len: (1,1) int32
+    -> (BK, G, hd)."""
+    bk, g, hd = q.shape
+    c = k.shape[1]
+    c_blk = min(c_blk, max(8, c))
+    pad = (-c) % c_blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    n_c = (c + pad) // c_blk
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5,
+                               c_blk=c_blk, n_c=n_c, cache=c)
+    return pl.pallas_call(
+        kernel,
+        grid=(bk, n_c),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, g, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, c_blk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, c_blk, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bk, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid_len, q, k, v)

@@ -1,0 +1,67 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op reshapes model-layout tensors into the kernel's folded layout,
+dispatches, and restores the layout. ``interpret`` auto-selects: compiled
+on TPU, interpret elsewhere (this container is CPU-only; TPU is the
+TARGET — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_folded
+from .flash_attention import flash_attention_folded
+from .ssd_scan import ssd_intra_folded
+
+__all__ = ["flash_attention", "ssd_intra", "decode_attention",
+           "interpret_default"]
+
+
+def interpret_default() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B,S,K,G,hd); k/v: (B,S,K,hd) -> (B,S,K,G,hd)."""
+    b, s, kh, g, hd = q.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * kh, g, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, s, hd)
+    of = flash_attention_folded(qf, kf, vf, causal=causal, window=window,
+                                interpret=interpret_default())
+    return of.reshape(b, kh, g, s, hd).transpose(0, 3, 1, 2, 4)
+
+
+@jax.jit
+def ssd_intra(xc: jnp.ndarray, cum: jnp.ndarray, Bc: jnp.ndarray,
+              Cc: jnp.ndarray) -> jnp.ndarray:
+    """xc: (b,c,q,h,p); cum: (b,c,q,h); Bc/Cc: (b,c,q,n) -> (b,c,q,h,p)."""
+    b, c, q, h, p = xc.shape
+    n = Bc.shape[-1]
+    out = ssd_intra_folded(
+        xc.reshape(b * c, q, h, p).astype(jnp.float32),
+        cum.reshape(b * c, q, h).astype(jnp.float32),
+        Bc.reshape(b * c, q, n).astype(jnp.float32),
+        Cc.reshape(b * c, q, n).astype(jnp.float32),
+        interpret=interpret_default())
+    return out.reshape(b, c, q, h, p)
+
+
+@jax.jit
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid_len: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,K,G,hd); k/v: (B,C,K,hd); valid_len: () int32 -> (B,K,G,hd)."""
+    b, kh, g, hd = q.shape
+    c = k.shape[1]
+    qf = q.reshape(b * kh, g, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, c, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, c, hd)
+    vl = jnp.asarray(valid_len, jnp.int32).reshape(1, 1)
+    of = decode_attention_folded(qf, kf, vf, vl,
+                                 interpret=interpret_default())
+    return of.reshape(b, kh, g, hd)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract the kernels are
+property-tested against — tests/test_kernels.py sweeps shapes & dtypes).
+
+These are *definitions*, not fast paths: O(S^2) score materialization is
+fine here.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+__all__ = ["flash_attention_ref", "ssd_intra_ref", "decode_attention_ref",
+           "NEG_INF"]
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B,S,K,G,hd); k/v: (B,S,K,hd) -> out (B,S,K,G,hd) (fp32 math)."""
+    b, s, kh, g, hd = q.shape
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgd,bckd->bkgqc", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", w, v.astype(jnp.float32))
+    return out
+
+
+def ssd_intra_ref(xc: jnp.ndarray, cum: jnp.ndarray, Bc: jnp.ndarray,
+                  Cc: jnp.ndarray) -> jnp.ndarray:
+    """Intra-chunk SSD quadratic form.
+
+    xc: (b,c,q,h,p) fp32; cum: (b,c,q,h) inclusive cumsum of log-decay;
+    Bc/Cc: (b,c,q,n). Returns (b,c,q,h,p):
+        out[i] = sum_{j<=i} (C_i . B_j) * exp(cum_i - cum_j) * xc[j]
+    """
+    q = xc.shape[2]
+    li = cum[:, :, :, None, :]
+    lj = cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    return jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xc)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid_len: jnp.ndarray) -> jnp.ndarray:
+    """One-token decode. q: (B,K,G,hd); k/v: (B,C,K,hd);
+    valid_len: () int32 — slots [0, valid_len) are live. -> (B,K,G,hd)."""
+    b, c, kh, hd = k.shape
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgd,bckd->bkgc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    ok = jnp.arange(c)[None, None, None, :] < valid_len
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgc,bckd->bkgd", w, v.astype(jnp.float32))

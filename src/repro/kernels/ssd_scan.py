@@ -1,0 +1,73 @@
+"""Pallas TPU kernel for the intra-chunk SSD quadratic form (Mamba2).
+
+One grid cell = one (sequence-chunk, SSM-head) pair. The chunk length Q
+(cfg.ssm_chunk, default 256) and state width N (<=128) are sized so the
+whole working set lives in VMEM:
+
+    scores (Q,Q) fp32          256 KB
+    decay  (Q,Q) fp32          256 KB
+    B/C    (Q,N) fp32        2x128 KB
+    x/out  (Q,P) fp32        2x 64 KB        (P = ssm_head_dim, 64)
+
+and both contractions hit the MXU: (Q,N)x(N,Q) then (Q,Q)x(Q,P).
+The cross-chunk recurrence (a short scan over C chunks carrying the
+(H,P,N) state) stays in XLA — it is O(C) tiny steps and fuses fine; the
+quadratic intra-chunk term is where the FLOPs are.
+
+Numerics: `cum` is the inclusive cumsum of log-decay (<= 0, monotone
+non-increasing within a chunk), so exp(cum_i - cum_j) for j <= i is in
+(0, 1] — no overflow; masked entries are exact zeros.
+
+Validated in interpret mode against ``ref.ssd_intra_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_intra_folded"]
+
+
+def _ssd_kernel(x_ref, cum_ref, b_ref, c_ref, o_ref, *, q: int):
+    xc = x_ref[0, :, 0, :]                       # (Q, P) fp32
+    cum = cum_ref[0, :, 0]                       # (Q,)
+    B = b_ref[0]                                 # (Q, N)
+    C = c_ref[0]                                 # (Q, N)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    li = cum[:, None]
+    lj = cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(jj <= ii, jnp.exp(li - lj), 0.0)
+    w = scores * L                               # (Q, Q)
+    out = jax.lax.dot_general(w, xc, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = out
+
+
+def ssd_intra_folded(xc: jnp.ndarray, cum: jnp.ndarray, Bc: jnp.ndarray,
+                     Cc: jnp.ndarray, *, interpret: bool = True
+                     ) -> jnp.ndarray:
+    """xc: (BC, Q, H, P) fp32; cum: (BC, Q, H); Bc/Cc: (BC, Q, N)
+    -> (BC, Q, H, P). BC = batch x chunks (folded by ops.py)."""
+    bc, q, h, p = xc.shape
+    n = Bc.shape[-1]
+    grid = (bc, h)
+    kernel = functools.partial(_ssd_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, hh: (b, 0, hh)),
+            pl.BlockSpec((1, q, n), lambda b, hh: (b, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda b, hh: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, p), lambda b, hh: (b, 0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, q, h, p), jnp.float32),
+        interpret=interpret,
+    )(xc, cum, Bc, Cc)

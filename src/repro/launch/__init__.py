@@ -1,0 +1,4 @@
+"""Launcher: production mesh, step builders, dry-run, trainer, server."""
+from .mesh import data_axes_of, make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "data_axes_of"]

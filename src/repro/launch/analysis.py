@@ -1,0 +1,185 @@
+"""Roofline analysis from compiled artifacts (DESIGN.md §7).
+
+This container is CPU-only; TPU v5e is the TARGET. The three roofline
+terms are derived per (arch x shape x mesh) cell from the dry-run's
+compiled module:
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS          [s]
+    memory     = HLO_bytes_per_chip / HBM_BW              [s]
+    collective = collective_bytes_per_chip / ICI_BW       [s]
+
+``compiled.cost_analysis()`` gives per-chip FLOPs / bytes (the SPMD
+partitioned program is per-device). Collective bytes are NOT in
+cost_analysis — ``collective_bytes`` parses the partitioned HLO text and
+sums, for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, the bytes that cross links *per device*:
+
+    all-gather      (group-1)/group x result bytes   (receives all shards)
+    all-reduce      2 x (group-1)/group x bytes      (ring RS + AG)
+    reduce-scatter  (group-1)/group x input bytes
+    all-to-all      (group-1)/group x bytes
+    collective-permute  result bytes
+
+Group sizes parse from both replica_groups formats ({{0,1},...} and the
+iota [G,S]<=[N] form). On the multi-pod mesh, groups that span pods are
+priced at DCN bandwidth (the "pod" axis rides data-center network, not
+ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes", "CollectiveStats", "roofline_terms",
+           "parse_hlo_collectives"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e (per chip)."""
+    peak_flops: float = 197e12        # bf16
+    hbm_bw: float = 819e9             # B/s
+    ici_bw: float = 50e9              # B/s per link
+    dcn_bw: float = 25e9              # B/s inter-pod
+    hbm_bytes: float = 16e9
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every shape token in a result (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]
+    total_ici: float                  # per-device bytes over ICI
+    total_dcn: float                  # per-device bytes over DCN
+    count: int
+
+    @property
+    def total(self) -> float:
+        return self.total_ici + self.total_dcn
+
+
+def parse_hlo_collectives(hlo: str) -> List[Tuple[str, int, int, str]]:
+    """Returns [(op, result_bytes, group_size, line)] for each collective."""
+    out = []
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        res_bytes = _shape_bytes(m.group(1))
+        op = m.group(2)
+        group = 1
+        gi = _GROUPS_ITOTA_RE.search(line)
+        if gi:
+            group = int(gi.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                group = len([x for x in gl.group(1).split(",") if x.strip()])
+        out.append((op, res_bytes, group, line))
+    return out
+
+
+def collective_bytes(hlo: str, pod_size: int = 0) -> CollectiveStats:
+    """Per-device link bytes. ``pod_size``: devices per pod (0 = single
+    pod); a group crossing a pod boundary is priced as DCN."""
+    per_op: Dict[str, float] = {}
+    ici = dcn = 0.0
+    ops = parse_hlo_collectives(hlo)
+    for op, res_bytes, group, line in ops:
+        g = max(group, 1)
+        frac = (g - 1) / g
+        if op == "all-gather":
+            b = frac * res_bytes
+        elif op == "all-reduce":
+            b = 2.0 * frac * res_bytes
+        elif op == "reduce-scatter":
+            b = frac * res_bytes * g          # input volume per device
+        elif op == "all-to-all":
+            b = frac * res_bytes
+        else:                                  # collective-permute
+            b = float(res_bytes)
+        per_op[op] = per_op.get(op, 0.0) + b
+        crosses_pod = bool(pod_size) and _group_crosses_pod(line, g,
+                                                            pod_size)
+        if crosses_pod:
+            dcn += b
+        else:
+            ici += b
+    return CollectiveStats(per_op=per_op, total_ici=ici, total_dcn=dcn,
+                           count=len(ops))
+
+
+def _group_crosses_pod(line: str, group: int, pod_size: int) -> bool:
+    """Heuristic pod-crossing test.
+
+    Explicit lists: check ids of the first group straddle a pod boundary.
+    Iota form [G,S]<=[dims]T(perm): a group crosses pods iff the iota
+    device order interleaves pods within a group — detectable from the
+    fastest-varying transposed dims; we conservatively flag any group
+    whose SPAN (max-min of the first explicit group) >= pod_size, and for
+    iota forms flag when group*stride patterns must include both pods
+    (group size > pod_size, or the leading reshape dim participates).
+    """
+    gl = _GROUPS_LIST_RE.search(line)
+    if gl:
+        ids = [int(x) for x in gl.group(1).split(",") if x.strip()]
+        if not ids:
+            return False
+        return (max(ids) // pod_size) != (min(ids) // pod_size)
+    gi = _GROUPS_ITOTA_RE.search(line)
+    if gi:
+        n_total = 1
+        for d in gi.group(3).split(","):
+            n_total *= int(d)
+        if n_total <= pod_size:
+            return False
+        if group > pod_size:
+            return True
+        # iota groups of size S are consecutive in the (possibly
+        # transposed) device order; with a transpose the stride across the
+        # leading (pod) dim lands inside groups. Conservative: transposed
+        # iota on a >1-pod fleet crosses pods unless the group fits the
+        # innermost contiguous run.
+        return "T(" in line
+    return False
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   coll: CollectiveStats, hw: HW = HW()) -> Dict[str, float]:
+    compute = flops_per_chip / hw.peak_flops
+    memory = hbm_bytes_per_chip / hw.hbm_bw
+    collective = coll.total_ici / hw.ici_bw + coll.total_dcn / hw.dcn_bw
+    dominant = max((("compute", compute), ("memory", memory),
+                    ("collective", collective)), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant}

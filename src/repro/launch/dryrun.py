@@ -1,0 +1,231 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+partitions and compiles for the production fleet, and extract the
+roofline inputs from the compiled artifact.
+
+MUST be imported/run fresh: the first two lines pin 512 placeholder host
+devices BEFORE jax initializes (jax locks the device count on first
+backend touch). Tests shrink the fleet via REPRO_DRYRUN_DEVICES (also
+honored before any jax import).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir results/
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+if os.environ.get("REPRO_DRYRUN_DEVICES"):          # test hook (pre-init)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs import SHAPES, get, names
+from ..models import model_flops, param_count, skip_reason, supports_shape
+from .analysis import HW, collective_bytes, roofline_terms
+from .mesh import data_axes_of, make_production_mesh, make_test_mesh
+from .steps import make_decode_objects, make_prefill_objects, \
+    make_train_objects
+
+__all__ = ["run_cell", "main"]
+
+
+def _mem_dict(ma) -> Dict[str, float]:
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "code_bytes": float(ma.generated_code_size_in_bytes),
+        "peak_bytes": float(ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes
+                            - ma.alias_size_in_bytes),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             moe_impl: str = "scatter", accum: int = 1,
+             test_mesh: bool = False, extra: Optional[Dict] = None
+             ) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the §Dry-run/§Roofline record."""
+    cfg = get(arch)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    if extra:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **{k: v for k, v in extra.items()
+                                  if hasattr(cfg, k)})
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "moe_impl": moe_impl, "accum": accum,
+    }
+    if not supports_shape(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = skip_reason(cfg, shape)
+        return rec
+
+    mesh = (make_test_mesh(multi_pod=multi_pod) if test_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    daxes = data_axes_of(mesh)
+    n_chips = mesh.size
+    rec["mesh"] = dict(zip(mesh.axis_names,
+                           [int(mesh.shape[a]) for a in mesh.axis_names]))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        _, step, in_sh, out_sh, shapes = make_train_objects(
+            cfg, shape, mesh, daxes, moe_impl=moe_impl, accum=accum)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        _, step, in_sh, out_sh, shapes = make_prefill_objects(
+            cfg, shape, mesh, daxes, moe_impl=moe_impl)
+        donate = ()
+    else:
+        _, step, in_sh, out_sh, shapes = make_decode_objects(
+            cfg, shape, mesh, daxes, moe_impl=moe_impl)
+        donate = (1,)
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    pod_size = 0
+    if multi_pod:
+        pod_size = n_chips // int(mesh.shape["pod"])
+    coll = collective_bytes(hlo, pod_size=pod_size)
+
+    from .analysis import parse_hlo_collectives
+    ops = parse_hlo_collectives(hlo)
+    top = sorted(((o, b, g) for o, b, g, _ in ops),
+                 key=lambda t: -t[1])[:10]
+    flops_chip = float(ca.get("flops", 0.0))
+    bytes_chip = float(ca.get("bytes accessed", 0.0))
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(ma),
+        "flops_per_chip": flops_chip,
+        "hbm_bytes_per_chip": bytes_chip,
+        "collective": {
+            "per_op": coll.per_op, "ici_bytes": coll.total_ici,
+            "dcn_bytes": coll.total_dcn, "count": coll.count,
+            "top": [{"op": o, "result_bytes": b, "group": g}
+                    for o, b, g in top],
+        },
+        "hlo_bytes": len(hlo),
+    })
+    rec["roofline"] = roofline_terms(flops_chip, bytes_chip, coll)
+    mf = model_flops(cfg, shape)
+    rec["model_flops_total"] = mf
+    rec["model_flops_per_chip"] = mf / n_chips
+    rec["useful_compute_ratio"] = (mf / n_chips / flops_chip
+                                   if flops_chip else 0.0)
+    rec["params_total"] = param_count(cfg)
+    rec["params_active"] = param_count(cfg, active_only=True)
+    hw = HW()
+    fits = rec["memory"]["peak_bytes"] <= hw.hbm_bytes
+    rec["fits_hbm"] = bool(fits)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default="scatter",
+                    choices=["scatter", "a2a"])
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--test-mesh", action="store_true",
+                    help="scaled-down mesh (CI)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--extra", default=None,
+                    help="JSON dict of ModelConfig overrides (perf ablations)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="resume an interrupted matrix run")
+    ap.add_argument("--tag", default="",
+                    help="suffix for out-dir filenames (e.g. 'roofline')")
+    args = ap.parse_args()
+    extra = json.loads(args.extra) if args.extra else None
+
+    cells = []
+    if args.all:
+        for a in names():
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        # accumulation applies to train cells only (memory-fit policy)
+        accum = args.accum if shape.startswith("train") else 1
+        tag = f"{arch}_{shape}_{'mp' if args.multi_pod else 'sp'}" \
+            + (f"_{args.tag}" if args.tag else "")
+        if args.out_dir and args.skip_existing:
+            path = os.path.join(args.out_dir, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] {arch} x {shape}: exists, skipped",
+                      flush=True)
+                continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           moe_impl=args.moe_impl, accum=accum,
+                           test_mesh=args.test_mesh, extra=extra)
+        except Exception as e:  # noqa: BLE001 — record, keep matrix going
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        jax.clear_caches()        # one process runs the whole matrix
+        status = rec["status"]
+        extra_txt = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra_txt = (f" compile={rec['compile_s']}s "
+                         f"dominant={r['dominant']} "
+                         f"fits_hbm={rec['fits_hbm']}")
+        elif status == "skipped":
+            extra_txt = f" ({rec['reason']})"
+        else:
+            extra_txt = f" {rec['error'][:120]}"
+        print(f"[dryrun] {arch} x {shape} "
+              f"{'pod2' if args.multi_pod else 'pod1'}: "
+              f"{status}{extra_txt}", flush=True)
+        if args.out_dir:
+            os.makedirs(args.out_dir, exist_ok=True)
+            with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results if len(results) > 1 else results[0], f,
+                      indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

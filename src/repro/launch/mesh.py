@@ -1,0 +1,49 @@
+"""Mesh construction. Functions only — importing this module never touches
+jax device state (jax locks the device count on first backend init, and
+the dry-run must set XLA_FLAGS before that happens)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "data_axes_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The target fleet: one v5e pod = 16x16 = 256 chips, axes
+    (data, model); multi-pod = 2 pods = 512 chips with a leading "pod"
+    axis (DCN-connected)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False,
+                   devices=None) -> jax.sharding.Mesh:
+    """Scaled-down mesh with the same axis structure for CI (8 host
+    devices: (2,2,2) or (4,2))."""
+    import numpy as np
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    if multi_pod:
+        model = 2
+        pod = 2
+        data = n // (pod * model)
+        shape: Tuple[int, ...] = (pod, data, model)
+        axes: Tuple[str, ...] = ("pod", "data", "model")
+    else:
+        model = 2 if n % 2 == 0 else 1
+        data = n // model
+        shape = (data, model)
+        axes = ("data", "model")
+    total = 1
+    for s in shape:
+        total *= s
+    arr = np.array(devices[:total]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def data_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Batch-sharding axes: ("pod","data") on a multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a != "model")

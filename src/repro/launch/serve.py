@@ -1,0 +1,152 @@
+"""Batched serving loop: prefill a request batch, decode greedily with a
+jitted sharded serve_step, track per-slot completion.
+
+Serving model: static slot batching — a batch of B requests is prefilled
+together (left-padded to a common length is unnecessary here: synthetic
+prompts share a length), then decoded in lock-step; finished slots (EOS)
+are masked but keep flowing until every slot finishes or max_new_tokens.
+All slots share the scalar cache position (the decode step writes every
+slot at the same slot index), which is what the assigned ``decode_*``
+cells lower. Per-slot positions / continuous batching are a documented
+non-goal (DESIGN.md §6).
+
+The placement engine picks WHERE this runs: ``--plan`` prints the PSO-GA
+offloading plan for the request shape against the TPU fleet and the
+tier each stage lands on (the paper's decision), then serves locally.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get
+from ..configs.base import ModelConfig, ShapeSpec
+from ..runtime import elastic_mesh
+from .mesh import data_axes_of
+from .steps import make_decode_objects, make_prefill_objects, named
+
+__all__ = ["Server", "main"]
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, batch: int, prompt_len: int,
+                 max_new: int, eos_id: int = 1,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 model_axis: int = 1):
+        self.cfg = cfg
+        self.eos = eos_id
+        self.max_new = max_new
+        self.mesh = mesh or elastic_mesh(model=model_axis)
+        daxes = data_axes_of(self.mesh)
+        cache_len = prompt_len + max_new
+        shape = ShapeSpec("serve", cache_len, batch, "decode")
+        pshape = ShapeSpec("serve_prefill", prompt_len, batch, "prefill")
+        self.model, prefill, in_sh_p, _, _ = make_prefill_objects(
+            cfg, pshape, self.mesh, daxes)
+        _, decode, in_sh_d, out_sh_d, _ = make_decode_objects(
+            cfg, shape, self.mesh, daxes)
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_len=cache_len),
+            in_shardings=in_sh_p)
+        self._decode = jax.jit(decode, in_shardings=in_sh_d,
+                               out_shardings=out_sh_d,
+                               donate_argnums=(1,))
+        self._param_sh = in_sh_p[0]
+        self._cache_sh = in_sh_d[1]
+        self.prompt_len = prompt_len
+        self.batch = batch
+
+    def init_params(self, seed: int = 0):
+        with self.mesh:
+            return jax.jit(self.model.init,
+                           out_shardings=self._param_sh)(
+                               jax.random.PRNGKey(seed))
+
+    def generate(self, params, batch: Dict[str, np.ndarray]
+                 ) -> Dict[str, Any]:
+        t0 = time.time()
+        logits, caches = self._prefill(params, batch)
+        caches = jax.tree.map(
+            lambda c, s: jax.device_put(c, s), caches, self._cache_sh)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        t_prefill = time.time() - t0
+
+        out_tokens = [np.asarray(tok)]
+        done = np.zeros((self.batch,), bool)
+        t0 = time.time()
+        n_gen = 1
+        for i in range(self.max_new - 1):
+            pos = jnp.asarray(self.prompt_len + i, jnp.int32)
+            logits, caches = self._decode(params, caches,
+                                          {"token": tok, "pos": pos})
+            tok = jnp.argmax(logits[:, -1], axis=-1
+                             ).astype(jnp.int32)[:, None]
+            t_np = np.asarray(tok)
+            out_tokens.append(t_np)
+            n_gen += 1
+            done |= (t_np[:, 0] == self.eos)
+            if done.all():
+                break
+        t_decode = time.time() - t0
+        toks = np.concatenate(out_tokens, axis=1)
+        return {
+            "tokens": toks,
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "tokens_generated": int(n_gen * self.batch),
+            "decode_tok_per_s": (n_gen * self.batch / t_decode
+                                 if t_decode > 0 else float("inf")),
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--plan", action="store_true",
+                    help="print the PSO-GA fleet placement first")
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.plan:
+        from ..core import plan_offload
+        plan = plan_offload(cfg, SHAPES[1], deadline_ratio=1.5)
+        print("[serve] PSO-GA fleet placement for prefill_32k:")
+        print(plan.summary())
+    if args.reduced:
+        cfg = cfg.reduced()
+    srv = Server(cfg, args.batch, args.prompt_len, args.max_new,
+                 model_axis=args.model_axis)
+    params = srv.init_params()
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(
+        2, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "encdec":
+        batch = {"audio_embeds": rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32),
+            "tokens": batch["tokens"][:, : args.prompt_len // 8]}
+    elif cfg.family == "vlm":
+        tv = min(cfg.vision_tokens, 8)
+        batch = {"vision": rng.standard_normal(
+            (args.batch, tv, cfg.d_model)).astype(np.float32),
+            "tokens": batch["tokens"][:, : args.prompt_len - tv]}
+    out = srv.generate(params, batch)
+    print(f"[serve] prefill {out['prefill_s']*1e3:.0f}ms  "
+          f"decode {out['tokens_generated']} tokens in "
+          f"{out['decode_s']*1e3:.0f}ms "
+          f"({out['decode_tok_per_s']:.1f} tok/s)")
+    print("[serve] first row:", out["tokens"][0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Step builders shared by the dry-run, the trainer and the server.
+
+Each builder returns (step_fn, in_shardings, out_shardings, arg_shapes)
+where arg_shapes are ShapeDtypeStructs — the dry-run lowers against them
+with zero allocation; the trainer/server materialize real arrays with the
+same shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import batch_pspecs, build_model, input_specs
+from ..models.model_zoo import cache_len_for
+from ..optim import (AdamWConfig, OptState, adamw_init, adamw_update,
+                     zero1_pspecs)
+
+__all__ = ["named", "make_train_objects", "make_prefill_objects",
+           "make_decode_objects"]
+
+
+def named(mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _merge_microbatch(tree, accum: int):
+    """(B, ...) -> (accum, B/accum, ...) for gradient accumulation."""
+    def split(x):
+        if x.ndim == 0:
+            return x
+        b = x.shape[0]
+        return x.reshape((accum, b // accum) + x.shape[1:])
+    return jax.tree.map(split, tree)
+
+
+def make_train_objects(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                       data_axes: Tuple[str, ...],
+                       acfg: AdamWConfig = AdamWConfig(),
+                       moe_impl: str = "scatter",
+                       accum: int = 1,
+                       zero1: bool = True):
+    """Full train step: fwd + bwd + AdamW update (+ optional microbatch
+    accumulation). State = (params, OptState)."""
+    model = build_model(cfg, mesh=mesh, data_axes=data_axes,
+                        moe_impl=moe_impl)
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shapes = jax.eval_shape(adamw_init, param_shapes)
+    pspecs = model.param_pspecs()
+    if zero1:
+        z = zero1_pspecs(pspecs, param_shapes, mesh, data_axes)
+    else:
+        z = pspecs
+    ospecs = OptState(mu=z, nu=jax.tree.map(lambda s: s, z), count=P())
+    bspecs = batch_pspecs(cfg, shape, data_axes)
+    batch_shapes = input_specs(cfg, shape)
+    mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    def train_step(params, opt, batch):
+        if accum == 1:
+            (loss, _), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = _merge_microbatch(batch, accum)
+
+            def acc_fn(carry, mb):
+                g_sum, l_sum = carry
+                (l, _), g = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_sum, g), l_sum + l), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc_fn, (zero_g, jnp.asarray(0.0, jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            loss = l_sum / accum
+        new_params, new_opt, om = adamw_update(grads, opt, params, acfg)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    in_sh = (named(mesh, pspecs), named(mesh, ospecs), named(mesh, bspecs))
+    out_sh = (named(mesh, pspecs), named(mesh, ospecs), named(mesh, mspec))
+    shapes = (param_shapes, opt_shapes, batch_shapes)
+    return model, train_step, in_sh, out_sh, shapes
+
+
+def make_prefill_objects(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                         data_axes: Tuple[str, ...],
+                         moe_impl: str = "scatter"):
+    """Prefill step: forward + KV-cache build + last-token logits."""
+    model = build_model(cfg, mesh=mesh, data_axes=data_axes,
+                        moe_impl=moe_impl)
+    cache_len = cache_len_for(cfg, shape)
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = model.param_pspecs()
+    bspecs = batch_pspecs(cfg, shape, data_axes)
+    batch_shapes = input_specs(cfg, shape)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    in_sh = (named(mesh, pspecs), named(mesh, bspecs))
+    # logits + caches: let GSPMD choose (caches produced sharded by input)
+    return model, prefill_step, in_sh, None, (param_shapes, batch_shapes)
+
+
+def make_decode_objects(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                        data_axes: Tuple[str, ...],
+                        moe_impl: str = "scatter"):
+    """Single-token serve step against a seq_len cache. batch=1 long-
+    context cells shard the cache sequence dim (sequence parallelism)."""
+    model = build_model(cfg, mesh=mesh, data_axes=data_axes,
+                        moe_impl=moe_impl)
+    cache_len = cache_len_for(cfg, shape)
+    shard_seq = shape.global_batch == 1
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, cache_len))
+    pspecs = model.param_pspecs()
+    cspecs = model.cache_pspecs(shard_seq=shard_seq)
+    bspecs = batch_pspecs(cfg, shape, data_axes)
+    batch_shapes = input_specs(cfg, shape)
+
+    def serve_step(params, caches, batch):
+        return model.decode_step(params, caches, batch)
+
+    in_sh = (named(mesh, pspecs), named(mesh, cspecs), named(mesh, bspecs))
+    out_sh = (None, named(mesh, cspecs))
+    shapes = (param_shapes, cache_shapes, batch_shapes)
+    return model, serve_step, in_sh, out_sh, shapes

@@ -1,0 +1,215 @@
+"""Fault-tolerant trainer (single-controller).
+
+Wires every substrate layer together: mesh (elastic), data stream
+(stateless-resumable), jitted sharded train step (ZeRO-1, optional
+microbatch accumulation + int8 error-feedback grad compression),
+async checkpointing (atomic, keep-N), failure injection + restart
+supervision, straggler detection.
+
+CLI (reduced configs run on CPU — see examples/train_lm.py):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get
+from ..configs.base import ModelConfig, ShapeSpec
+from ..data import DataConfig, make_stream
+from ..models import build_model
+from ..optim import AdamWConfig, OptState, adamw_init
+from ..optim.compression import (CompressionState, compress_error_feedback,
+                                 init_compression)
+from ..runtime import (FailureInjector, StragglerDetector, elastic_mesh,
+                       run_with_restarts)
+from .mesh import data_axes_of
+from .steps import make_train_objects, named
+
+__all__ = ["TrainerConfig", "Trainer", "main"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    keep_n: int = 3
+    accum: int = 1
+    compress_grads: bool = False
+    log_every: int = 10
+    seed: int = 0
+    model_axis: int = 1              # TP degree for the elastic mesh
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 acfg: AdamWConfig = AdamWConfig(),
+                 data: DataConfig = DataConfig(),
+                 injector: Optional[FailureInjector] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        self.cfg, self.shape, self.tcfg, self.acfg = cfg, shape, tcfg, acfg
+        self.mesh = mesh or elastic_mesh(model=tcfg.model_axis)
+        self.daxes = data_axes_of(self.mesh)
+        self.stream = make_stream(cfg, shape, data)
+        self.injector = injector or FailureInjector()
+        self.straggler = StragglerDetector()
+        self.mgr = (CheckpointManager(tcfg.ckpt_dir, keep_n=tcfg.keep_n)
+                    if tcfg.ckpt_dir else None)
+        self.metrics_log: list = []
+
+        (self.model, step_fn, in_sh, out_sh, _shapes) = make_train_objects(
+            cfg, shape, self.mesh, self.daxes, acfg=acfg, accum=tcfg.accum)
+        self._param_sh, self._opt_sh, self._batch_sh = in_sh
+        if tcfg.compress_grads:
+            base = step_fn
+
+            def step_fn(params, opt_and_comp, batch):  # noqa: F811
+                opt, comp = opt_and_comp
+                (loss, _), grads = jax.value_and_grad(
+                    self.model.loss_fn, has_aux=True)(params, batch)
+                grads, comp = compress_error_feedback(grads, comp)
+                from ..optim import adamw_update
+                params, opt, om = adamw_update(grads, opt, params, acfg)
+                return params, (opt, comp), {"loss": loss, **om}
+
+            comp_sh = CompressionState(
+                error=named(self.mesh, self.model.param_pspecs()))
+            self._opt_sh = (self._opt_sh, comp_sh)
+            in_sh = (self._param_sh, self._opt_sh, self._batch_sh)
+            out_sh = (self._param_sh, self._opt_sh,
+                      out_sh[2])
+        self._step = jax.jit(step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------- state
+    def init_state(self):
+        with self.mesh:
+            params = jax.jit(
+                self.model.init,
+                out_shardings=self._param_sh)(
+                    jax.random.PRNGKey(self.tcfg.seed))
+            opt = adamw_init(params)
+            if self.tcfg.compress_grads:
+                opt = (opt, init_compression(params))
+        return params, opt
+
+    def _restore(self, step: int):
+        tree = self.mgr.restore(step)
+        params = jax.tree.map(jax.device_put, tree["params"],
+                              self._param_sh)
+        o = tree["opt"]
+        opt = OptState(mu=o["mu"], nu=o["nu"],
+                       count=jnp.asarray(o["count"]))
+        opt = jax.tree.map(jax.device_put, opt, self._opt_sh) \
+            if not self.tcfg.compress_grads else None
+        if self.tcfg.compress_grads:
+            comp = CompressionState(error=tree["comp"])
+            opt = jax.tree.map(
+                jax.device_put,
+                (OptState(mu=o["mu"], nu=o["nu"],
+                          count=jnp.asarray(o["count"])), comp),
+                self._opt_sh)
+        return params, opt
+
+    def _save(self, step: int, params, opt, blocking=False):
+        if self.mgr is None:
+            return
+        if self.tcfg.compress_grads:
+            (o, comp) = opt
+            tree = {"params": params,
+                    "opt": {"mu": o.mu, "nu": o.nu, "count": o.count},
+                    "comp": comp.error}
+        else:
+            tree = {"params": params,
+                    "opt": {"mu": opt.mu, "nu": opt.nu,
+                            "count": opt.count}}
+        self.mgr.save(step, tree, blocking=blocking)
+
+    # -------------------------------------------------------------- train
+    def train(self, max_restarts: int = 5) -> Dict[str, Any]:
+        def body(start_step: int) -> int:
+            if start_step > 0 and self.mgr is not None:
+                params, opt = self._restore(start_step - 1)
+            else:
+                params, opt = self.init_state()
+            it = self.stream.at(start_step)
+            step = start_step
+            for batch in it:
+                if step >= self.tcfg.steps:
+                    break
+                self.injector.maybe_fail(step)
+                t0 = time.time()
+                params, opt, m = self._step(params, opt, batch)
+                jax.block_until_ready(m["loss"])
+                dt = time.time() - t0
+                slow = self.straggler.update(dt)
+                if step % self.tcfg.log_every == 0 or slow:
+                    rec = {"step": step, "loss": float(m["loss"]),
+                           "lr": float(m["lr"]),
+                           "grad_norm": float(m["grad_norm"]),
+                           "dt": dt, "straggler": slow}
+                    self.metrics_log.append(rec)
+                    print(f"[train] step {step} loss {rec['loss']:.4f} "
+                          f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f}ms"
+                          + (" STRAGGLER" % () if slow else ""),
+                          flush=True)
+                if (self.mgr is not None
+                        and step % self.tcfg.ckpt_every == 0):
+                    self._save(step, params, opt)
+                step += 1
+            if self.mgr is not None:
+                self._save(step - 1, params, opt, blocking=True)
+            self._final = (params, opt)
+            return step - 1
+
+        latest = (self.mgr.latest_step if self.mgr is not None
+                  else (lambda: None))
+        final = run_with_restarts(body, latest, max_restarts=max_restarts)
+        return {"final_step": final, "metrics": self.metrics_log,
+                "stragglers": self.straggler.flagged}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, accum=args.accum,
+                         compress_grads=args.compress_grads,
+                         model_axis=args.model_axis)
+    acfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1))
+    inj = FailureInjector(fail_at=tuple(args.fail_at))
+    out = Trainer(cfg, shape, tcfg, acfg, injector=inj).train()
+    print(f"[train] done: final_step={out['final_step']} "
+          f"stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .model_zoo import (batch_pspecs, build_model, input_specs,
+                        model_flops, param_count, skip_reason,
+                        supports_shape)
+
+__all__ = ["batch_pspecs", "build_model", "input_specs", "model_flops",
+           "param_count", "skip_reason", "supports_shape"]

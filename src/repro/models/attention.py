@@ -1,0 +1,382 @@
+"""Grouped-query attention: triangular-chunked prefill, sliding-window
+(local) banded attention, single-token decode against full or ring caches,
+and cross-attention (enc-dec).
+
+Memory/computation design (TPU-first, validated on CPU):
+  * Prefill/train attention is *chunked* flash-style: fp32 running
+    (max, sum, acc) over KV blocks, so the (S×S) score matrix is never
+    materialized — the live working set is (q_chunk × kv_chunk) per head.
+    Chunk loops are Python-static, and causal chunking is *triangular*:
+    a query chunk only visits KV chunks at or below its diagonal, so the
+    compiled FLOPs are the ~S²/2 a causal kernel actually needs, not S².
+  * GQA uses a grouped einsum (B,S,K,G,hd × B,S,K,hd) — KV heads are never
+    broadcast to H.
+  * Local (sliding-window) layers visit only the in-window KV chunks and
+    carry ring caches of length ``min(window, S)`` at decode.
+  * With ``cfg.use_pallas`` the prefill path dispatches to the Pallas
+    flash kernel (kernels/flash_attention.py); the pure-jnp path here is
+    its oracle and the XLA path used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import Params, dense_init, rms_norm, rope
+
+__all__ = ["attn_init", "attn_pspec", "attn_prefill", "attn_decode",
+           "cross_attn_apply", "init_cache", "cache_pspec", "NEG_INF"]
+
+NEG_INF = -2.0 ** 30   # large-but-finite; keeps bf16/fp32 math NaN-free
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, cfg: ModelConfig, dtype: jnp.dtype) -> Params:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype).reshape(d, h, hd),
+        "wk": dense_init(ks[1], d, k * hd, dtype).reshape(d, k, hd),
+        "wv": dense_init(ks[2], d, k * hd, dtype).reshape(d, k, hd),
+        "wo": dense_init(ks[3], h * hd, d, dtype).reshape(h, hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attn_pspec(cfg: ModelConfig, tp: Optional[int] = None) -> Params:
+    """Tensor-parallel attention sharding with divisibility fallbacks:
+      * q heads % tp == 0  -> heads on "model" (Megatron-style);
+        else shard the d_model contraction dim (partial-sum TP; GSPMD
+        inserts the reduce) — arctic's 56 heads on a 16-way axis.
+      * kv heads % tp == 0 -> kv heads on "model"; else REPLICATE kv
+        (standard GQA practice when tp > n_kv_heads: kv is small).
+    """
+    from .layers import divisible
+    q_ok = divisible(cfg.n_heads, tp)
+    kv_ok = divisible(cfg.n_kv_heads, tp)
+    p = {
+        "wq": P(None, "model", None) if q_ok else P("model", None, None),
+        "wk": P(None, "model", None) if kv_ok else P(None, None, None),
+        "wv": P(None, "model", None) if kv_ok else P(None, None, None),
+        "wo": P("model", None, None) if q_ok else P(None, None, "model"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,K,hd), with qk-norm + RoPE."""
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dkq->bskq", x, p["wk"])
+    v = jnp.einsum("bsd,dkq->bskq", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.head_dim:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+def _block_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                mask: Optional[jnp.ndarray], scale: float,
+                state: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One (q_chunk, kv_chunk) block with running-softmax state.
+
+    q: (B,Q,K,G,hd)  k/v: (B,C,K,hd)  mask: (Q,C) or None
+    state: m (B,K,G,Q), l (B,K,G,Q), acc (B,Q,K,G,hd) — fp32.
+    """
+    m, l, acc = state
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(v.dtype), v
+                    ).astype(jnp.float32)
+    acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       causal: bool, window: int,
+                       q_chunk: int = 1024, kv_chunk: int = 1024
+                       ) -> jnp.ndarray:
+    """q: (B,S,K,G,hd), k/v: (B,S,K,hd) -> out (B,S,K,G,hd).
+
+    Python-static triangular/banded chunk schedule; runs the ~S²/2
+    (causal) or ~S·2w (local) FLOPs a real kernel would.
+    """
+    b, s, kh, g, hd = q.shape
+    sk = k.shape[1]                     # kv length (cross-attn: != s)
+    if causal or window:
+        assert sk == s, "causal/local attention requires matched q/kv len"
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, sk)
+    n_q = -(-s // q_chunk)
+    outs = []
+    for i in range(n_q):
+        q0, q1 = i * q_chunk, min((i + 1) * q_chunk, s)
+        qi = q[:, q0:q1]
+        qlen = q1 - q0
+        m = jnp.full((b, kh, g, qlen), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kh, g, qlen), jnp.float32)
+        acc = jnp.zeros((b, qlen, kh, g, hd), jnp.float32)
+        # which kv chunks does this q chunk need?
+        hi = q1 if causal else sk
+        lo = max(0, q0 - window + 1) if window else 0
+        j0, j1 = lo // kv_chunk, -(-hi // kv_chunk)
+        for j in range(j0, j1):
+            k0, k1 = j * kv_chunk, min((j + 1) * kv_chunk, sk)
+            kj, vj = k[:, k0:k1], v[:, k0:k1]
+            qpos = jnp.arange(q0, q1)[:, None]
+            kpos = jnp.arange(k0, k1)[None, :]
+            mask = None
+            if causal or window:
+                ok = jnp.ones((qlen, k1 - k0), bool)
+                if causal:
+                    ok &= kpos <= qpos
+                if window:
+                    ok &= kpos > qpos - window
+                mask = ok
+            m, l, acc = _block_attn(qi, kj, vj, mask, scale, (m, l, acc))
+        o = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (cfg.kv_dtype == "int8")
+# ---------------------------------------------------------------------------
+
+def quantize_kv(k: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(token, head) symmetric int8: k (..., S, K, hd) ->
+    (int8 same shape, f32 scales (..., S, K, 1)). Halves the resident
+    cache (+12.5% for scales at hd=32; ~3% at hd=128/256) — the decode
+    roofline is cache-bandwidth-bound, so this is a direct ~2x on the
+    memory term when the dequant fuses into the attention kernel."""
+    a = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(a / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype: jnp.dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+
+def attn_prefill(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, is_global: bool,
+                 with_cache: bool = False, causal: bool = True
+                 ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Causal (or sliding-window, or bidirectional) self-attention over a
+    full sequence.
+
+    Returns (out (B,S,D), cache or None). The cache holds roped keys —
+    decode queries rope at their absolute position, so q·k stays relative.
+    """
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kh
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    qg = q.reshape(b, s, kh, g, hd)
+    window = 0 if is_global else cfg.window
+    if cfg.use_pallas and causal:
+        from ..kernels import ops as kops
+        out = kops.flash_attention(qg, k, v, causal=True, window=window)
+    else:
+        out = _chunked_attention(qg, k, v, causal=causal, window=window)
+    out = out.reshape(b, s, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshq,hqd->bsd", out, p["wo"])
+    cache = None
+    if with_cache:
+        if window and s > window:
+            # ring cache keeps the last `window` roped keys/values
+            k = k[:, -window:]
+            v = v[:, -window:]
+        if cfg.kv_dtype == "int8":
+            qk, sk = quantize_kv(k)
+            qv, sv = quantize_kv(v)
+            cache = {"k": qk, "k_s": sk, "v": qv, "v_s": sv}
+        else:
+            cache = {"k": k, "v": v}
+    return y, cache
+
+
+def grow_cache(cache: Params, cfg: ModelConfig, is_global: bool,
+               cache_len: int, prefill_len: int) -> Params:
+    """Grow a prefill-produced cache to its serving capacity.
+
+    Global caches are zero-padded to ``cache_len`` (writes continue at slot
+    ``pos``). Local ring caches are rolled so slot ``p % window`` holds
+    position ``p``, matching ``attn_decode``'s ring indexing.
+    """
+    w = 0 if (is_global or not cfg.window) else cfg.window
+    tgt = min(w, cache_len) if w else cache_len
+
+    def fix(a: jnp.ndarray) -> jnp.ndarray:
+        axis = a.ndim - 3                 # (..., B, C, K, hd): seq at -3
+        cur = a.shape[axis]
+        if w and prefill_len >= w:
+            return jnp.roll(a, prefill_len % w, axis=axis)
+        if tgt > cur:
+            pad = [(0, 0)] * a.ndim
+            pad[axis] = (0, tgt - cur)
+            return jnp.pad(a, pad)
+        return a
+
+    return jax.tree.map(fix, cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, is_global: bool,
+               dtype: jnp.dtype) -> Params:
+    eff = cache_len if (is_global or not cfg.window) \
+        else min(cfg.window, cache_len)
+    shape = (batch, eff, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_dtype == "int8":
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_s": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_pspec(batch_axes, shard_seq: bool, kv_ok: bool = True,
+                quantized: bool = False) -> Params:
+    """Cache (B, S, K, hd): batch on data axes for batched decode; for
+    batch=1 long-context decode, shard the sequence dim instead (sequence
+    parallelism). KV-head dim shards on "model" when divisible; otherwise
+    the head_dim shards instead (always a multiple of 16 here) — a
+    32k-cache arctic decode is 600 GB and MUST split over both axes.
+    Quantized caches carry per-(token, head) f32 scales whose trailing
+    dim (1) never shards."""
+    kh, hd = ("model", None) if kv_ok else (None, "model")
+    if shard_seq:
+        spec = P(None, batch_axes, kh, hd)
+        sspec = P(None, batch_axes, kh, None)
+    else:
+        spec = P(batch_axes, None, kh, hd)
+        sspec = P(batch_axes, None, kh, None)
+    if quantized:
+        return {"k": spec, "k_s": sspec, "v": spec, "v_s": sspec}
+    return {"k": spec, "v": spec}
+
+
+def attn_decode(p: Params, x: jnp.ndarray, cache: Params, pos: jnp.ndarray,
+                cfg: ModelConfig, is_global: bool
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. x: (B,1,D); cache k/v: (B,C,K,hd); pos: () int32
+    — number of tokens already in the cache (same for the whole batch).
+
+    Global layers: C == full seq; the new k/v is written at slot ``pos``.
+    Local layers: C == window; ring write at ``pos % window``.
+    """
+    b, one, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kh
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, positions, cfg)
+    c = cache["k"].shape[1]
+    window = 0 if is_global else cfg.window
+    slot = jnp.mod(pos, c) if (window and window == c) else pos
+    quantized = "k_s" in cache
+    if quantized:
+        qk, sk = quantize_kv(k_new)
+        qv, sv = quantize_kv(v_new)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], qk, slot, axis=1),
+            "k_s": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_s"], sk, slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], qv, slot, axis=1),
+            "v_s": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_s"], sv, slot, axis=1),
+        }
+        # on TPU the dequant fuses into the attention reads (the Pallas
+        # decode kernel takes int8 + scales directly); the XLA path
+        # dequantizes explicitly.
+        k = dequantize_kv(new_cache["k"], new_cache["k_s"], x.dtype)
+        v = dequantize_kv(new_cache["v"], new_cache["v_s"], x.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot,
+                                                axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot,
+                                                axis=1)
+
+    # ring layout: every written slot holds one of the last `window`
+    # positions (all ≤ pos), so slots [0, min(pos+1, c)) are valid;
+    # linear layout: slots [0, pos+1).
+    if window and window == c:
+        valid_len = jnp.minimum(pos + 1, c)
+    else:
+        valid_len = pos + 1
+    if cfg.use_pallas:
+        from ..kernels import ops as kops
+        o = kops.decode_attention(q.reshape(b, kh, g, hd), k, v,
+                                  valid_len).astype(x.dtype)
+        o = o.reshape(b, 1, h, hd)
+    else:
+        qg = q.reshape(b, 1, kh, g, hd)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k).astype(jnp.float32) \
+            * (hd ** -0.5)
+        idx = jnp.arange(c)[None, None, None, None, :]
+        s = jnp.where(idx < valid_len, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bckd->bqkgd", w.astype(v.dtype), v)
+        o = o.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshq,hqd->bsd", o, p["wo"])
+    return y, (new_cache if quantized else {"k": k, "v": v})
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_apply(p: Params, x: jnp.ndarray, enc_k: jnp.ndarray,
+                     enc_v: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B,S,D) queries; enc_k/enc_v: (B,Se,K,hd) precomputed from the
+    encoder output (no mask, no rope on cross path)."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kh
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"]).reshape(b, s, kh, g, hd)
+    out = _chunked_attention(q, enc_k, enc_v, causal=False, window=0)
+    out = out.reshape(b, s, h, hd).astype(x.dtype)
+    return jnp.einsum("bshq,hqd->bsd", out, p["wo"])
+
+
+def cross_kv(p: Params, enc_out: jnp.ndarray, cfg: ModelConfig
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dkq->bskq", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dkq->bskq", enc_out, p["wv"])
+    return k, v

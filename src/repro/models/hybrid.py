@@ -1,0 +1,349 @@
+"""Attention-free Mamba2 LM and the Zamba2 hybrid.
+
+MambaLM: embed → N× mamba2 blocks (scan, remat) → norm → tied head.
+
+Zamba2LM: groups of ``hybrid_attn_every`` mamba2 blocks punctuated by ONE
+*shared* attention+MLP block (one parameter set, reused at every site —
+Zamba2's signature trick; the per-site LoRA deltas of the released model
+are omitted, see DESIGN.md). Each site keeps its own KV cache. Layout:
+  [ (mamba ×k, shared-attn) × n_groups, mamba ×tail ]
+n_layers counts the mamba blocks (81 = 13 groups of 6 + 3 tail).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from .layers import (Params, cross_entropy, divisible, embed_init,
+                     embed_pspec, mlp_apply, mlp_init, mlp_pspec, rms_norm,
+                     scan_blocks, stack_layers)
+from .ssm import (init_ssm_state, mamba_decode, mamba_init, mamba_pspec,
+                  mamba_seq, ssm_state_pspec)
+from .transformer import REMAT_POLICY, _with_leading, mesh_tp
+
+__all__ = ["MambaLM", "Zamba2LM"]
+
+
+def _mamba_block_init(key, cfg, dtype):
+    k1, _ = jax.random.split(key)
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": mamba_init(k1, cfg, dtype)}
+
+
+def _mamba_block_pspec(cfg, tp=None):
+    return {"ln": P(None), "mamba": mamba_pspec(cfg, tp)}
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig, mesh=None,
+                 data_axes: Tuple[str, ...] = ("data",), **_):
+        self.cfg = cfg
+        self.tp = mesh_tp(mesh)
+        self.data_axes = data_axes
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_blocks = jax.random.split(rng)
+        return {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "blocks": stack_layers(
+                lambda k: _mamba_block_init(k, cfg, self.dtype), k_blocks,
+                cfg.n_layers),
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+
+    def param_pspecs(self) -> Params:
+        return {"embed": embed_pspec(self.cfg.vocab, self.tp),
+                "blocks": _with_leading(
+                    _mamba_block_pspec(self.cfg, self.tp), 1),
+                "final_norm": P(None)}
+
+    def _head(self, params, h):
+        h = rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        return h @ params["embed"].T
+
+    def forward(self, params, batch, with_cache=False):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+
+        def body_fn(x, p_l):
+            y, (conv, ssm) = mamba_seq(p_l["mamba"],
+                                       rms_norm(x, p_l["ln"], cfg.norm_eps),
+                                       cfg)
+            return x + y, ((conv, ssm) if with_cache else None)
+
+        body = jax.checkpoint(body_fn, policy=REMAT_POLICY) \
+            if cfg.remat else body_fn
+        x, states = scan_blocks(body, x, params["blocks"],
+                                cfg.scan_layers)
+        return x, states
+
+    def loss_fn(self, params, batch):
+        tokens = batch["tokens"]
+        h, _ = self.forward(params, {"tokens": tokens[:, :-1]})
+        logits = self._head(params, h)
+        loss = cross_entropy(logits, tokens[:, 1:])
+        return loss, {"ce": loss}
+
+    def prefill(self, params, batch, cache_len=None):
+        h, states = self.forward(params, batch, with_cache=True)
+        return self._head(params, h[:, -1:]), states
+
+    def decode_step(self, params, states, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["token"]] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+
+        def body_fn(x, xs):
+            p_l, (conv, ssm) = xs
+            y, st = mamba_decode(p_l["mamba"],
+                                 rms_norm(x, p_l["ln"], cfg.norm_eps),
+                                 cfg, conv, ssm)
+            return x + y, st
+
+        x, new_states = scan_blocks(body_fn, x,
+                                    (params["blocks"], states),
+                                    cfg.scan_layers)
+        return self._head(params, x), new_states
+
+    def init_caches(self, batch: int, cache_len: int):
+        conv, ssm = init_ssm_state(self.cfg, batch, self.dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.cfg.n_layers,) + a.shape),
+            (conv, ssm))
+
+    def cache_pspecs(self, shard_seq: bool):
+        batch_axes = self.data_axes if len(self.data_axes) > 1 \
+            else self.data_axes[0]
+        conv, ssm = ssm_state_pspec(batch_axes, replicate_batch=shard_seq)
+        return _with_leading((conv, ssm), 1)
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig, mesh=None,
+                 data_axes: Tuple[str, ...] = ("data",), **_):
+        assert cfg.hybrid_attn_every > 0
+        self.cfg = cfg
+        self.tp = mesh_tp(mesh)
+        self.data_axes = data_axes
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_groups, self.n_tail = divmod(cfg.n_layers,
+                                            cfg.hybrid_attn_every)
+
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_g, k_t, k_a, k_m = jax.random.split(rng, 5)
+        k_every = cfg.hybrid_attn_every
+
+        def group_init(key):
+            return stack_layers(
+                lambda k: _mamba_block_init(k, cfg, self.dtype), key,
+                k_every)
+
+        params = {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "groups": stack_layers(group_init, k_g, self.n_groups),
+            "shared_attn": {
+                "ln1": jnp.zeros((cfg.d_model,), self.dtype),
+                "attn": attn.attn_init(k_a, cfg, self.dtype),
+                "ln2": jnp.zeros((cfg.d_model,), self.dtype),
+                "mlp": mlp_init(k_m, cfg.d_model, cfg.d_ff, cfg.act,
+                                self.dtype),
+            },
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        if self.n_tail:
+            params["tail"] = stack_layers(
+                lambda k: _mamba_block_init(k, cfg, self.dtype), k_t,
+                self.n_tail)
+        return params
+
+    def param_pspecs(self) -> Params:
+        cfg = self.cfg
+        specs = {
+            "embed": embed_pspec(cfg.vocab, self.tp),
+            "groups": _with_leading(_mamba_block_pspec(cfg, self.tp), 2),
+            "shared_attn": {"ln1": P(None),
+                            "attn": attn.attn_pspec(cfg, self.tp),
+                            "ln2": P(None),
+                            "mlp": mlp_pspec(cfg.act, cfg.d_ff, self.tp)},
+            "final_norm": P(None),
+        }
+        if self.n_tail:
+            specs["tail"] = _with_leading(
+                _mamba_block_pspec(cfg, self.tp), 1)
+        return specs
+
+    def _head(self, params, h):
+        h = rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        return h @ params["embed"].T
+
+    def _shared_attn_seq(self, p, x, positions, with_cache):
+        cfg = self.cfg
+        h, cache = attn.attn_prefill(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), positions, cfg,
+            True, with_cache)
+        x = x + h
+        return x + mlp_apply(p["mlp"],
+                             rms_norm(x, p["ln2"], cfg.norm_eps),
+                             cfg.act), cache
+
+    def forward(self, params, batch, with_cache=False):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        shared = params["shared_attn"]
+
+        def group_body(x, p_group):
+            for l in range(cfg.hybrid_attn_every):
+                p_l = jax.tree.map(lambda a: a[l], p_group)
+                y, st = mamba_seq(p_l["mamba"],
+                                  rms_norm(x, p_l["ln"], cfg.norm_eps), cfg)
+                x = x + y
+            x, cache = self._shared_attn_seq(shared, x, positions,
+                                             with_cache)
+            return x, cache
+
+        body = jax.checkpoint(group_body, policy=REMAT_POLICY) \
+            if cfg.remat else group_body
+        x, attn_caches = scan_blocks(body, x, params["groups"],
+                                     cfg.scan_layers)
+        for l in range(self.n_tail):
+            p_l = jax.tree.map(lambda a: a[l], params["tail"])
+            y, _ = mamba_seq(p_l["mamba"],
+                             rms_norm(x, p_l["ln"], cfg.norm_eps), cfg)
+            x = x + y
+        return x, attn_caches
+
+    def loss_fn(self, params, batch):
+        tokens = batch["tokens"]
+        h, _ = self.forward(params, {"tokens": tokens[:, :-1]})
+        logits = self._head(params, h)
+        loss = cross_entropy(logits, tokens[:, 1:])
+        return loss, {"ce": loss}
+
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        shared = params["shared_attn"]
+
+        def group_body(x, p_group):
+            states = []
+            for l in range(cfg.hybrid_attn_every):
+                p_l = jax.tree.map(lambda a: a[l], p_group)
+                y, st = mamba_seq(p_l["mamba"],
+                                  rms_norm(x, p_l["ln"], cfg.norm_eps), cfg)
+                x = x + y
+                states.append(st)
+            x, cache = self._shared_attn_seq(shared, x, positions, True)
+            ys = (jax.tree.map(lambda *a: jnp.stack(a), *states), cache)
+            return x, ys
+
+        x, (mamba_states, attn_caches) = scan_blocks(
+            group_body, x, params["groups"], cfg.scan_layers)
+        tail_states = []
+        for l in range(self.n_tail):
+            p_l = jax.tree.map(lambda a: a[l], params["tail"])
+            y, st = mamba_seq(p_l["mamba"],
+                              rms_norm(x, p_l["ln"], cfg.norm_eps), cfg)
+            x = x + y
+            tail_states.append(st)
+        caches = {"mamba": mamba_states, "attn": attn_caches}
+        if tail_states:
+            caches["tail"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                          *tail_states)
+        if cache_len is not None:
+            caches["attn"] = attn.grow_cache(caches["attn"], cfg, True,
+                                             cache_len, s)
+        return self._head(params, x[:, -1:]), caches
+
+    def decode_step(self, params, caches, batch):
+        cfg = self.cfg
+        pos = batch["pos"]
+        x = params["embed"][batch["token"]] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            p_group, m_states, a_cache = xs
+            new_states = []
+            for l in range(cfg.hybrid_attn_every):
+                p_l = jax.tree.map(lambda a: a[l], p_group)
+                st = jax.tree.map(lambda a: a[l], m_states)
+                y, st = mamba_decode(p_l["mamba"],
+                                     rms_norm(x, p_l["ln"], cfg.norm_eps),
+                                     cfg, *st)
+                x = x + y
+                new_states.append(st)
+            h, a_cache = attn.attn_decode(
+                shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+                a_cache, pos, cfg, True)
+            x = x + h
+            x = x + mlp_apply(shared["mlp"],
+                              rms_norm(x, shared["ln2"], cfg.norm_eps),
+                              cfg.act)
+            ys = (jax.tree.map(lambda *a: jnp.stack(a), *new_states),
+                  a_cache)
+            return x, ys
+
+        x, (m_new, a_new) = scan_blocks(
+            group_body, x,
+            (params["groups"], caches["mamba"], caches["attn"]),
+            cfg.scan_layers)
+        new_caches = {"mamba": m_new, "attn": a_new}
+        if self.n_tail:
+            tail_new = []
+            for l in range(self.n_tail):
+                p_l = jax.tree.map(lambda a: a[l], params["tail"])
+                st = jax.tree.map(lambda a: a[l], caches["tail"])
+                y, st = mamba_decode(p_l["mamba"],
+                                     rms_norm(x, p_l["ln"], cfg.norm_eps),
+                                     cfg, *st)
+                x = x + y
+                tail_new.append(st)
+            new_caches["tail"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                              *tail_new)
+        return self._head(params, x), new_caches
+
+    def init_caches(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        conv, ssm = init_ssm_state(cfg, batch, self.dtype)
+        k_every = cfg.hybrid_attn_every
+        mamba = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (self.n_groups, k_every) + a.shape), (conv, ssm))
+        a_cache = attn.init_cache(cfg, batch, cache_len, True, self.dtype)
+        attn_c = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape),
+            a_cache)
+        caches = {"mamba": mamba, "attn": attn_c}
+        if self.n_tail:
+            caches["tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_tail,) + a.shape),
+                (conv, ssm))
+        return caches
+
+    def cache_pspecs(self, shard_seq: bool):
+        batch_axes = self.data_axes if len(self.data_axes) > 1 \
+            else self.data_axes[0]
+        ssm_spec = ssm_state_pspec(batch_axes, replicate_batch=shard_seq)
+        a_spec = attn.cache_pspec(batch_axes, shard_seq,
+                                  divisible(self.cfg.n_kv_heads, self.tp),
+                                  quantized=self.cfg.kv_dtype == "int8")
+        caches = {"mamba": _with_leading(ssm_spec, 2),
+                  "attn": _with_leading(a_spec, 1)}
+        if self.n_tail:
+            caches["tail"] = _with_leading(ssm_spec, 1)
+        return caches

@@ -1,0 +1,180 @@
+"""Unified model API across the 10 assigned architectures.
+
+``build_model(cfg, ...)`` returns a family object exposing:
+    init(rng) -> params
+    loss_fn(params, batch) -> (loss, metrics)          [train shapes]
+    prefill(params, batch) -> (logits, caches)         [prefill shapes]
+    decode_step(params, caches, batch) -> (logits, caches)  [decode shapes]
+    param_pspecs() / cache_pspecs(shard_seq) / init_caches(batch, len)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step the shape exercises (weak-type-correct, shardable, no
+device allocation) — the dry-run lowers against these.
+
+``supports_shape(cfg, shape)`` implements the assignment's skip rules:
+``long_500k`` requires sub-quadratic attention (SSM / hybrid / uniform
+sliding-window); pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .encdec import CROSS_FRAMES, EncDecLM
+from .hybrid import MambaLM, Zamba2LM
+from .transformer import TransformerLM
+
+__all__ = ["build_model", "input_specs", "batch_pspecs", "supports_shape",
+           "skip_reason", "model_flops", "param_count"]
+
+
+def build_model(cfg: ModelConfig, mesh=None,
+                data_axes: Tuple[str, ...] = ("data",),
+                moe_impl: str = "scatter"):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg, mesh=mesh, data_axes=data_axes,
+                             moe_impl=moe_impl)
+    if cfg.family == "ssm":
+        return MambaLM(cfg, mesh=mesh, data_axes=data_axes)
+    if cfg.family == "hybrid":
+        return Zamba2LM(cfg, mesh=mesh, data_axes=data_axes)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, mesh=mesh, data_axes=data_axes)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# shape applicability
+# ---------------------------------------------------------------------------
+
+def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    if shape.name.startswith("long"):
+        if cfg.family in ("ssm", "hybrid"):
+            return True
+        # uniform sliding-window (mixtral) qualifies; periodic local:global
+        # (gemma3) still has full-attention layers -> skip
+        return cfg.window > 0 and cfg.local_global_period == 0
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str:
+    if supports_shape(cfg, shape):
+        return ""
+    return ("pure full attention at 512k context (no sub-quadratic path); "
+            "skipped per assignment")
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for the step this shape lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {"audio_embeds": _sd((b, s, cfg.d_model), jnp.float32),
+                    "tokens": _sd((b, s // 8 + 1), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"audio_embeds": _sd((b, s, cfg.d_model), jnp.float32),
+                    "tokens": _sd((b, s // 8), jnp.int32)}
+        return {"token": _sd((b, 1), jnp.int32),
+                "pos": _sd((), jnp.int32)}
+    if cfg.family == "vlm":
+        tv = min(cfg.vision_tokens, max(s // 4, 8))
+        if shape.kind == "train":
+            return {"vision": _sd((b, tv, cfg.d_model), jnp.float32),
+                    "tokens": _sd((b, s - tv + 1), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"vision": _sd((b, tv, cfg.d_model), jnp.float32),
+                    "tokens": _sd((b, s - tv), jnp.int32)}
+        return {"token": _sd((b, 1), jnp.int32), "pos": _sd((), jnp.int32)}
+    # lm / moe / ssm / hybrid
+    if shape.kind == "train":
+        return {"tokens": _sd((b, s + 1), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": _sd((b, s), jnp.int32)}
+    return {"token": _sd((b, 1), jnp.int32), "pos": _sd((), jnp.int32)}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec,
+                 data_axes: Tuple[str, ...]) -> Dict[str, Any]:
+    ba = data_axes if len(data_axes) > 1 else data_axes[0]
+    specs = input_specs(cfg, shape)
+
+    def spec_for(name, sd):
+        if name == "pos":
+            return P()
+        if shape.global_batch == 1:
+            return P(*([None] * len(sd.shape)))     # batch 1: replicate
+        return P(*([ba] + [None] * (len(sd.shape) - 1)))
+
+    return {k: spec_for(k, v) for k, v in specs.items()}
+
+
+def cache_len_for(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / FLOP counts (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, v = cfg.d_model, cfg.vocab
+    n = v * d                                   # embed
+    if not cfg.tie_embeddings and cfg.family != "ssm":
+        n += v * d
+    def attn_params():
+        return d * cfg.n_heads * cfg.head_dim * 2 \
+            + d * cfg.n_kv_heads * cfg.head_dim * 2
+    def mlp_params(ff):
+        mult = 3 if cfg.act in ("swiglu", "geglu") else 2
+        return mult * d * ff
+    def mamba_params():
+        din, ns, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        return d * din * 2 + d * ns * 2 + d * h + din * d \
+            + cfg.ssm_conv * (din + 2 * ns)
+    if cfg.family in ("dense", "vlm"):
+        n += cfg.n_layers * (attn_params() + mlp_params(cfg.d_ff))
+    elif cfg.family == "moe":
+        e = cfg.top_k if active_only else cfg.n_experts
+        per = attn_params() + e * 3 * d * cfg.d_ff + d * cfg.n_experts
+        if cfg.moe_dense_residual:
+            per += mlp_params(cfg.d_ff_dense)
+        n += cfg.n_layers * per
+    elif cfg.family == "ssm":
+        n += cfg.n_layers * mamba_params()
+    elif cfg.family == "hybrid":
+        n += cfg.n_layers * mamba_params()
+        n_sites = 1 if active_only else 1     # shared params count once
+        n += n_sites * (attn_params() + mlp_params(cfg.d_ff))
+    elif cfg.family == "encdec":
+        n += cfg.enc_layers * (attn_params() + mlp_params(cfg.d_ff))
+        n += cfg.dec_layers * (2 * attn_params() + mlp_params(cfg.d_ff))
+    if cfg.family == "vlm":
+        n += d * d                              # vision projection stub
+    return int(n)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params
+    (matmul params only — embedding lookup excluded), D = tokens."""
+    n_active = param_count(cfg, active_only=True)
+    n_active -= cfg.vocab * cfg.d_model         # lookup is not a matmul
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    toks = shape.global_batch * 1
+    return 2.0 * n_active * toks

@@ -1,0 +1,257 @@
+"""Mixture-of-Experts FFN (mixtral-style top-k; arctic adds a dense
+residual branch).
+
+Two interchangeable dispatch implementations:
+
+* ``scatter`` (default, used by smoke tests and the baseline dry-run) —
+  capacity-dropped dispatch via scatter/gather: tokens are ranked within
+  their chosen expert by a cumsum over a (tokens, E) one-hot, written into
+  an (E, C, D) buffer, processed by a batched (E,C,D)x(E,D,F) matmul, and
+  combined with their router weights. Unlike the classic one-hot-matmul
+  dispatch (Mesh-TF/GSPMD MoE) this adds **zero** fake matmul FLOPs, so
+  the roofline compute term reflects useful work. Cross-device routing is
+  left to GSPMD.
+
+* ``a2a`` — explicit expert parallelism under ``shard_map``: experts are
+  sharded over the "model" axis; each device ranks its local tokens,
+  exchanges fixed-capacity buffers with ``jax.lax.all_to_all``, runs its
+  local expert shard, and reverses the exchange. This is the
+  collective-exact formulation used at scale (the §Perf iterations
+  measure it against the scatter baseline).
+
+Router is fp32; top-k probabilities are softmax-renormalized over the
+selected logits (mixtral); the switch-style load-balance auxiliary loss is
+returned for the train step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import Params, dense_init, he_init
+
+__all__ = ["moe_init", "moe_pspec", "moe_apply"]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype: jnp.dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "wi": he_init(ks[1], (e, d, f), d, dtype),
+        "wg": he_init(ks[2], (e, d, f), d, dtype),
+        "wo": he_init(ks[3], (e, f, d), f, dtype),
+    }
+    if cfg.moe_dense_residual:
+        from .layers import mlp_init
+        p["dense"] = mlp_init(ks[4], d, cfg.d_ff_dense, cfg.act, dtype)
+    return p
+
+
+def moe_pspec(cfg: ModelConfig, tp: Optional[int] = None) -> Params:
+    """Expert parallelism when n_experts % tp == 0 (arctic: 128e/16);
+    otherwise shard the FFN hidden dim inside every expert (mixtral: 8e
+    replicated across a 16-way axis would 16x the memory — d_ff TP keeps
+    the footprint flat and GSPMD reduces the partial sums)."""
+    from .layers import divisible
+    if divisible(cfg.n_experts, tp):
+        # EP over "model" + a second shard over "data": arctic's
+        # 128x3x7168x4864 expert bank is 58 GB/device with EP alone on a
+        # 16-way axis; the data-axis shard brings it to 3.7 GB. Three
+        # layouts for the second axis (§Perf ablates them):
+        #   ep_ftp  — FFN hidden dim F over data: wo's contraction is
+        #             sharded, GSPMD reduces token ACTIVATIONS (cheap when
+        #             tokens/device << expert bytes);
+        #   ep_fsdp — contraction/model dim D over data: weights are
+        #             all-gathered just-in-time per layer (classic FSDP);
+        #   ep_only — no second shard (zero weight collectives, 16x mem).
+        second = cfg.moe_shard if cfg.moe_shard in ("ep_ftp", "ep_fsdp",
+                                                    "ep_only") else "ep_ftp"
+        if second == "ep_ftp":
+            p = {"router": P(None, None),
+                 "wi": P("model", None, "data"),
+                 "wg": P("model", None, "data"),
+                 "wo": P("model", "data", None)}
+        elif second == "ep_fsdp":
+            p = {"router": P(None, None),
+                 "wi": P("model", "data", None),
+                 "wg": P("model", "data", None),
+                 "wo": P("model", None, "data")}
+        else:
+            p = {"router": P(None, None),
+                 "wi": P("model", None, None),
+                 "wg": P("model", None, None),
+                 "wo": P("model", None, None)}
+    else:
+        p = {"router": P(None, None),
+             "wi": P(None, None, "model"),     # per-expert d_ff TP
+             "wg": P(None, None, "model"),
+             "wo": P(None, "model", None)}
+    if cfg.moe_dense_residual:
+        from .layers import mlp_pspec
+        p["dense"] = mlp_pspec(cfg.act, cfg.d_ff_dense, tp)
+    return p
+
+
+def _route(p: Params, x2d: jnp.ndarray, cfg: ModelConfig
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x2d: (T, D) -> (probs (T,k), idx (T,k) int32, aux_loss ())."""
+    logits = (x2d.astype(jnp.float32) @ p["router"])        # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(logits, cfg.top_k)
+    top_p = jax.nn.softmax(top_p, axis=-1)                  # renormalize
+    # switch-style load-balance loss: E * sum_e fraction_e * prob_e
+    e = cfg.n_experts
+    frac = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32), axis=0)
+    prob = jnp.mean(gates, axis=0)
+    aux = e * jnp.sum(frac * prob)
+    return top_p, top_i.astype(jnp.int32), aux
+
+
+def _expert_ffn(wi: jnp.ndarray, wg: jnp.ndarray, wo: jnp.ndarray,
+                xs: jnp.ndarray, act: str) -> jnp.ndarray:
+    """xs: (E, C, D) -> (E, C, D) with per-expert weights."""
+    h = jnp.einsum("ecd,edf->ecf", xs, wg)
+    hi = jnp.einsum("ecd,edf->ecf", xs, wi)
+    if act == "geglu":
+        h = jax.nn.gelu(h, approximate=True) * hi
+    else:
+        h = jax.nn.silu(h) * hi
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _dispatch_ranks(top_i: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Position of each (token, k) entry within its expert's queue.
+
+    top_i: (T, k) -> ranks (T, k) int32. Entries are ordered token-major
+    (the order combine must reproduce). Uses a cumsum over a (T*k, E)
+    one-hot — O(T·k·E) adds, no matmul FLOPs.
+    """
+    flat = top_i.reshape(-1)                                  # (T*k,)
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)         # (T*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(ranks, flat[:, None], axis=1
+                               ).reshape(top_i.shape)
+
+
+def _moe_scatter(p: Params, x2d: jnp.ndarray, cfg: ModelConfig,
+                 capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    top_p, top_i, aux = _route(p, x2d, cfg)
+    ranks = _dispatch_ranks(top_i, e)                         # (T, k)
+    keep = ranks < capacity
+    # scatter tokens into (E, C, D); dropped entries write to a spill row
+    buf = jnp.zeros((e * capacity + 1, d), x2d.dtype)
+    slot = jnp.where(keep, top_i * capacity + ranks, e * capacity)
+    buf = buf.at[slot.reshape(-1)].set(
+        jnp.repeat(x2d, k, axis=0))                           # token-major
+    xs = buf[:-1].reshape(e, capacity, d)
+    ys = _expert_ffn(p["wi"], p["wg"], p["wo"], xs, cfg.act)
+    flat = jnp.concatenate(
+        [ys.reshape(e * capacity, d), jnp.zeros((1, d), ys.dtype)])
+    gathered = flat[slot.reshape(-1)].reshape(t, k, d)
+    y = jnp.sum(gathered * top_p[..., None].astype(gathered.dtype), axis=1)
+    return y, aux
+
+
+def _moe_a2a(p: Params, x2d: jnp.ndarray, cfg: ModelConfig,
+             capacity: int, mesh: jax.sharding.Mesh,
+             data_axes: Tuple[str, ...], model_axis: str
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel dispatch with explicit all_to_all along the model
+    axis. Experts are sharded over `model_axis`; tokens over `data_axes`.
+    Capacity here is per (device, remote-device) lane.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    m = mesh.shape[model_axis]
+    e_local = e // m
+    assert e % m == 0, "n_experts must divide model axis"
+
+    def local_fn(router, wi, wg, wo, x_loc):
+        # x_loc: (t_l, D) tokens local to this device
+        t_l, d = x_loc.shape
+        pp = {"router": router, "wi": wi, "wg": wg, "wo": wo}
+        top_p, top_i, aux = _route(pp, x_loc, cfg)
+        ranks = _dispatch_ranks(top_i, e)
+        # lane layout: (m dest devices, e_local experts, capacity)
+        dest = top_i // e_local
+        eloc = top_i % e_local
+        keep = ranks < capacity
+        slot = jnp.where(keep,
+                         dest * (e_local * capacity) + eloc * capacity
+                         + ranks,
+                         m * e_local * capacity)
+        buf = jnp.zeros((m * e_local * capacity + 1, d), x_loc.dtype)
+        buf = buf.at[slot.reshape(-1)].set(jnp.repeat(x_loc, k, axis=0))
+        send = buf[:-1].reshape(m, e_local * capacity, d)
+        recv = jax.lax.all_to_all(send, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (m, e_local*capacity, d) tokens for OUR local experts
+        xs = recv.reshape(m, e_local, capacity, d).transpose(1, 0, 2, 3) \
+            .reshape(e_local, m * capacity, d)
+        ys = _expert_ffn(wi, wg, wo, xs, cfg.act)
+        back = ys.reshape(e_local, m, capacity, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(back, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        flat = jnp.concatenate([back.reshape(-1, d),
+                                jnp.zeros((1, d), ys.dtype)])
+        gathered = flat[slot.reshape(-1)].reshape(t_l, k, d)
+        y = jnp.sum(gathered * top_p[..., None].astype(gathered.dtype),
+                    axis=1)
+        return y, jax.lax.pmean(aux, model_axis)
+
+    from jax.experimental.shard_map import shard_map
+    spec_x = P(data_axes, None)
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(None, None), P(model_axis, None, None),
+                  P(model_axis, None, None), P(model_axis, None, None),
+                  spec_x),
+        out_specs=(spec_x, P()),
+        check_rep=False)
+    y, aux = fn(p["router"], p["wi"], p["wg"], p["wo"], x2d)
+    return y, aux
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              impl: str = "scatter",
+              mesh: Optional[jax.sharding.Mesh] = None,
+              data_axes: Tuple[str, ...] = ("data",),
+              model_axis: str = "model"
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y (B,S,D), aux_loss ()). Dense residual included."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    # Exact (drop-free) routing whenever affordable: the worst case is all
+    # tokens picking the same expert, so capacity == t guarantees no drops.
+    # Decode/small-prefill batches stay exact; large training batches use
+    # the standard capacity-factor dropping.
+    exact = t <= 8192
+    cap = t if exact else max(1, int(cfg.capacity_factor * cfg.top_k * t
+                                     / cfg.n_experts))
+    if impl == "a2a":
+        assert mesh is not None
+        m = mesh.shape[model_axis]
+        n_data = 1
+        for a in data_axes:
+            n_data *= mesh.shape[a]
+        t_l = t // max(1, n_data)
+        cap_l = t_l if exact else max(
+            1, int(cfg.capacity_factor * cfg.top_k * t_l
+                   / (cfg.n_experts * max(1, m))))
+        y, aux = _moe_a2a(p, x2d, cfg, cap_l, mesh, data_axes, model_axis)
+    else:
+        y, aux = _moe_scatter(p, x2d, cfg, cap)
+    y = y.reshape(b, s, d)
+    if cfg.moe_dense_residual:
+        from .layers import mlp_apply
+        y = y + mlp_apply(p["dense"], x, cfg.act)
+    return y, aux

@@ -1,0 +1,278 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+The block follows Mamba2 (arXiv:2405.21060): fused input projection into
+(z, x, B, C, dt), causal depthwise conv over (x,B,C), silu, selective SSM
+with scalar-per-head decay A, gated RMSNorm, output projection.
+
+The sequence path uses the **chunked SSD algorithm**: within chunks of
+``cfg.ssm_chunk`` the recurrence is computed as a decay-masked
+attention-like quadratic form (MXU-friendly); across chunks a short
+``lax.scan`` carries the (heads, head_dim, state) recurrent state. Total
+work is O(S·Q) intra + O(S·N·P) state math — sub-quadratic in S, which is
+what qualifies the SSM/hybrid archs for the ``long_500k`` cell.
+
+``ssd_sequential`` is the O(S)-step scan oracle used by tests, and
+``kernels/ssd_scan.py`` is the Pallas TPU kernel for the intra-chunk part
+(validated against these in interpret mode).
+
+Sharding: heads (and therefore d_inner = heads × head_dim) shard over
+"model"; B/C (state projections, shared across heads) replicate; all SSD
+contractions are head-local so the only collective is the out-projection
+reduce.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import Params, dense_init, he_init, rms_norm
+
+__all__ = ["mamba_init", "mamba_pspec", "mamba_seq", "mamba_decode",
+           "init_ssm_state", "ssm_state_pspec", "ssd_chunked",
+           "ssd_sequential"]
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig, dtype: jnp.dtype) -> Params:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = jax.random.split(key, 8)
+    conv_ch = din + 2 * n
+    return {
+        "wz": dense_init(k[0], d, din, dtype),
+        "wx": dense_init(k[1], d, din, dtype),
+        "wB": dense_init(k[2], d, n, dtype),
+        "wC": dense_init(k[3], d, n, dtype),
+        "wdt": dense_init(k[4], d, h, dtype),
+        "conv_w": he_init(k[5], (cfg.ssm_conv, conv_ch), cfg.ssm_conv,
+                          dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "norm": jnp.zeros((din,), dtype),
+        "wo": dense_init(k[6], din, d, dtype),
+    }
+
+
+def mamba_pspec(cfg: ModelConfig, tp: Optional[int] = None) -> Params:
+    from .layers import divisible
+    ok = divisible(cfg.ssm_heads, tp) and divisible(cfg.d_inner, tp)
+    h = "model" if ok else None
+    return {
+        "wz": P(None, h), "wx": P(None, h),
+        "wB": P(None, None), "wC": P(None, None),
+        "wdt": P(None, h),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "A_log": P(h), "D": P(h), "dt_bias": P(h),
+        "norm": P(h), "wo": P(h, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(xdt: jnp.ndarray, a: jnp.ndarray, B: jnp.ndarray,
+                   C: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference O(S)-step recurrence (oracle).
+
+    xdt: (b,s,h,p) inputs pre-multiplied by dt; a: (b,s,h) per-step decay
+    exp(dt·A); B,C: (b,s,n). Returns (y (b,s,h,p), final state (b,h,p,n)).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hst, t):
+        x_t, a_t, B_t, C_t = t
+        hst = hst * a_t[..., None, None] \
+            + x_t[..., None] * B_t[:, None, None, :]
+        y_t = jnp.einsum("bhpn,bn->bhp", hst, C_t)
+        return hst, y_t
+
+    xs = (xdt.transpose(1, 0, 2, 3).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), hT
+
+
+def ssd_chunked(xdt: jnp.ndarray, a: jnp.ndarray, B: jnp.ndarray,
+                C: jnp.ndarray, chunk: int,
+                h0: Optional[jnp.ndarray] = None,
+                use_pallas: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Same contract as ``ssd_sequential``.
+
+    Decomposition per chunk c of length Q (cum = inclusive cumsum of log a):
+      intra[i]  = Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · xdt_j
+      state_c   = Σ_j exp(cum_Q − cum_j) · B_j ⊗ xdt_j     (chunk outflow)
+      inter[i]  = exp(cum_i) · C_i · S_{c-1} ;  S_c = exp(cum_Q)·S_{c-1} + state_c
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:
+        # pad with identity steps: a=1 (no decay), x=0 (no state change) —
+        # final state is unaffected; padded outputs are truncated.
+        pad = q - s % q
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    c = s // q
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    xc = xdt.reshape(b, c, q, h, p).astype(jnp.float32)
+    ac = a.reshape(b, c, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, c, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, c, q, n).astype(jnp.float32)
+
+    la = jnp.log(jnp.maximum(ac, 1e-30))
+    cum = jnp.cumsum(la, axis=2)                       # (b,c,q,h) inclusive
+    total = cum[:, :, -1]                              # (b,c,h)
+
+    if use_pallas:
+        from ..kernels import ops as kops
+        intra = kops.ssd_intra(xc, cum, Bc, Cc)
+    else:
+        # decay kernel L[i,j] = exp(cum_i - cum_j) for j <= i (i>=j strictly
+        # includes a_i ... a_{j+1}; at i==j it is 1)
+        li = cum[:, :, :, None, :]                      # (b,c,i,1,h)
+        lj = cum[:, :, None, :, :]                      # (b,c,1,j,h)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        L = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(li - lj), 0.0)            # (b,c,i,j,h)
+        scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,c,i,j)
+        intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xc)
+
+    # chunk outflow states
+    decay_out = jnp.exp(total[:, :, None, :] - cum)     # (b,c,q,h)
+    state_c = jnp.einsum("bcqn,bcqhp,bcqh->bchpn", Bc, xc, decay_out)
+
+    # cross-chunk scan
+    def scan_fn(hprev, t):
+        st, tot = t                                     # (b,h,p,n), (b,h)
+        hnew = hprev * jnp.exp(tot)[..., None, None] + st
+        return hnew, hprev
+
+    (hT, hprevs) = jax.lax.scan(
+        scan_fn, h0, (state_c.transpose(1, 0, 2, 3, 4),
+                      total.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)            # (b,c,h,p,n)
+
+    inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, hprevs, jnp.exp(cum))
+    y = (intra + inter).reshape(b, s, h, p)[:, :s_orig]
+    return y, hT
+
+
+# ---------------------------------------------------------------------------
+# block ops
+# ---------------------------------------------------------------------------
+
+def _conv1d_causal(xBC: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. xBC: (b,s,ch); w: (k,ch). Returns (out,
+    new_state (b,k-1,ch))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[-1]), xBC.dtype)
+    padded = jnp.concatenate([state, xBC], axis=1)
+    out = sum(padded[:, i:i + xBC.shape[1]] * w[i] for i in range(k))
+    new_state = padded[:, -(k - 1):] if k > 1 else state
+    return out + bias, new_state
+
+
+def _split_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    B = x @ p["wB"]
+    C = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"])
+    return z, xs, B, C, dt
+
+
+def mamba_seq(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              conv_state: Optional[jnp.ndarray] = None,
+              ssm_state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence mamba2 block. x: (B,S,D) -> (y (B,S,D),
+    (conv_state, ssm_state))."""
+    b, s, d = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, B, C, dt = _split_proj(p, x, cfg)
+    xBC = jnp.concatenate([xs, B, C], axis=-1)
+    xBC, conv_state = _conv1d_causal(xBC, p["conv_w"], p["conv_b"],
+                                     conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :cfg.d_inner]
+    B = xBC[..., cfg.d_inner:cfg.d_inner + n]
+    C = xBC[..., cfg.d_inner + n:]
+    xh = xs.reshape(b, s, h, pdim)
+    A = -jnp.exp(p["A_log"])                            # (h,)
+    a = jnp.exp(dt * A)                                 # (b,s,h)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    y, ssm_state = ssd_chunked(xdt, a, B, C, cfg.ssm_chunk, h0=ssm_state,
+                               use_pallas=cfg.use_pallas)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"], (conv_state, ssm_state)
+
+
+def mamba_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                 conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token recurrent step. x: (B,1,D); states as in mamba_seq."""
+    b, one, d = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, B, C, dt = _split_proj(p, x, cfg)
+    xBC = jnp.concatenate([xs, B, C], axis=-1)
+    xBC, conv_state = _conv1d_causal(xBC, p["conv_w"], p["conv_b"],
+                                     conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :cfg.d_inner]
+    B = xBC[..., cfg.d_inner:cfg.d_inner + n]
+    C = xBC[..., cfg.d_inner + n:]
+    xh = xs.reshape(b, h, pdim).astype(jnp.float32)     # squeeze s=1
+    dt1 = dt[:, 0]                                      # (b,h)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt1 * A)                                # (b,h)
+    ssm_state = ssm_state * a[..., None, None] \
+        + (xh * dt1[..., None])[..., None] * B[:, 0][:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, C[:, 0])
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"], (conv_state, ssm_state)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype: jnp.dtype
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                     dtype)
+    ssm = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32)
+    return conv, ssm
+
+
+def ssm_state_pspec(batch_axes, replicate_batch: bool = False
+                    ) -> Tuple[Any, Any]:
+    """(conv_state, ssm_state) specs. SSM state is O(1) in sequence, so
+    batch=1 long-context cells replicate the batch dim (nothing to shard)
+    and rely on the model-axis shard of heads/channels."""
+    ba = None if replicate_batch else batch_axes
+    return (P(ba, None, "model"),
+            P(ba, "model", None, None))

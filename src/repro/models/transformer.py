@@ -1,0 +1,410 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM families.
+
+Layer stacking:
+  * uniform patterns (gemma-7b, starcoder2, qwen3, mixtral, arctic,
+    internvl2) — parameters are layer-stacked and the depth loop is a
+    single ``lax.scan`` whose body is ``jax.checkpoint``-remat'd: HLO size
+    and activation memory are O(1) in depth.
+  * periodic local:global patterns (gemma3: 5 local + 1 global) — scan
+    over whole periods (params stacked (G, P, ...)), with the ≤P-1 leftover
+    layers unrolled at the top of the stack.
+
+Decode carries caches through the same scan structure (stacked leading
+layer/period axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from .layers import (Params, cross_entropy, divisible, embed_init,
+                     embed_pspec, mlp_apply, mlp_init, mlp_pspec, rms_norm,
+                     scan_blocks, stack_layers)
+
+
+def mesh_tp(mesh) -> "int | None":
+    """Model-axis size of a mesh (None when no mesh / no model axis)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    return int(mesh.shape["model"])
+
+__all__ = ["TransformerLM"]
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def _block_init(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype),
+         "attn": attn.attn_init(k1, cfg, dtype)}
+    if cfg.n_experts:
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _block_pspec(cfg: ModelConfig, tp=None) -> Params:
+    p = {"ln1": P(None), "ln2": P(None), "attn": attn.attn_pspec(cfg, tp)}
+    if cfg.n_experts:
+        p["moe"] = moe_mod.moe_pspec(cfg, tp)
+    else:
+        p["mlp"] = mlp_pspec(cfg.act, cfg.d_ff, tp)
+    return p
+
+
+def _with_leading(pspec_tree, n_axes: int = 1):
+    """Prepend `n_axes` unsharded leading axes to every PartitionSpec (for
+    layer-stacked parameters)."""
+    def add(ps):
+        return P(*(([None] * n_axes) + list(ps)))
+    return jax.tree.map(add, pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class TransformerLM:
+    """cfg.family in {dense, moe, vlm}."""
+
+    def __init__(self, cfg: ModelConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 data_axes: Tuple[str, ...] = ("data",),
+                 moe_impl: str = "scatter"):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = mesh_tp(mesh)
+        self.data_axes = data_axes
+        self.moe_impl = moe_impl
+        self.dtype = jnp.dtype(cfg.dtype)
+        period = cfg.local_global_period
+        if period:
+            self.n_groups, self.n_tail = divmod(cfg.n_layers, period)
+        else:
+            self.n_groups, self.n_tail = cfg.n_layers, 0
+
+    # ------------------------------------------------------------- params
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_blocks, k_tail, k_head, k_vis = jax.random.split(rng, 5)
+        params: Params = {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        period = cfg.local_global_period
+        if period:
+            def group_init(key):
+                return stack_layers(
+                    lambda k: _block_init(k, cfg, self.dtype), key, period)
+            params["blocks"] = stack_layers(group_init, k_blocks,
+                                            self.n_groups)
+            if self.n_tail:
+                params["tail"] = stack_layers(
+                    lambda k: _block_init(k, cfg, self.dtype), k_tail,
+                    self.n_tail)
+        else:
+            params["blocks"] = stack_layers(
+                lambda k: _block_init(k, cfg, self.dtype), k_blocks,
+                cfg.n_layers)
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(k_head, cfg.vocab, cfg.d_model,
+                                           self.dtype).T
+        if cfg.family == "vlm":
+            # stub projection applied to the (precomputed) patch embeddings
+            params["vision_proj"] = embed_init(k_vis, cfg.d_model,
+                                               cfg.d_model, self.dtype).T
+        return params
+
+    def param_pspecs(self) -> Params:
+        cfg = self.cfg
+        emb = embed_pspec(cfg.vocab, self.tp)
+        specs: Params = {
+            "embed": emb,
+            "final_norm": P(None),
+        }
+        blk = _block_pspec(cfg, self.tp)
+        period = cfg.local_global_period
+        if period:
+            specs["blocks"] = _with_leading(blk, 2)
+            if self.n_tail:
+                specs["tail"] = _with_leading(blk, 1)
+        else:
+            specs["blocks"] = _with_leading(blk, 1)
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(*reversed(tuple(emb)))
+        if cfg.family == "vlm":
+            dm = "model" if divisible(cfg.d_model, self.tp) else None
+            specs["vision_proj"] = P(None, dm)
+        return specs
+
+    # -------------------------------------------------------------- embed
+    def embed_inputs(self, params: Params, batch: Dict[str, jnp.ndarray]
+                     ) -> jnp.ndarray:
+        cfg = self.cfg
+        tok = batch["tokens"]
+        x = params["embed"][tok] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+        if cfg.family == "vlm" and "vision" in batch:
+            vis = batch["vision"].astype(self.dtype) @ params["vision_proj"]
+            x = jnp.concatenate([vis, x], axis=1)
+        return x
+
+    def logits(self, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+        h = rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        w = params["embed"].T if self.cfg.tie_embeddings \
+            else params["unembed"]
+        return h @ w
+
+    # ----------------------------------------------------------- seq path
+    def _block_seq(self, p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                   is_global: bool, with_cache: bool):
+        cfg = self.cfg
+        h, cache = attn.attn_prefill(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), positions, cfg,
+            is_global, with_cache)
+        x = x + h
+        aux = jnp.asarray(0.0, jnp.float32)
+        if cfg.n_experts:
+            y, aux = moe_mod.moe_apply(
+                p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                impl=self.moe_impl, mesh=self.mesh,
+                data_axes=self.data_axes)
+        else:
+            y = mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                          cfg.act)
+        return x + y, cache, aux
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                with_cache: bool = False):
+        """Returns (hidden (B,S,D), caches, aux_loss). Caches pytree layout
+        matches ``init_caches``."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        period = cfg.local_global_period
+
+        if period:
+            def group_body(carry, p_group):
+                x, aux = carry
+                caches = []
+                for l in range(period):
+                    p_l = jax.tree.map(lambda a: a[l], p_group)
+                    g = (l + 1) % period == 0
+                    x, c, a = self._block_seq(p_l, x, positions, g,
+                                              with_cache)
+                    caches.append(c)
+                    aux = aux + a
+                local_c = [c for l, c in enumerate(caches)
+                           if (l + 1) % period != 0]
+                global_c = caches[period - 1]
+                ys = None
+                if with_cache:
+                    ys = {"local": jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *local_c),
+                        "global": global_c}
+                return (x, aux), ys
+
+            body = jax.checkpoint(group_body, policy=REMAT_POLICY) \
+                if cfg.remat else group_body
+            (x, aux), group_caches = scan_blocks(
+                body, (x, jnp.asarray(0.0, jnp.float32)), params["blocks"],
+                cfg.scan_layers)
+            tail_caches = []
+            for l in range(self.n_tail):
+                p_l = jax.tree.map(lambda a: a[l], params["tail"])
+                x, c, a = self._block_seq(p_l, x, positions, False,
+                                          with_cache)
+                aux = aux + a
+                tail_caches.append(c)
+            caches = None
+            if with_cache:
+                caches = {"groups": group_caches}
+                if tail_caches:
+                    caches["tail"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *tail_caches)
+        else:
+            is_global = cfg.window == 0
+
+            def body_fn(carry, p_l):
+                x, aux = carry
+                x, c, a = self._block_seq(p_l, x, positions, is_global,
+                                          with_cache)
+                return (x, aux + a), c
+
+            body = jax.checkpoint(body_fn, policy=REMAT_POLICY) \
+                if cfg.remat else body_fn
+            (x, aux), caches = scan_blocks(
+                body, (x, jnp.asarray(0.0, jnp.float32)), params["blocks"],
+                cfg.scan_layers)
+        return x, caches, aux
+
+    # --------------------------------------------------------------- loss
+    def loss_fn(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inp = dict(batch)
+        inp["tokens"] = tokens[:, :-1]
+        h, _, aux = self.forward(params, inp, with_cache=False)
+        labels = tokens[:, 1:]
+        if cfg.family == "vlm" and "vision" in batch:
+            h = h[:, batch["vision"].shape[1]:]      # loss on text positions
+        if cfg.ce_chunk > 1:
+            from .layers import chunked_ce
+            hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+            w = params["embed"].T if cfg.tie_embeddings \
+                else params["unembed"]
+            loss = chunked_ce(hn, w, labels, cfg.ce_chunk,
+                              scan=cfg.scan_layers)
+        else:
+            logits = self.logits(params, h)
+            loss = cross_entropy(logits, labels)
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux
+        return loss, {"ce": loss, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                cache_len: Optional[int] = None):
+        cfg = self.cfg
+        h, caches, _ = self.forward(params, batch, with_cache=True)
+        logits = self.logits(params, h[:, -1:])
+        if cache_len is not None:
+            s = h.shape[1]
+            if cfg.local_global_period:
+                caches["groups"] = {
+                    "local": attn.grow_cache(caches["groups"]["local"], cfg,
+                                             False, cache_len, s),
+                    "global": attn.grow_cache(caches["groups"]["global"],
+                                              cfg, True, cache_len, s)}
+                if "tail" in caches:
+                    caches["tail"] = attn.grow_cache(caches["tail"], cfg,
+                                                     False, cache_len, s)
+            else:
+                caches = attn.grow_cache(caches, cfg, cfg.window == 0,
+                                         cache_len, s)
+        return logits, caches
+
+    def _block_decode(self, p, x, cache, pos, is_global):
+        cfg = self.cfg
+        h, cache = attn.attn_decode(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cache, pos, cfg,
+            is_global)
+        x = x + h
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_apply(
+                p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                impl=self.moe_impl, mesh=self.mesh,
+                data_axes=self.data_axes)
+        else:
+            y = mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                          cfg.act)
+        return x + y, cache
+
+    def decode_step(self, params: Params, caches, batch):
+        """batch: {"token": (B,1) int32, "pos": () int32}. Returns
+        (logits (B,1,V), new caches)."""
+        cfg = self.cfg
+        pos = batch["pos"]
+        x = params["embed"][batch["token"]] * jnp.asarray(
+            cfg.d_model ** 0.5, self.dtype)
+        period = cfg.local_global_period
+
+        if period:
+            def group_body(x, xs):
+                p_group, cache = xs
+                new_local, new_global = [], None
+                li = 0
+                for l in range(period):
+                    p_l = jax.tree.map(lambda a: a[l], p_group)
+                    g = (l + 1) % period == 0
+                    if g:
+                        x, c = self._block_decode(p_l, x, cache["global"],
+                                                  pos, True)
+                        new_global = c
+                    else:
+                        c_in = jax.tree.map(lambda a: a[li], cache["local"])
+                        x, c = self._block_decode(p_l, x, c_in, pos, False)
+                        new_local.append(c)
+                        li += 1
+                ys = {"local": jax.tree.map(lambda *a: jnp.stack(a),
+                                            *new_local),
+                      "global": new_global}
+                return x, ys
+
+            x, group_caches = scan_blocks(
+                group_body, x, (params["blocks"], caches["groups"]),
+                cfg.scan_layers)
+            new_caches = {"groups": group_caches}
+            if self.n_tail:
+                tail_new = []
+                for l in range(self.n_tail):
+                    p_l = jax.tree.map(lambda a: a[l], params["tail"])
+                    c_in = jax.tree.map(lambda a: a[l], caches["tail"])
+                    x, c = self._block_decode(p_l, x, c_in, pos, False)
+                    tail_new.append(c)
+                new_caches["tail"] = jax.tree.map(
+                    lambda *a: jnp.stack(a), *tail_new)
+        else:
+            is_global = cfg.window == 0
+
+            def body_fn(x, xs):
+                p_l, cache = xs
+                x, c = self._block_decode(p_l, x, cache, pos, is_global)
+                return x, c
+
+            x, new_caches = scan_blocks(
+                body_fn, x, (params["blocks"], caches), cfg.scan_layers)
+        logits = self.logits(params, x)
+        return logits, new_caches
+
+    # ------------------------------------------------------------- caches
+    def init_caches(self, batch: int, cache_len: int) -> Params:
+        cfg = self.cfg
+        period = cfg.local_global_period
+
+        def one(is_global):
+            return attn.init_cache(cfg, batch, cache_len, is_global,
+                                   self.dtype)
+
+        if period:
+            n_local = period - 1
+            group = {
+                "local": jax.tree.map(
+                    lambda *a: jnp.stack(a), *[one(False)] * n_local),
+                "global": one(True)}
+            caches = {"groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape),
+                group)}
+            if self.n_tail:
+                caches["tail"] = jax.tree.map(
+                    lambda *a: jnp.stack(a), *[one(False)] * self.n_tail)
+            return caches
+        is_global = cfg.window == 0
+        stack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+            one(is_global))
+        return stack
+
+    def cache_pspecs(self, shard_seq: bool) -> Params:
+        cfg = self.cfg
+        batch_axes = self.data_axes if len(self.data_axes) > 1 \
+            else self.data_axes[0]
+        base = attn.cache_pspec(batch_axes, shard_seq,
+                                divisible(cfg.n_kv_heads, self.tp),
+                                quantized=cfg.kv_dtype == "int8")
+        period = cfg.local_global_period
+        if period:
+            group = {"local": _with_leading(base, 2),
+                     "global": _with_leading(base, 1)}
+            caches = {"groups": group}
+            if self.n_tail:
+                caches["tail"] = _with_leading(base, 1)
+            return caches
+        return _with_leading(base, 1)

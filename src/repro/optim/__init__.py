@@ -1,0 +1,7 @@
+from .adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                    cosine_schedule, global_norm, zero1_pspecs)
+from .compression import CompressionState, compress_error_feedback
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "zero1_pspecs",
+           "CompressionState", "compress_error_feedback"]

@@ -1,0 +1,144 @@
+"""AdamW with fp32 master state, global-norm clipping, warmup+cosine LR,
+and ZeRO-1 optimizer-state sharding.
+
+The optimizer state is a plain pytree mirroring the params, so the same
+``jax.jit(in_shardings=...)`` machinery that shards params shards it.
+``zero1_pspecs`` derives the state PartitionSpecs from the param specs by
+additionally sharding each leaf's largest unsharded axis over the data
+axes when divisible — the ZeRO-1 trick (state lives sliced across data
+ranks; the update is computed on the slice and params are re-broadcast by
+GSPMD where needed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "zero1_pspecs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Params          # fp32 first moment
+    nu: Params          # fp32 second moment
+    count: jnp.ndarray  # () int32
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_init(params: Params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads: Params, state: OptState, params: Params,
+                 cfg: AdamWConfig) -> Tuple[Params, OptState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    count = state.count + 1
+    lr = cosine_schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p
+           in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(new_m, new_v, count), metrics
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding
+# ---------------------------------------------------------------------------
+
+def zero1_pspecs(param_pspecs: Params, params: Params,
+                 mesh: jax.sharding.Mesh,
+                 data_axes: Tuple[str, ...] = ("data",)) -> Any:
+    """Optimizer-state PartitionSpecs: the param spec PLUS the data axes on
+    the largest axis that is unsharded and divisible by the data-axis size.
+
+    params may be concrete arrays or ShapeDtypeStructs (dry-run).
+    """
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    extra = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def leaf_spec(spec: P, p) -> P:
+        shape = p.shape
+        if len(shape) == 0:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        # a mesh axis may appear at most once per spec — params already
+        # FSDP-sharded over data (e.g. MoE expert banks) stay as-is
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        if any(a in used for a in data_axes):
+            return spec
+        # pick the largest unsharded, divisible axis
+        best, best_size = -1, 0
+        for i, (e, s) in enumerate(zip(entries, shape)):
+            if e is None and s % n_data == 0 and s > best_size and s >= n_data:
+                best, best_size = i, s
+        if best >= 0:
+            entries[best] = extra
+        return P(*entries)
+
+    return jax.tree.map(leaf_spec, param_pspecs, params,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+from .elastic import best_mesh_shape, elastic_mesh
+from .fault import FailureInjector, SimulatedFailure, run_with_restarts
+from .straggler import StragglerDetector
+
+__all__ = ["FailureInjector", "SimulatedFailure", "run_with_restarts",
+           "StragglerDetector", "best_mesh_shape", "elastic_mesh"]

@@ -1,0 +1,40 @@
+"""Elastic re-meshing: rebuild the largest valid mesh from the devices
+that are actually alive, and resume from a mesh-agnostic checkpoint.
+
+Policy: keep the model axis fixed (param shards must fit) and shrink the
+data axis to ``n_devices // model``; training continues with a smaller
+global batch (or more grad-accumulation steps, the trainer's choice).
+The checkpoint layer stores host numpy, so restore onto the new mesh is
+just ``device_put`` with the new NamedShardings (checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+__all__ = ["best_mesh_shape", "elastic_mesh"]
+
+
+def best_mesh_shape(n_devices: int, model: int,
+                    pod: int = 1) -> Tuple[int, ...]:
+    """Largest (pod, data, model) using <= n_devices with fixed model/pod
+    axes. Raises if not even one data row fits."""
+    if n_devices < model * pod:
+        raise ValueError(
+            f"{n_devices} devices cannot host model={model} x pod={pod}")
+    data = n_devices // (model * pod)
+    return (pod, data, model) if pod > 1 else (data, model)
+
+
+def elastic_mesh(model: int, pod: int = 1,
+                 devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape = best_mesh_shape(len(devices), model, pod)
+    n = 1
+    for s in shape:
+        n *= s
+    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
+    import numpy as np
+    arr = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)

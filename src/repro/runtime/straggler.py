@@ -1,0 +1,60 @@
+"""Straggler detection via EWMA step-time outliers.
+
+In synchronous data parallelism one slow host gates every step (the
+collective waits). Detection is cheap: keep an EWMA + EWVar of the step
+time; a step slower than ``mean + k·std`` (and ``> ratio × mean``) flags
+a straggler. Mitigation at scale is out-of-band (re-schedule the host,
+shrink the mesh via runtime.elastic); here the detector reports and the
+trainer logs + counts, and the restart/elastic path is exercised by
+tests.
+
+Welford-style EWMA keeps no history; O(1) per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["StragglerDetector"]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    alpha: float = 0.1          # EWMA smoothing
+    k_std: float = 4.0          # sigma threshold
+    min_ratio: float = 1.5      # AND step > ratio x mean
+    warmup: int = 5             # first steps (compile!) never flag
+
+    def __post_init__(self):
+        self._mean: Optional[float] = None
+        self._var: float = 0.0
+        self._n = 0
+        self.flagged = 0
+
+    @property
+    def mean(self) -> float:
+        return self._mean or 0.0
+
+    @property
+    def std(self) -> float:
+        return self._var ** 0.5
+
+    def update(self, dt: float) -> bool:
+        """Feed one step time (seconds); returns True if it's a straggler
+        step. Flagged steps do NOT update the running stats (a straggler
+        should not inflate its own threshold)."""
+        self._n += 1
+        if self._mean is None:
+            self._mean = dt
+            return False
+        is_outlier = (self._n > self.warmup
+                      and dt > self._mean + self.k_std * self.std
+                      and dt > self.min_ratio * self._mean)
+        if is_outlier:
+            self.flagged += 1
+            return True
+        delta = dt - self._mean
+        self._mean += self.alpha * delta
+        self._var = (1 - self.alpha) * (self._var
+                                        + self.alpha * delta * delta)
+        return False

@@ -1,0 +1,20 @@
+import os
+
+import numpy as np
+import pytest
+
+# Tests run on the single host CPU device; ONLY the dry-run subprocesses
+# spawn a placeholder fleet (REPRO_DRYRUN_DEVICES) — never set XLA_FLAGS
+# here (smoke tests and benches must see 1 device).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,114 @@
+"""Dry-run machinery: HLO collective parser units + a subprocess
+mini-matrix on 8 placeholder devices (the full 512-device matrix runs via
+``python -m repro.launch.dryrun --all``; results in EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.analysis import (HW, collective_bytes,
+                                   parse_hlo_collectives, roofline_terms)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# parser units
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ag = bf16[4096,3072]{1,0} all-gather(bf16[256,3072]{1,0} %x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[] all-reduce(f32[] %y), channel_id=1, replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(f32[1024,128]{1,0} %z), replica_groups=[1,16]<=[16], dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8]{1,0} %w), source_target_pairs={{0,1}}
+  %aa = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(f32[16,16]{1,0} %a, f32[16,16]{1,0} %b), replica_groups=[2,8]<=[16]
+"""
+
+
+def test_parse_hlo_collectives():
+    ops = parse_hlo_collectives(HLO_SAMPLE)
+    kinds = [o[0] for o in ops]
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter",
+                     "collective-permute", "all-to-all"]
+    ag = ops[0]
+    assert ag[1] == 4096 * 3072 * 2      # result bytes
+    assert ag[2] == 16                   # group size (iota form)
+    ar = ops[1]
+    assert ar[1] == 4 and ar[2] == 4     # scalar f32, explicit group of 4
+    aa = ops[4]
+    assert aa[1] == 2 * 16 * 16 * 4      # tuple result summed
+
+
+def test_collective_bytes_accounting():
+    stats = collective_bytes(HLO_SAMPLE)
+    assert stats.count == 5
+    assert stats.total_dcn == 0.0
+    # all-gather: (g-1)/g * result
+    ag = 15 / 16 * 4096 * 3072 * 2
+    assert abs(stats.per_op["all-gather"] - ag) < 1.0
+
+
+def test_pod_crossing_detection():
+    # explicit group spanning both pods of 8 in a 16-device fleet
+    hlo = ("%ar = f32[128]{0} all-reduce(f32[128]{0} %x), "
+           "replica_groups={{0,8}}, to_apply=%add")
+    stats = collective_bytes(hlo, pod_size=8)
+    assert stats.total_dcn > 0 and stats.total_ici == 0.0
+    stats1 = collective_bytes(hlo, pod_size=0)
+    assert stats1.total_dcn == 0.0
+
+
+def test_roofline_terms_dominant():
+    stats = collective_bytes("")
+    t = roofline_terms(197e12, 819e9 * 0.1, stats)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["dominant"] == "compute"
+
+
+# ---------------------------------------------------------------------------
+# subprocess mini-matrix (8 placeholder devices, full configs)
+# ---------------------------------------------------------------------------
+
+def run_dryrun(args, devices="8"):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES=devices,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1200)
+
+
+@pytest.mark.slow
+def test_mini_dryrun_single_pod(tmp_path):
+    out = tmp_path / "cell.json"
+    r = run_dryrun(["--arch", "qwen3-0.6b", "--shape", "decode_32k",
+                    "--test-mesh", "--out", str(out)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text())
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == {"data": 4, "model": 2}
+    assert rec["flops_per_chip"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory",
+                                           "collective")
+
+
+@pytest.mark.slow
+def test_mini_dryrun_multi_pod(tmp_path):
+    out = tmp_path / "cell.json"
+    r = run_dryrun(["--arch", "qwen3-0.6b", "--shape", "decode_32k",
+                    "--test-mesh", "--multi-pod", "--out", str(out)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text())
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == {"pod": 2, "data": 2, "model": 2}
+
+
+@pytest.mark.slow
+def test_mini_dryrun_skips_long_context_full_attn(tmp_path):
+    out = tmp_path / "cell.json"
+    r = run_dryrun(["--arch", "gemma-7b", "--shape", "long_500k",
+                    "--test-mesh", "--out", str(out)])
+    assert r.returncode == 0
+    rec = json.loads(out.read_text())
+    assert rec["status"] == "skipped"

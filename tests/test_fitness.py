@@ -1,0 +1,41 @@
+"""The 3-case fitness key (paper Eq. 14-16) as a single scalar order."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import INFEASIBLE_OFFSET, fitness_key
+from repro.core.simulator import SimResult
+
+
+def mk_result(cost: float, total_time: float, feasible: bool) -> SimResult:
+    return SimResult(
+        end_times=jnp.zeros(1), app_completion=jnp.asarray([total_time]),
+        comp_cost=jnp.asarray(cost), trans_cost=jnp.asarray(0.0),
+        total_cost=jnp.asarray(cost), feasible=jnp.asarray(feasible),
+        makespan=jnp.asarray(total_time))
+
+
+@given(c1=st.floats(0, 1e3), c2=st.floats(0, 1e3))
+def test_case1_both_feasible_cheaper_wins(c1, c2):
+    k1 = float(fitness_key(mk_result(c1, 1.0, True)))
+    k2 = float(fitness_key(mk_result(c2, 99.0, True)))
+    assert (k1 < k2) == (c1 < c2) or c1 == c2
+
+
+@given(c=st.floats(0, 1e3), t=st.floats(0, 1e9))
+def test_case2_feasible_beats_infeasible(c, t):
+    kf = float(fitness_key(mk_result(c, 1.0, True)))
+    ki = float(fitness_key(mk_result(0.0, t, False)))
+    assert kf < ki
+
+
+@given(t1=st.floats(0.0, 1e9), t2=st.floats(0.0, 1e9))
+def test_case3_both_infeasible_faster_wins(t1, t2):
+    k1 = float(fitness_key(mk_result(0.0, t1, False)))
+    k2 = float(fitness_key(mk_result(0.0, t2, False)))
+    if abs(t1 - t2) > 1e-3 * max(t1, t2, 1.0):
+        assert (k1 < k2) == (t1 < t2)
+
+
+def test_offset_dominates_costs():
+    assert INFEASIBLE_OFFSET > 1e3

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracle, per the deliverable contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SEED = np.random.default_rng(42)
+
+
+def _mk(shape, dtype):
+    x = SEED.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,kh,g,hd", [
+    (1, 64, 1, 1, 64),       # minimal
+    (2, 128, 2, 2, 64),      # GQA
+    (1, 300, 1, 4, 64),      # non-multiple seq (padding path)
+    (2, 257, 2, 1, 128),     # odd seq, wide head
+    (1, 512, 4, 2, 64),      # multi-tile
+])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, kh, g, hd, window, dtype):
+    q = _mk((b, s, kh, g, hd), dtype)
+    k = _mk((b, s, kh, hd), dtype)
+    v = _mk((b, s, kh, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_full_softmax_row():
+    """First row attends only to itself: output == v[0]."""
+    q = _mk((1, 8, 1, 1, 64), jnp.float32)
+    k = _mk((1, 8, 1, 64), jnp.float32)
+    v = _mk((1, 8, 1, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out[0, 0, 0, 0]),
+                               np.asarray(v[0, 0, 0]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,c,q,h,p,n", [
+    (1, 1, 16, 1, 8, 4),
+    (1, 2, 64, 2, 32, 16),
+    (2, 3, 37, 1, 16, 8),        # ragged q
+    (1, 1, 128, 4, 64, 128),     # production-ish tile
+])
+def test_ssd_intra_sweep(b, c, q, h, p, n):
+    rng = np.random.default_rng(b * 100 + q)
+    xc = rng.standard_normal((b, c, q, h, p)).astype(np.float32)
+    la = -np.abs(rng.standard_normal((b, c, q, h))).astype(np.float32) * 0.1
+    cum = np.cumsum(la, axis=2)
+    B = rng.standard_normal((b, c, q, n)).astype(np.float32)
+    C = rng.standard_normal((b, c, q, n)).astype(np.float32)
+    out = ops.ssd_intra(xc, cum, B, C)
+    want = ref.ssd_intra_ref(xc, cum, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_intra_is_causal():
+    """Changing future inputs must not change past outputs."""
+    rng = np.random.default_rng(7)
+    xc = rng.standard_normal((1, 1, 32, 1, 8)).astype(np.float32)
+    cum = np.cumsum(-np.abs(rng.standard_normal((1, 1, 32, 1))) * 0.1,
+                    axis=2).astype(np.float32)
+    B = rng.standard_normal((1, 1, 32, 4)).astype(np.float32)
+    C = rng.standard_normal((1, 1, 32, 4)).astype(np.float32)
+    out1 = np.asarray(ops.ssd_intra(xc, cum, B, C))
+    xc2 = xc.copy()
+    xc2[:, :, 20:] += 5.0
+    out2 = np.asarray(ops.ssd_intra(xc2, cum, B, C))
+    np.testing.assert_allclose(out1[:, :, :20], out2[:, :, :20], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,c,kh,g,hd,valid", [
+    (1, 64, 1, 1, 64, 64),
+    (2, 256, 2, 4, 64, 100),
+    (1, 2048, 4, 1, 128, 2048),
+    (2, 100, 1, 8, 64, 1),          # single valid slot
+    (1, 1000, 2, 2, 64, 999),       # ragged cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, c, kh, g, hd, valid, dtype):
+    q = _mk((b, kh, g, hd), dtype)
+    k = _mk((b, c, kh, hd), dtype)
+    v = _mk((b, c, kh, hd), dtype)
+    out = ops.decode_attention(q, k, v, jnp.asarray(valid, jnp.int32))
+    want = ref.decode_attention_ref(q, k, v, jnp.asarray(valid, jnp.int32))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_attention_ignores_dead_slots():
+    """Garbage beyond valid_len must not affect the output."""
+    q = _mk((1, 1, 2, 64), jnp.float32)
+    k = _mk((1, 128, 1, 64), jnp.float32)
+    v = _mk((1, 128, 1, 64), jnp.float32)
+    out1 = np.asarray(ops.decode_attention(q, k, v,
+                                           jnp.asarray(50, jnp.int32)))
+    k2 = k.at[:, 50:].set(1e9)
+    v2 = v.at[:, 50:].set(-1e9)
+    out2 = np.asarray(ops.decode_attention(q, k2, v2,
+                                           jnp.asarray(50, jnp.int32)))
+    np.testing.assert_allclose(out1, out2, atol=1e-6)

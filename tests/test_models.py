@@ -1,0 +1,147 @@
+"""Per-arch reduced-config smoke tests + serving-path consistency.
+
+Every assigned architecture instantiates its reduced config and runs one
+forward/train step on CPU asserting output shapes + no NaNs (deliverable
+f). Decode correctness: teacher-forced decode must match a longer prefill
+token-for-token (exercises every cache layout: ring, periodic, SSM state,
+cross-attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get, names
+from repro.models import (build_model, input_specs, model_flops,
+                          param_count, supports_shape)
+
+ALL_ARCHS = list(names())
+
+
+def make_batch(cfg, b=2, s=17, rng=None):
+    rng = rng or np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (b, s), dtype=np.int32)
+    if cfg.family == "encdec":
+        return {"audio_embeds": rng.standard_normal(
+            (b, 16, cfg.d_model)).astype(np.float32),
+            "tokens": toks[:, :9]}
+    if cfg.family == "vlm":
+        return {"vision": rng.standard_normal(
+            (b, 8, cfg.d_model)).astype(np.float32), "tokens": toks}
+    return {"tokens": toks}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), arch
+    # one SGD step moves the loss (gradients flow)
+    g = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                for x in jax.tree.leaves(g))
+    assert gnorm > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_prefill_decode_shapes(arch):
+    cfg = get(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, cache = 2, 16, 24
+    batch = make_batch(cfg, b, s)
+    logits, caches = jax.jit(
+        lambda p, bb: model.prefill(p, bb, cache_len=cache))(params, batch)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    pos = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    logits2, _ = jax.jit(model.decode_step)(
+        params, caches, {"token": tok, "pos": pos})
+    assert logits2.shape == (b, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-27b",
+                                  "mamba2-2.7b", "zamba2-7b",
+                                  "mixtral-8x7b"])
+def test_decode_matches_prefill_teacher_forced(arch):
+    """prefill(t[:k]) then decode t[k], t[k+1], ... must reproduce the
+    last-token logits of prefill(t[:k+j]) — the cache IS the sequence."""
+    cfg = get(arch).reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    b, k, extra = 2, 12, 4
+    toks = rng.integers(0, cfg.vocab, (b, k + extra), dtype=np.int32)
+    cache = k + extra
+    # decode path
+    logits, caches = jax.jit(
+        lambda p, bb: model.prefill(p, bb, cache_len=cache))(
+            params, {"tokens": toks[:, :k]})
+    dec_logits = [np.asarray(logits[:, -1], np.float32)]
+    step = jax.jit(model.decode_step)
+    for j in range(extra):
+        logits, caches = step(params, caches,
+                              {"token": toks[:, k + j:k + j + 1],
+                               "pos": jnp.asarray(k + j, jnp.int32)})
+        dec_logits.append(np.asarray(logits[:, -1], np.float32))
+    # prefill path references
+    for j in range(extra + 1):
+        ref_logits, _ = jax.jit(
+            lambda p, bb: model.prefill(p, bb, cache_len=cache))(
+                params, {"tokens": toks[:, :k + j]})
+        np.testing.assert_allclose(
+            dec_logits[j], np.asarray(ref_logits[:, -1], np.float32),
+            atol=2e-3, rtol=2e-3, err_msg=f"{arch} step {j}")
+
+
+def test_supports_shape_matrix():
+    """long_500k only for sub-quadratic archs, per the assignment."""
+    long = next(s for s in SHAPES if s.name == "long_500k")
+    expected_runs = {"mamba2-2.7b", "zamba2-7b", "mixtral-8x7b"}
+    runs = {a for a in ALL_ARCHS if supports_shape(get(a), long)}
+    assert runs == expected_runs
+    for s in SHAPES[:3]:
+        assert all(supports_shape(get(a), s) for a in ALL_ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get(arch)
+    for shape in SHAPES:
+        spec = input_specs(cfg, shape)
+        assert spec, (arch, shape.name)
+        for v in jax.tree.leaves(spec):
+            assert isinstance(v, jax.ShapeDtypeStruct)
+        if shape.kind == "decode":
+            assert "token" in spec and "pos" in spec
+        assert model_flops(cfg, shape) > 0
+
+
+def test_param_counts_sane():
+    """Full-config parameter counts land near the advertised sizes."""
+    expect = {
+        "gemma-7b": (7e9, 10e9),
+        "starcoder2-3b": (2.5e9, 4e9),
+        "gemma3-27b": (20e9, 30e9),
+        "qwen3-0.6b": (0.4e9, 0.8e9),
+        "arctic-480b": (350e9, 520e9),
+        "mixtral-8x7b": (40e9, 50e9),
+        "mamba2-2.7b": (2e9, 3.2e9),
+        "zamba2-7b": (5e9, 8.5e9),
+        "internvl2-2b": (1.5e9, 2.6e9),
+        "whisper-medium": (0.6e9, 0.95e9),   # released medium = 769 M
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get(arch))
+        assert lo <= n <= hi, (arch, n)
+    # MoE active << total
+    assert param_count(get("arctic-480b"), active_only=True) \
+        < 0.2 * param_count(get("arctic-480b"))

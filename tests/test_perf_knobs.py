@@ -1,0 +1,76 @@
+"""§Perf knobs are semantics-preserving: chunked CE == CE, int8 KV decode
+tracks fp decode (top-1 agreement), MoE shard layouts are math-invariant."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import build_model
+
+
+def test_chunked_ce_matches_plain():
+    c0 = get("qwen3-0.6b").reduced()
+    c1 = dataclasses.replace(c0, ce_chunk=4)
+    m0, m1 = build_model(c0), build_model(c1)
+    p = m0.init(jax.random.PRNGKey(0))
+    batch = {"tokens": np.random.default_rng(0).integers(
+        0, c0.vocab, (2, 33)).astype(np.int32)}
+    l0, _ = jax.jit(m0.loss_fn)(p, batch)
+    l1, _ = jax.jit(m1.loss_fn)(p, batch)
+    assert abs(float(l0) - float(l1)) < 2e-5
+
+
+def test_chunked_ce_unrolled_matches():
+    c0 = get("qwen3-0.6b").reduced()
+    c1 = dataclasses.replace(c0, ce_chunk=4, scan_layers=False)
+    m0, m1 = build_model(c0), build_model(c1)
+    p = m0.init(jax.random.PRNGKey(0))
+    batch = {"tokens": np.random.default_rng(1).integers(
+        0, c0.vocab, (2, 30)).astype(np.int32)}   # ragged vs 4 chunks
+    l0, _ = jax.jit(m0.loss_fn)(p, batch)
+    l1, _ = jax.jit(m1.loss_fn)(p, batch)
+    assert abs(float(l0) - float(l1)) < 2e-5
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-27b", "zamba2-7b"])
+def test_int8_kv_decode_top1_agrees(arch):
+    c0 = dataclasses.replace(get(arch).reduced(), dtype="float32")
+    c1 = dataclasses.replace(c0, kv_dtype="int8")
+    m0, m1 = build_model(c0), build_model(c1)
+    p = m0.init(jax.random.PRNGKey(0))
+    batch = {"tokens": np.random.default_rng(2).integers(
+        0, c0.vocab, (2, 12)).astype(np.int32)}
+    lg0, cc0 = jax.jit(lambda pp, bb: m0.prefill(pp, bb, cache_len=20))(
+        p, batch)
+    lg1, cc1 = jax.jit(lambda pp, bb: m1.prefill(pp, bb, cache_len=20))(
+        p, batch)
+    tok = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
+    d0, _ = jax.jit(m0.decode_step)(p, cc0,
+                                    {"token": tok,
+                                     "pos": jnp.asarray(12, jnp.int32)})
+    d1, _ = jax.jit(m1.decode_step)(p, cc1,
+                                    {"token": tok,
+                                     "pos": jnp.asarray(12, jnp.int32)})
+    assert float(jnp.max(jnp.abs(d0 - d1))) < 0.6
+    assert bool(jnp.all(jnp.argmax(d0[:, -1], -1)
+                        == jnp.argmax(d1[:, -1], -1)))
+    # cache really is int8
+    leaves = jax.tree.leaves(cc1)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+
+
+def test_moe_shard_layouts_invariant():
+    c0 = get("mixtral-8x7b").reduced()
+    m0 = build_model(c0)
+    p = m0.init(jax.random.PRNGKey(0))
+    batch = {"tokens": np.random.default_rng(3).integers(
+        0, c0.vocab, (2, 17)).astype(np.int32)}
+    ref = None
+    for shard in ("ep_ftp", "ep_fsdp", "ep_only"):
+        m = build_model(dataclasses.replace(c0, moe_shard=shard))
+        l, _ = jax.jit(m.loss_fn)(p, batch)
+        ref = float(l) if ref is None else ref
+        assert abs(float(l) - ref) < 1e-6

@@ -1,0 +1,95 @@
+"""Placement bridge: arch -> DAG lowering, fleet planning, partitioning."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get, names
+from repro.core import (PSOGAConfig, arch_to_dag, block_flops,
+                        contiguous_stages, plan_offload, stage_cut_cost,
+                        tpu_fleet_environment, uniform_stages)
+from repro.core.dag import topological_order
+
+PREFILL = SHAPES[1]
+FAST = PSOGAConfig(pop_size=32, max_iters=120, stall_iters=30)
+
+
+@pytest.mark.parametrize("arch", list(names()))
+def test_arch_to_dag_structure(arch):
+    cfg = get(arch)
+    dag = arch_to_dag(cfg, PREFILL)
+    dag.validate_acyclic()
+    assert dag.pinned[0] >= 0                      # input pinned (paper)
+    assert np.all(dag.compute >= 0)
+    assert dag.edge_mb.min() > 0
+    if cfg.family == "encdec":
+        # cross-attention fan-out: encoder output feeds every decoder block
+        out_deg = dag.out_degree()
+        assert out_deg.max() >= cfg.dec_layers
+    else:
+        n_expected = {"dense": cfg.n_layers + 2, "moe": cfg.n_layers + 2,
+                      "ssm": cfg.n_layers + 2,
+                      "vlm": cfg.n_layers + 3}.get(cfg.family)
+        if cfg.family == "hybrid":
+            n_expected = (cfg.n_layers
+                          + cfg.n_layers // cfg.hybrid_attn_every + 2)
+        assert dag.num_layers == n_expected
+
+
+def test_block_flops_scales_with_seq():
+    cfg = get("qwen3-0.6b")
+    f1 = block_flops(cfg, 1024)
+    f2 = block_flops(cfg, 2048)
+    assert 1.9 < f2 / f1 < 4.1          # linear proj + quadratic attn
+
+
+def test_plan_offload_feasible_and_contiguous():
+    env = tpu_fleet_environment()
+    plan = plan_offload(get("qwen3-0.6b"), PREFILL, env=env,
+                        deadline_ratio=2.0, pso=FAST, seed=0)
+    assert plan.result.feasible
+    # stages partition the layer set exactly
+    covered = np.concatenate([s.layers for s in plan.stages])
+    assert sorted(covered.tolist()) == list(range(plan.dag.num_layers))
+    # stages follow the topological order
+    order = topological_order(plan.dag)
+    pos = {int(j): i for i, j in enumerate(order)}
+    flat = [pos[int(j)] for s in plan.stages for j in s.layers]
+    assert flat == sorted(flat)
+    assert "stage[" in plan.summary()
+
+
+def test_psoga_beats_greedy_on_encdec_fleet():
+    """The branching whisper DAG is where global optimization pays
+    (paper's core claim, on the TPU fleet instantiation)."""
+    env = tpu_fleet_environment()
+    pso = plan_offload(get("whisper-medium"), PREFILL, env=env,
+                       deadline_ratio=1.5, pso=FAST, seed=0)
+    grd = plan_offload(get("whisper-medium"), PREFILL, env=env,
+                       deadline_ratio=1.5, algo="greedy")
+    assert pso.result.feasible
+    if grd.result.feasible:
+        assert pso.cost <= grd.cost + 1e-9
+
+
+def test_uniform_stage_baseline_and_cost():
+    env = tpu_fleet_environment()
+    dag = arch_to_dag(get("qwen3-0.6b"), PREFILL)
+    servers = [0, 1, 2]
+    x = uniform_stages(dag, servers)
+    assert set(np.unique(x)) <= set(servers)
+    stats = stage_cut_cost(dag, env, x)
+    assert stats["n_stages"] == len(servers)
+    assert stats["cross_mb"] > 0
+    # single-server placement: no crossing traffic
+    x0 = np.zeros(dag.num_layers, np.int64)
+    s0 = stage_cut_cost(dag, env, x0)
+    assert s0["cross_mb"] == 0 and s0["n_stages"] == 1
+
+
+def test_tight_deadline_forces_offload():
+    """With a tight SLO the plan cannot stay on the (slow) device."""
+    env = tpu_fleet_environment()
+    plan = plan_offload(get("gemma-7b"), PREFILL, env=env,
+                        deadline_ratio=1.2, pso=FAST, seed=0)
+    assert plan.result.feasible
+    tiers = {int(env.tier[s.server]) for s in plan.stages}
+    assert tiers - {2}, "expected at least one non-device stage"

@@ -1,0 +1,90 @@
+"""Algorithm 1 (cut-edge merging) properties + the paper's zoo anchors."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import merge_dags, preprocess, zoo
+from repro.core.dag import LayerDAG, topological_order
+from tests.test_simulator import random_dag
+
+
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 30))
+def test_preprocess_preserves_compute_and_acyclicity(seed, p):
+    rng = np.random.default_rng(seed)
+    dag = random_dag(rng, p)
+    small, group = preprocess(dag)
+    np.testing.assert_allclose(small.total_compute(), dag.total_compute())
+    small.validate_acyclic()
+    # group maps every original layer to a valid merged layer
+    assert group.shape == (p,)
+    assert group.min() >= 0 and group.max() < small.num_layers
+    # merged endpoints of every surviving edge differ
+    if small.num_edges:
+        assert np.all(small.edges[:, 0] != small.edges[:, 1])
+
+
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 30))
+def test_preprocess_fixed_point(seed, p):
+    """After preprocessing no intra-app cut-edge remains (Alg. 1 step 3)."""
+    rng = np.random.default_rng(seed)
+    dag = random_dag(rng, p)
+    small, _ = preprocess(dag)
+    out_deg = small.out_degree()
+    in_deg = small.in_degree()
+    for (u, v) in small.edges:
+        same_app = small.app_id[u] == small.app_id[v]
+        assert not (out_deg[u] == 1 and in_deg[v] == 1 and same_app)
+
+
+def test_chain_collapses_to_single_layer():
+    """VGG19/AlexNet are chains -> prePSO's one-node degenerate case."""
+    for name in ("alexnet", "vgg19"):
+        dag = zoo.build(name)
+        small, group = preprocess(dag)
+        assert small.num_layers == 1, name
+        assert np.all(group == 0)
+
+
+def test_googlenet_compression_ratio():
+    """Paper: ~48% of GoogleNet layers are compressed."""
+    dag = zoo.googlenet()
+    small, _ = preprocess(dag)
+    ratio = 1 - small.num_layers / dag.num_layers
+    assert 0.35 <= ratio <= 0.60, ratio
+
+
+def test_resnet_residuals_not_merged_through_adds():
+    dag = zoo.resnet101()
+    small, _ = preprocess(dag)
+    # residual adds have in-degree 2: they can merge with their successor
+    # chain but branch points persist -> strictly more than 1 layer
+    assert 1 < small.num_layers < dag.num_layers
+
+
+def test_merge_dags_offsets():
+    a = zoo.alexnet(pin_server=0)
+    b = zoo.alexnet(pin_server=1)
+    merged = merge_dags([a, b])
+    assert merged.num_layers == a.num_layers * 2
+    assert merged.num_apps == 2
+    assert merged.pinned[0] == 0
+    assert merged.pinned[a.num_layers] == 1
+    assert set(np.unique(merged.app_id)) == {0, 1}
+    merged.validate_acyclic()
+
+
+def test_zoo_anchors():
+    """Paper §V anchors: AlexNet 11 layers, max inter-layer dataset
+    < 1.1 MB; ResNet101 deep; all acyclic with pinned input."""
+    a = zoo.alexnet()
+    assert a.num_layers == 11
+    assert a.edge_mb.max() <= 1.1
+    v = zoo.vgg19()
+    assert v.num_layers == 25
+    r = zoo.resnet101()
+    assert r.num_layers > 300
+    g = zoo.googlenet()
+    for dag in (a, v, r, g):
+        dag.validate_acyclic()
+        assert dag.pinned[0] == 0 and np.all(dag.pinned[1:] == -1)
+        order = topological_order(dag)
+        assert order.shape[0] == dag.num_layers

@@ -1,0 +1,151 @@
+"""PSO-GA: convergence invariants, optimality on degenerate cases, and
+the paper's comparative claims (beats/equals Greedy and GA)."""
+import numpy as np
+import pytest
+
+from repro.core import (GAConfig, PSOGAConfig, SimProblem, greedy_offload,
+                        heft_makespan, merge_dags, paper_environment,
+                        pre_pso, run_ga, run_pso_ga, run_pso_linear,
+                        sample_environment, simulate_np, zoo)
+from repro.core.dag import LayerDAG
+
+FAST = PSOGAConfig(pop_size=40, max_iters=150, stall_iters=40)
+FAST_GA = GAConfig(pop_size=40, max_iters=150, stall_iters=40)
+
+
+@pytest.fixture(scope="module")
+def fig2():
+    env = sample_environment()
+    dag = LayerDAG(
+        compute=np.array([1.1, 1.92, 2.35, 2.12]) * env.power[0],
+        edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]]),
+        edge_mb=np.array([1.0, 1.0, 0.5, 0.5]),
+        app_id=np.zeros(4, np.int32), deadline=np.array([3.7]),
+        pinned=np.array([0, -1, -1, -1], np.int32))
+    return dag, env
+
+
+def brute_force_best(dag, env):
+    prob = SimProblem.build(dag, env)
+    s = env.num_servers
+    best_cost, best_x = np.inf, None
+    import itertools
+    for combo in itertools.product(range(s), repeat=dag.num_layers - 1):
+        x = np.array((int(dag.pinned[0]),) + combo)
+        r = simulate_np(prob, x, faithful=False)
+        if bool(r.feasible) and float(r.total_cost) < best_cost:
+            best_cost, best_x = float(r.total_cost), x
+    return best_cost, best_x
+
+
+def test_psoga_finds_global_optimum_fig2(fig2):
+    """4 layers x 6 servers = brute-forceable: PSO-GA must hit it."""
+    dag, env = fig2
+    best_cost, _ = brute_force_best(dag, env)
+    res = run_pso_ga(dag, env, PSOGAConfig(pop_size=60, max_iters=200,
+                                           stall_iters=60), seed=0)
+    assert res.feasible
+    assert res.best_cost <= best_cost * 1.0 + 1e-9
+
+
+def test_gbest_monotone(fig2):
+    dag, env = fig2
+    res = run_pso_ga(dag, env, PSOGAConfig(pop_size=20, max_iters=50),
+                     seed=1, record_history=True)
+    hist = res.history
+    assert hist is not None
+    assert np.all(np.diff(hist) <= 1e-12)   # non-increasing
+
+
+def test_assignment_respects_pins(fig2):
+    dag, env = fig2
+    res = run_pso_ga(dag, env, FAST, seed=2)
+    assert res.best_x[0] == dag.pinned[0]
+
+
+def test_single_server_env_is_exact():
+    env = sample_environment()
+    dag = zoo.alexnet(pin_server=0, deadline=1e9)
+    # restrict to one server by pinning everything
+    one = LayerDAG(compute=dag.compute, edges=dag.edges,
+                   edge_mb=dag.edge_mb, app_id=dag.app_id,
+                   deadline=dag.deadline,
+                   pinned=np.zeros(dag.num_layers, np.int32))
+    res = run_pso_ga(one, env, FAST, seed=0)
+    # everything on the free device: zero cost
+    assert res.feasible and res.best_cost == 0.0
+
+
+def test_psoga_beats_or_equals_greedy_alexnet():
+    """Paper Fig. 7(a): PSO-GA <= Greedy at every deadline."""
+    env = paper_environment()
+    base = zoo.alexnet(pin_server=0)
+    h, _ = heft_makespan(base, env)
+    for r in (1.5, 3.0, 8.0):
+        dag = base.with_deadline(np.array([r * h]))
+        pso = run_pso_ga(dag, env, FAST, seed=0)
+        grd = greedy_offload(dag, env)
+        if grd.feasible:
+            assert pso.feasible
+            assert pso.best_cost <= grd.best_cost + 1e-9, (r, pso, grd)
+
+
+def test_psoga_beats_or_equals_ga_googlenet():
+    """Paper Fig. 7(c): PSO-GA <= GA (branching DAG)."""
+    env = paper_environment()
+    base = zoo.googlenet(pin_server=0)
+    h, _ = heft_makespan(base, env)
+    dag = base.with_deadline(np.array([3.0 * h]))
+    pso = run_pso_ga(dag, env, FAST, seed=0)
+    ga = run_ga(dag, env, FAST_GA, seed=0)
+    assert pso.feasible
+    if ga.feasible:
+        assert pso.best_cost <= ga.best_cost * 1.05   # stochastic margin
+
+
+def test_pre_pso_expansion_valid():
+    env = paper_environment()
+    base = zoo.googlenet(pin_server=0)
+    h, _ = heft_makespan(base, env)
+    dag = base.with_deadline(np.array([5.0 * h]))
+    res = pre_pso(dag, env, FAST, seed=0)
+    assert res.best_x.shape == (dag.num_layers,)
+    assert res.best_x[0] == 0
+    # expanded placement cost == re-simulated cost (consistency)
+    prob = SimProblem.build(dag, env)
+    r = simulate_np(prob, res.best_x, faithful=False)
+    if res.feasible:
+        np.testing.assert_allclose(res.best_cost, float(r.total_cost),
+                                   rtol=1e-6)
+
+
+def test_pso_linear_runs(fig2):
+    dag, env = fig2
+    res = run_pso_linear(dag, env, FAST, seed=0)
+    assert res.best_x.shape == (4,)
+    assert res.iterations >= 1
+
+
+def test_loose_deadline_all_home_zero_cost():
+    """Paper Fig. 8(b): with a loose enough deadline everything stays on
+    the (free) end device -> zero system cost."""
+    env = paper_environment()
+    dag = zoo.alexnet(pin_server=0, deadline=1e9)
+    res = run_pso_ga(dag, env, FAST, seed=0)
+    assert res.feasible
+    assert res.best_cost <= 1e-9
+    assert np.all(res.best_x == 0)
+
+
+def test_multi_dnn_problem():
+    """Three DNNs on two devices scheduled jointly (Fig. 8 setting)."""
+    env = paper_environment()
+    dags = [zoo.alexnet(pin_server=i % 2) for i in range(3)]
+    merged = merge_dags(dags)
+    h, _ = heft_makespan(merged, env)
+    merged = merged.with_deadline(np.full(3, 4.0 * h))
+    res = run_pso_ga(merged, env, FAST, seed=0)
+    assert res.feasible
+    grd = greedy_offload(merged, env)
+    if grd.feasible:
+        assert res.best_cost <= grd.best_cost + 1e-9

@@ -1,0 +1,196 @@
+"""Algorithm-2 simulator: numpy oracle vs JAX scan, invariants, fidelity
+modes, and the paper's worked example (Fig. 2 / Tables I-III)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (Environment, SimProblem, build_simulator,
+                        sample_environment, simulate_np)
+from repro.core.dag import LayerDAG, topological_order
+
+# ---------------------------------------------------------------------------
+# random problem generators
+# ---------------------------------------------------------------------------
+
+
+def random_dag(rng: np.random.Generator, p: int, n_apps: int = 1
+               ) -> LayerDAG:
+    """Random acyclic graph: edges only i -> j with i < j."""
+    edges, mbs = [], []
+    for j in range(1, p):
+        n_par = rng.integers(1, min(j, 3) + 1)
+        for u in rng.choice(j, size=n_par, replace=False):
+            edges.append((int(u), j))
+            mbs.append(float(rng.uniform(0.05, 2.0)))
+    app = np.sort(rng.integers(0, n_apps, size=p)).astype(np.int32)
+    pinned = np.full(p, -1, np.int32)
+    return LayerDAG(compute=rng.uniform(0.1, 3.0, size=p),
+                    edges=np.asarray(edges, np.int32).reshape(-1, 2),
+                    edge_mb=np.asarray(mbs),
+                    app_id=app,
+                    deadline=rng.uniform(5.0, 50.0, size=n_apps),
+                    pinned=pinned)
+
+
+def random_env(rng: np.random.Generator, s: int) -> Environment:
+    bw = rng.uniform(1.0, 20.0, size=(s, s))
+    tier = rng.integers(0, 3, size=s).astype(np.int32)
+    return Environment(power=rng.uniform(0.5, 16.0, size=s),
+                       cost_per_sec=rng.uniform(0.0, 0.01, size=s),
+                       tier=tier, bandwidth=bw,
+                       tran_cost=rng.uniform(0.0, 1e-3, size=(s, s)))
+
+
+# ---------------------------------------------------------------------------
+# np == jax
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 24),
+       s=st.integers(2, 8), faithful=st.booleans())
+def test_np_matches_jax(seed, p, s, faithful):
+    rng = np.random.default_rng(seed)
+    dag = random_dag(rng, p)
+    env = random_env(rng, s)
+    prob = SimProblem.build(dag, env)
+    x = rng.integers(0, s, size=p)
+    ref = simulate_np(prob, x, faithful=faithful)
+    sim = build_simulator(prob, faithful=faithful)
+    out = sim(x)
+    np.testing.assert_allclose(np.asarray(out.end_times), ref.end_times,
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(out.total_cost), float(ref.total_cost),
+                               rtol=1e-5)
+    assert bool(out.feasible) == bool(ref.feasible)
+    np.testing.assert_allclose(float(out.makespan), float(ref.makespan),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+def test_makespan_lower_bounds(seed):
+    rng = np.random.default_rng(seed)
+    dag = random_dag(rng, int(rng.integers(3, 20)))
+    env = random_env(rng, int(rng.integers(2, 6)))
+    prob = SimProblem.build(dag, env)
+    x = rng.integers(0, env.num_servers, size=dag.num_layers)
+    res = simulate_np(prob, x, faithful=False)
+    # makespan >= bottleneck-server serial compute
+    for srv in range(env.num_servers):
+        sel = x == srv
+        if sel.any():
+            assert float(res.makespan) >= \
+                dag.compute[sel].sum() / env.power[srv] - 1e-9
+    # cost >= pure transmission cost of crossing edges
+    tx = sum(prob.tran_cost[x[u], x[v]] * mb
+             for (u, v), mb in zip(dag.edges, dag.edge_mb))
+    assert float(res.total_cost) >= tx - 1e-12
+
+
+@given(seed=st.integers(0, 10_000))
+def test_infeasible_iff_deadline_violated(seed):
+    rng = np.random.default_rng(seed)
+    dag = random_dag(rng, 8)
+    env = random_env(rng, 4)
+    prob = SimProblem.build(dag, env)
+    x = rng.integers(0, 4, size=8)
+    res = simulate_np(prob, x, faithful=False)
+    violated = np.any(res.app_completion > dag.deadline)
+    assert bool(res.feasible) == (not violated)
+
+
+def test_single_server_chain_exact():
+    """Chain on one server: makespan = sum of exec times; both modes agree
+    (same-server transfers are free/instant)."""
+    dag = LayerDAG(compute=np.array([1.0, 2.0, 3.0]),
+                   edges=np.array([[0, 1], [1, 2]]),
+                   edge_mb=np.array([1.0, 1.0]),
+                   app_id=np.zeros(3, np.int32),
+                   deadline=np.array([100.0]),
+                   pinned=np.full(3, -1, np.int32))
+    env = sample_environment()
+    prob = SimProblem.build(dag, env)
+    for faithful in (True, False):
+        res = simulate_np(prob, np.array([3, 3, 3]), faithful=faithful)
+        expect = 6.0 / env.power[3]
+        np.testing.assert_allclose(float(res.makespan), expect, rtol=1e-9)
+
+
+def test_forbidden_link_infeasible():
+    """device -> device transfers (no ad-hoc) make a placement infeasible."""
+    env = sample_environment()
+    dag = LayerDAG(compute=np.array([1.0, 1.0]),
+                   edges=np.array([[0, 1]]), edge_mb=np.array([1.0]),
+                   app_id=np.zeros(2, np.int32), deadline=np.array([1e9]),
+                   pinned=np.full(2, -1, np.int32))
+    # extend env with a second device by reusing index 0 twice is not
+    # possible; instead test edge->? all links exist in the sample env, so
+    # fabricate a 2-device env:
+    env2 = Environment(power=np.array([1.0, 1.0]),
+                       cost_per_sec=np.zeros(2),
+                       tier=np.array([2, 2], np.int32),
+                       bandwidth=np.zeros((2, 2)),
+                       tran_cost=np.zeros((2, 2)))
+    prob = SimProblem.build(dag, env2)
+    res = simulate_np(prob, np.array([0, 1]))
+    assert not bool(res.feasible)
+    res_same = simulate_np(prob, np.array([0, 0]))
+    assert bool(res_same.feasible)
+
+
+# ---------------------------------------------------------------------------
+# the paper's worked example (Fig. 2)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def fig2():
+    env = sample_environment()
+    dag = LayerDAG(
+        compute=np.array([1.1, 1.92, 2.35, 2.12]) * env.power[0],
+        edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]]),
+        edge_mb=np.array([1.0, 1.0, 0.5, 0.5]),
+        app_id=np.zeros(4, np.int32), deadline=np.array([3.7]),
+        pinned=np.array([0, -1, -1, -1], np.int32))
+    return dag, env
+
+
+def test_fig2_greedy_matches_paper(fig2):
+    """(0,1,2,1) completes ~3.65 s (paper Fig. 2(b))."""
+    dag, env = fig2
+    prob = SimProblem.build(dag, env)
+    res = simulate_np(prob, np.array([0, 1, 2, 1]), faithful=False)
+    assert 3.4 <= float(res.makespan) <= 3.8
+    assert bool(res.feasible)
+
+
+def test_fig2_optimal_matches_paper(fig2):
+    """(0,1,2,3) completes ~3.41 s (paper Fig. 2(c)) and is feasible."""
+    dag, env = fig2
+    prob = SimProblem.build(dag, env)
+    res = simulate_np(prob, np.array([0, 1, 2, 3]), faithful=False)
+    assert 3.1 <= float(res.makespan) <= 3.6
+    assert bool(res.feasible)
+
+
+def test_fig2_property_examples(fig2):
+    """(0,0,2,3) exceeds the 3.7 s deadline ('more than 4 s', §IV-B) and
+    (0,0,1,1) is ~5 s — the paper's Property 3/4 examples."""
+    dag, env = fig2
+    prob = SimProblem.build(dag, env)
+    r1 = simulate_np(prob, np.array([0, 0, 2, 3]), faithful=False)
+    assert float(r1.makespan) > 3.7 and not bool(r1.feasible)
+    r2 = simulate_np(prob, np.array([0, 0, 1, 1]), faithful=False)
+    assert float(r2.makespan) > 4.5
+
+
+def test_faithful_mode_drops_parent_gating(fig2):
+    """The printed recurrence starts l3 before parents finish — strictly
+    earlier makespan (the typo DESIGN.md §2 documents)."""
+    dag, env = fig2
+    prob = SimProblem.build(dag, env)
+    x = np.array([0, 1, 2, 3])
+    t_faithful = float(simulate_np(prob, x, faithful=True).makespan)
+    t_gated = float(simulate_np(prob, x, faithful=False).makespan)
+    assert t_faithful < t_gated

@@ -1,0 +1,236 @@
+"""optim / data / checkpoint / runtime unit + property tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get
+from repro.configs.base import ShapeSpec
+from repro.data import DataConfig, host_slice, make_stream
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, global_norm, zero1_pspecs)
+from repro.optim.compression import (compress_error_feedback,
+                                     init_compression, quantize_int8)
+from repro.runtime import (FailureInjector, SimulatedFailure,
+                           StragglerDetector, best_mesh_shape,
+                           run_with_restarts)
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.ones((8, 8)) * 3.0}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.2, warmup_steps=5, total_steps=100,
+                      weight_decay=0.0)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    l0 = float(loss(params))
+    for _ in range(60):
+        params, state, _ = adamw_update(jax.grad(loss)(params), state,
+                                        params, cfg)
+    assert float(loss(params)) < 1e-2 * l0
+
+
+def test_grad_clip_applied():
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0, total_steps=10)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw_update(g, state, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+    # effective update uses clipped grad; second moment small
+    assert float(global_norm(g)) == pytest.approx(200.0)
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+           for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1.0)
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_zero1_pspecs_no_duplicate_axes():
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    params = {"a": jax.ShapeDtypeStruct((16, 8), jnp.float32),
+              "b": jax.ShapeDtypeStruct((3,), jnp.float32),
+              "c": jax.ShapeDtypeStruct((4, 4, 4), jnp.float32)}
+    specs = {"a": P(None, "model"), "b": P(None),
+             "c": P("model", "data", None)}
+    z = zero1_pspecs(specs, params, mesh, ("data",))
+    # "a": data added on the largest free divisible axis (16)
+    assert z["a"] == P("data", "model")
+    # "c": data already used -> untouched
+    assert z["c"] == P("model", "data", None)
+    # every axis appears at most once per spec
+    for spec in jax.tree.leaves(z, is_leaf=lambda x: isinstance(x, P)):
+        flat = [a for e in spec for a in
+                (e if isinstance(e, tuple) else (e,)) if a]
+        assert len(flat) == len(set(flat))
+
+
+@given(seed=st.integers(0, 1000))
+def test_int8_quantization_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    q, scale = quantize_int8(g)
+    err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(g))
+    assert err.max() <= float(scale) * 0.5 + 1e-7
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of decompressed grads over steps tracks the true sum (the
+    residual never grows unboundedly)."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(64, np.float32)
+    sent_sum = np.zeros(64, np.float32)
+    state = init_compression({"g": jnp.zeros(64)})
+    for _ in range(50):
+        g = rng.standard_normal(64).astype(np.float32)
+        true_sum += g
+        out, state = compress_error_feedback({"g": jnp.asarray(g)}, state)
+        sent_sum += np.asarray(out["g"])
+    resid = np.abs(np.asarray(state.error["g"]))
+    np.testing.assert_allclose(sent_sum + np.asarray(state.error["g"]),
+                               true_sum, atol=1e-3)
+    assert resid.max() < 0.2      # residual stays one-quantum sized
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_stream_deterministic_and_resumable():
+    cfg = get("qwen3-0.6b").reduced()
+    shape = ShapeSpec("t", 32, 4, "train")
+    s1, s2 = make_stream(cfg, shape), make_stream(cfg, shape)
+    for i in (0, 7, 123):
+        np.testing.assert_array_equal(s1.batch(i)["tokens"],
+                                      s2.batch(i)["tokens"])
+    it = s1.at(7)
+    np.testing.assert_array_equal(next(it)["tokens"],
+                                  s2.batch(7)["tokens"])
+    assert s1.batch(0)["tokens"].shape == (4, 33)
+    assert s1.batch(0)["tokens"].max() < cfg.vocab
+
+
+def test_stream_modalities():
+    shape = ShapeSpec("t", 32, 2, "train")
+    enc = make_stream(get("whisper-medium").reduced(), shape).batch(0)
+    assert "audio_embeds" in enc and enc["tokens"].shape[1] == 32 // 8 + 1
+    vlm = make_stream(get("internvl2-2b").reduced(), shape).batch(0)
+    assert "vision" in vlm
+
+
+def test_host_slice():
+    assert host_slice(16, 0, 4) == slice(0, 4)
+    assert host_slice(16, 3, 4) == slice(12, 16)
+    with pytest.raises(ValueError):
+        host_slice(10, 0, 4)
+
+
+def test_bytes_source(tmp_path):
+    p = tmp_path / "corpus.txt"
+    p.write_text("hello world " * 100)
+    cfg = get("qwen3-0.6b").reduced()
+    shape = ShapeSpec("t", 16, 2, "train")
+    s = make_stream(cfg, shape, DataConfig(source="bytes", path=str(p)))
+    b = s.batch(0)["tokens"]
+    assert b.shape == (2, 17)
+    assert b.max() < 256                       # byte-level
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_keep_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": (jnp.asarray(1), [jnp.ones(2)] )}
+    for s in (1, 5, 9):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.steps() == [5, 9]
+    assert mgr.latest_step() == 9
+    back = mgr.restore()
+    np.testing.assert_array_equal(back["params"]["w"],
+                                  np.arange(6.0).reshape(2, 3))
+    assert isinstance(back["opt"], tuple)
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"x": jnp.zeros(2)}, blocking=True)
+    os.makedirs(tmp_path / "step_00000007.tmp")     # crashed save
+    assert mgr.latest_step() == 3
+    mgr.restore()                                    # no error
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.ones(4)})
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# runtime
+# ---------------------------------------------------------------------------
+
+def test_failure_injection_and_restart():
+    inj = FailureInjector(fail_at=(2, 5))
+    seen = []
+
+    latest = {"v": None}
+
+    def body(start):
+        for s in range(start, 8):
+            inj.maybe_fail(s)
+            seen.append(s)
+            latest["v"] = s
+        return 7
+
+    assert run_with_restarts(body, lambda: latest["v"]) == 7
+    assert seen == [0, 1, 2, 3, 4, 5, 6, 7]   # 2 and 5 retried post-crash
+
+
+def test_restart_gives_up():
+    inj = FailureInjector(p_fail=1.0)
+
+    def body(start):
+        inj.maybe_fail(start)
+        return start
+
+    with pytest.raises(SimulatedFailure):
+        run_with_restarts(body, lambda: None, max_restarts=3)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(warmup=3)
+    flags = [det.update(1.0 + 0.01 * i) for i in range(20)]
+    assert not any(flags)
+    assert det.update(10.0)
+    assert det.flagged == 1
+    # stats not polluted by the outlier
+    assert det.mean < 2.0
+
+
+def test_best_mesh_shape():
+    assert best_mesh_shape(512, 16, pod=2) == (2, 16, 16)
+    assert best_mesh_shape(256, 16) == (16, 16)
+    assert best_mesh_shape(7, 2) == (3, 2)
+    with pytest.raises(ValueError):
+        best_mesh_shape(8, 16)

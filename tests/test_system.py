@@ -1,0 +1,41 @@
+"""End-to-end behaviour: the paper's pipeline (plan -> place -> run)
+stitched through the framework on one reduced architecture."""
+import numpy as np
+
+from repro.configs import SHAPES, get
+from repro.configs.base import ShapeSpec
+from repro.core import PSOGAConfig, plan_offload, tpu_fleet_environment
+from repro.launch.serve import Server
+from repro.launch.train import Trainer, TrainerConfig
+from repro.optim import AdamWConfig
+
+
+def test_plan_then_train_then_serve(tmp_path):
+    arch = "qwen3-0.6b"
+
+    # 1. the paper's decision: place the full model over the fleet
+    plan = plan_offload(get(arch), SHAPES[1],
+                        env=tpu_fleet_environment(), deadline_ratio=1.5,
+                        pso=PSOGAConfig(pop_size=24, max_iters=80,
+                                        stall_iters=25), seed=0)
+    assert plan.result.feasible
+    assert len(plan.stages) >= 1
+
+    # 2. train the reduced config with checkpointing
+    cfg = get(arch).reduced()
+    out = Trainer(
+        cfg, ShapeSpec("sys", 64, 4, "train"),
+        TrainerConfig(steps=8, ckpt_dir=str(tmp_path), ckpt_every=4,
+                      log_every=2),
+        AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=8)).train()
+    assert out["final_step"] == 7
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0]
+
+    # 3. serve the trained family
+    srv = Server(cfg, batch=2, prompt_len=8, max_new=4, eos_id=-1)
+    params = srv.init_params()
+    res = srv.generate(params, {"tokens": np.random.default_rng(0)
+                                .integers(2, cfg.vocab, (2, 8))
+                                .astype(np.int32)})
+    assert res["tokens"].shape == (2, 4)
