@@ -1,7 +1,12 @@
 """PSO-GA engine throughput: jitted swarm-iterations/second and particle
 evaluations/second vs problem size — the performance of the paper's
 algorithm as a vmapped/jitted JAX program (the reproduction's own compute
-layer; the paper ran seconds-per-iteration on a Pentium G3250)."""
+layer; the paper ran seconds-per-iteration on a Pentium G3250).
+
+Also benchmarks fleet planning: the sequential per-problem loop (one
+re-traced ``run_pso_ga`` per problem) vs the batched fleet solver
+(``run_pso_ga_batch``, DESIGN.md §4) at N ∈ {1, 8, 64} heterogeneous
+problems (EXPERIMENTS.md §Perf)."""
 from __future__ import annotations
 
 import argparse
@@ -10,11 +15,53 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (PSOGAConfig, paper_environment, zoo)
+from repro.core import (PSOGAConfig, heft_makespan, paper_environment,
+                        run_pso_ga, run_pso_ga_batch, zoo)
 from repro.core.pso_ga import _SwarmState, _make_step, init_swarm
 from repro.core.simulator import SimProblem
 
 from .common import print_csv
+
+#: moderate budget so the N=64 fleet stays CPU-friendly
+FLEET_CFG = PSOGAConfig(pop_size=32, max_iters=80, stall_iters=25)
+
+
+def make_fleet(n: int, env=None):
+    """N heterogeneous problems: mixed nets, pins, and deadline ratios."""
+    env = env or paper_environment()
+    problems = []
+    for i in range(n):
+        net = ("alexnet", "vgg19", "googlenet")[i % 3]
+        dag = zoo.build(net, pin_server=i % 10)
+        h, _ = heft_makespan(dag, env)
+        ratio = (1.5, 3.0, 5.0, 8.0)[i % 4]
+        problems.append((dag.with_deadline(np.array([ratio * h])), env))
+    return problems
+
+
+def bench_fleet(n: int, cfg: PSOGAConfig = FLEET_CFG):
+    problems = make_fleet(n)
+    t0 = time.time()
+    seq = [run_pso_ga(dag, env, cfg, seed=i)
+           for i, (dag, env) in enumerate(problems)]
+    t_seq = time.time() - t0
+    t0 = time.time()
+    bat = run_pso_ga_batch(problems, cfg, seed=list(range(n)))
+    t_batch = time.time() - t0
+    t0 = time.time()                 # second call hits the compiled cache
+    run_pso_ga_batch(problems, cfg, seed=list(range(n)))
+    t_cached = time.time() - t0
+    match = sum(a.best_fitness == b.best_fitness
+                for a, b in zip(seq, bat))
+    return {
+        "n_problems": n,
+        "seq_s": t_seq,
+        "batch_s": t_batch,
+        "batch_cached_s": t_cached,
+        "speedup": t_seq / t_batch,
+        "speedup_cached": t_seq / t_cached,
+        "fitness_match": f"{match}/{n}",
+    }
 
 
 def bench_net(net: str, pop: int = 100, iters: int = 50):
@@ -49,11 +96,27 @@ def bench_net(net: str, pop: int = 100, iters: int = 50):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pop", type=int, default=100)
+    ap.add_argument("--skip-fleet", action="store_true",
+                    help="skip the sequential-vs-batched fleet benchmark")
+    ap.add_argument("--fleet-sizes", type=int, nargs="*", default=[1, 8, 64])
     args = ap.parse_args()
     rows = [bench_net(n, pop=args.pop)
             for n in ("alexnet", "vgg19", "googlenet", "resnet101")]
     print_csv(rows, ["net", "layers", "pop", "us_per_iter", "evals_per_s",
                      "layersteps_per_s"])
+    if not args.skip_fleet:
+        fleet_rows = []
+        for n in args.fleet_sizes:
+            row = bench_fleet(n)
+            print(f"# fleet N={n}: seq {row['seq_s']:.2f}s, "
+                  f"batch {row['batch_s']:.2f}s "
+                  f"({row['speedup']:.1f}x; cached "
+                  f"{row['speedup_cached']:.1f}x), "
+                  f"fitness match {row['fitness_match']}", flush=True)
+            fleet_rows.append(row)
+        print_csv(fleet_rows, ["n_problems", "seq_s", "batch_s",
+                               "batch_cached_s", "speedup",
+                               "speedup_cached", "fitness_match"])
 
 
 if __name__ == "__main__":

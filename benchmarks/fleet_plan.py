@@ -1,6 +1,11 @@
 """The paper's technique as a framework feature: cost-driven placement of
 each assigned architecture's serving DAG over the heterogeneous TPU fleet
-(PSO-GA vs Greedy vs uniform depth-split), per deadline ratio."""
+(PSO-GA vs Greedy vs uniform depth-split), per deadline ratio.
+
+All (arch × ratio) PSO-GA problems are solved in ONE batched fleet via
+``plan_offload_batch`` (DESIGN.md §4) — one compiled program instead of a
+re-traced ``while_loop`` per cell.
+"""
 from __future__ import annotations
 
 import argparse
@@ -10,7 +15,7 @@ import numpy as np
 
 from repro.configs import SHAPES, get, names
 from repro.core import (PSOGAConfig, arch_to_dag, heft_makespan,
-                        plan_offload, stage_cut_cost,
+                        plan_offload, plan_offload_batch, stage_cut_cost,
                         tpu_fleet_environment, uniform_stages)
 from repro.core.simulator import SimProblem, simulate_np
 
@@ -22,36 +27,44 @@ FAST = PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40)
 def run(archs, ratios=(1.2, 1.5, 3.0)):
     env = tpu_fleet_environment()
     shape = SHAPES[1]                              # prefill_32k
+    cells = [(arch, ratio) for arch in archs for ratio in ratios]
+
+    # one batched PSO-GA fleet for every (arch, ratio) cell
+    t0 = time.time()
+    plans = plan_offload_batch(
+        [(get(arch), shape, ratio) for arch, ratio in cells],
+        env=env, pso=FAST, seed=0)
+    batch_wall = time.time() - t0
+    print(f"# batched PSO-GA: {len(cells)} problems in {batch_wall:.2f}s "
+          f"({batch_wall / len(cells):.3f}s/problem)", flush=True)
+
     rows = []
-    for arch in archs:
+    for (arch, ratio), pso in zip(cells, plans):
         cfg = get(arch)
-        for ratio in ratios:
-            t0 = time.time()
-            pso = plan_offload(cfg, shape, env=env, deadline_ratio=ratio,
-                               pso=FAST, seed=0)
-            grd = plan_offload(cfg, shape, env=env, deadline_ratio=ratio,
-                               algo="greedy")
-            # uniform depth split across 1 cloud + 1 edge + home device
-            dag = pso.dag
-            servers = [int(env.servers_of_tier(0)[0]),
-                       int(env.servers_of_tier(1)[0]),
-                       int(dag.pinned[0])]
-            xu = uniform_stages(dag, servers)
-            xu[0] = dag.pinned[0]
-            prob = SimProblem.build(dag, env)
-            ru = simulate_np(prob, xu, faithful=False)
-            rows.append({
-                "arch": arch, "ratio": ratio,
-                "psoga_cost": pso.cost,
-                "greedy_cost": grd.cost if grd.result.feasible else -1.0,
-                "uniform_cost": float(ru.total_cost)
-                if bool(ru.feasible) else -1.0,
-                "psoga_stages": len(pso.stages),
-                "wall_s": time.time() - t0,
-            })
-            print(f"# {arch} r={ratio}: psoga=${pso.cost:.4f} "
-                  f"greedy=${rows[-1]['greedy_cost']:.4f} "
-                  f"uniform=${rows[-1]['uniform_cost']:.4f}", flush=True)
+        t0 = time.time()
+        grd = plan_offload(cfg, shape, env=env, deadline_ratio=ratio,
+                           algo="greedy")
+        # uniform depth split across 1 cloud + 1 edge + home device
+        dag = pso.dag
+        servers = [int(env.servers_of_tier(0)[0]),
+                   int(env.servers_of_tier(1)[0]),
+                   int(dag.pinned[0])]
+        xu = uniform_stages(dag, servers)
+        xu[0] = dag.pinned[0]
+        prob = SimProblem.build(dag, env)
+        ru = simulate_np(prob, xu, faithful=False)
+        rows.append({
+            "arch": arch, "ratio": ratio,
+            "psoga_cost": pso.cost,
+            "greedy_cost": grd.cost if grd.result.feasible else -1.0,
+            "uniform_cost": float(ru.total_cost)
+            if bool(ru.feasible) else -1.0,
+            "psoga_stages": len(pso.stages),
+            "wall_s": (time.time() - t0) + batch_wall / len(cells),
+        })
+        print(f"# {arch} r={ratio}: psoga=${pso.cost:.4f} "
+              f"greedy=${rows[-1]['greedy_cost']:.4f} "
+              f"uniform=${rows[-1]['uniform_cost']:.4f}", flush=True)
     return rows
 
 

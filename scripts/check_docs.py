@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Fail if any `DESIGN.md §N` / `EXPERIMENTS.md §X` citation dangles.
+
+Source docstrings cite design/experiment docs by section
+(e.g. ``see DESIGN.md §2``). This checker greps the python sources for
+those citations and verifies (a) the cited file exists and (b) it
+contains a markdown heading carrying the cited section token (a heading
+line matching ``#... §<token>``). Run directly, or via
+``tests/test_docs_citations.py`` so the suite keeps docs honest.
+
+Exit status: 0 clean, 1 dangling citations (listed on stdout).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+#: directories whose python files may cite the docs
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "scripts")
+#: a citation: the doc name, optionally followed by a §section token
+CITE_RE = re.compile(r"(DESIGN|EXPERIMENTS)\.md(?:\s*§([A-Za-z0-9_]+))?")
+#: meta-syntax placeholders ("DESIGN.md §N") used when talking ABOUT the
+#: citation convention itself — not citations of a concrete section
+PLACEHOLDER_SECTIONS = {"N", "X"}
+
+
+def doc_sections(doc_path: Path) -> Set[str]:
+    """Section tokens present as headings in a markdown file."""
+    if not doc_path.exists():
+        return set()
+    tokens: Set[str] = set()
+    for line in doc_path.read_text().splitlines():
+        if line.lstrip().startswith("#"):
+            tokens.update(re.findall(r"§([A-Za-z0-9_]+)", line))
+    return tokens
+
+
+def find_citations(repo: Path = REPO) -> List[Tuple[str, int, str, str]]:
+    """All (relpath, lineno, doc, section) citations in scanned sources.
+
+    ``section`` is '' for bare mentions (``see DESIGN.md``), which only
+    require the file to exist.
+    """
+    cites = []
+    for d in SCAN_DIRS:
+        for py in sorted((repo / d).rglob("*.py")):
+            rel = py.relative_to(repo).as_posix()
+            for lineno, line in enumerate(py.read_text().splitlines(), 1):
+                for m in CITE_RE.finditer(line):
+                    cites.append((rel, lineno, f"{m.group(1)}.md",
+                                  m.group(2) or ""))
+    return cites
+
+
+def find_dangling(repo: Path = REPO) -> List[str]:
+    """Human-readable complaints for every citation that doesn't resolve."""
+    sections: Dict[str, Set[str]] = {
+        doc: doc_sections(repo / doc) for doc in ("DESIGN.md",
+                                                  "EXPERIMENTS.md")}
+    problems = []
+    for rel, lineno, doc, sec in find_citations(repo):
+        if sec in PLACEHOLDER_SECTIONS:
+            sec = ""
+        if not (repo / doc).exists():
+            problems.append(f"{rel}:{lineno}: cites missing file {doc}")
+        elif sec and sec not in sections[doc]:
+            problems.append(
+                f"{rel}:{lineno}: cites {doc} §{sec} but {doc} has no "
+                f"heading with §{sec} (has: "
+                f"{', '.join(sorted(sections[doc])) or 'none'})")
+    return problems
+
+
+def main() -> int:
+    cites = find_citations()
+    problems = find_dangling()
+    for p in problems:
+        print(p)
+    print(f"# check_docs: {len(cites)} citations, "
+          f"{len(problems)} dangling")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

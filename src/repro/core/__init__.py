@@ -10,19 +10,25 @@ Public surface:
                                             — paper §V-B competitors
   * zoo                                     — AlexNet/VGG19/GoogleNet/ResNet101
   * placement / partition                   — TPU-fleet bridge (DESIGN.md §3)
+  * batch / run_pso_ga_batch                — fleet-scale batched solver
+                                              (DESIGN.md §4)
 """
 from .dag import LayerDAG, merge_dags, preprocess, topological_order
 from .environment import (CLOUD, DEVICE, EDGE, Environment,
                           paper_environment, sample_environment,
                           tpu_fleet_environment)
 from .fitness import INFEASIBLE_OFFSET, fitness_key
-from .simulator import SimProblem, SimResult, build_simulator, simulate_np
-from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga
+from .simulator import (PaddedProblem, SimProblem, SimResult,
+                        build_simulator, pad_problem, simulate_np,
+                        simulate_padded)
+from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga, swarm_step
+from .batch import pack_problems, run_pso_ga_batch
 from .baselines import (GAConfig, greedy_offload, heft_makespan, pre_pso,
                         run_ga, run_pso_linear)
 from .partition import Stage, contiguous_stages, stage_cut_cost, \
     uniform_stages
-from .placement import OffloadPlan, arch_to_dag, block_flops, plan_offload
+from .placement import (OffloadPlan, arch_to_dag, block_flops, plan_offload,
+                        plan_offload_batch)
 from . import zoo
 
 __all__ = [
@@ -31,9 +37,12 @@ __all__ = [
     "tpu_fleet_environment", "CLOUD", "EDGE", "DEVICE",
     "INFEASIBLE_OFFSET", "fitness_key",
     "SimProblem", "SimResult", "build_simulator", "simulate_np",
-    "PSOGAConfig", "PSOGAResult", "run_pso_ga",
+    "PaddedProblem", "pad_problem", "simulate_padded",
+    "PSOGAConfig", "PSOGAResult", "run_pso_ga", "swarm_step",
+    "pack_problems", "run_pso_ga_batch",
     "GAConfig", "greedy_offload", "heft_makespan", "pre_pso", "run_ga",
     "run_pso_linear", "zoo",
     "Stage", "contiguous_stages", "stage_cut_cost", "uniform_stages",
     "OffloadPlan", "arch_to_dag", "block_flops", "plan_offload",
+    "plan_offload_batch",
 ]

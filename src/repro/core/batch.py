@@ -1,0 +1,220 @@
+"""Fleet-scale batched PSO-GA: solve N heterogeneous offloading problems
+in ONE jitted program (DESIGN.md §4).
+
+The sequential solver re-traces and re-compiles ``lax.while_loop`` per
+problem — fatal when a production planner must place many (DAG, env)
+pairs per second. This module packs N heterogeneous ``SimProblem``s into
+a single ``PaddedProblem`` whose leaves carry a leading problem axis
+(layers padded to ``max_p``, servers to ``max_S``, with validity encoded
+so padded layers are zero-cost no-ops and padded servers unreachable),
+then runs the entire fleet of swarms as ``vmap``-over-problems of
+``swarm_step`` inside ONE ``lax.while_loop``.
+
+Convergence is tracked per problem: a problem whose stall counter hits
+``cfg.stall_iters`` (or that reaches ``cfg.max_iters``) is *frozen* — its
+whole swarm state passes through unchanged while the rest of the fleet
+keeps iterating — so every problem's trajectory is exactly what the
+sequential solver would have produced, and the loop exits when the last
+problem converges.
+
+Because each problem keeps its own PRNG key (seeded exactly like
+``run_pso_ga``), its own link-aware initial swarm, and mutation/crossover
+bounds drawn from its TRUE ``(p, S)`` sizes, the batched solver matches
+the sequential solver gene-for-gene in fitness (see
+``tests/test_batch.py::test_batched_matches_sequential``).
+
+Compiled programs are cached per config, with jit specializing on the
+``(N, max_p, max_S, ...)`` shape bucket underneath (``max_p``/``max_S``
+round up to powers of two in ``pack_problems``), so repeated fleets with
+similar shapes skip retracing entirely.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dag import LayerDAG
+from .environment import Environment
+from .fitness import fitness_key
+from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
+                     swarm_step)
+from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
+
+__all__ = ["pack_problems", "run_pso_ga_batch", "bucket_size",
+           "runner_cache_info"]
+
+ProblemLike = Union[SimProblem, Tuple[LayerDAG, Environment]]
+
+
+def bucket_size(n: int, floor: int = 8) -> int:
+    """Round up to the next power of two (>= floor) — the shape bucket."""
+    return max(floor, 1 << max(0, int(n) - 1).bit_length())
+
+
+def _as_problems(problems: Sequence[ProblemLike]) -> List[SimProblem]:
+    out = []
+    for pr in problems:
+        if isinstance(pr, SimProblem):
+            out.append(pr)
+        else:
+            dag, env = pr
+            out.append(SimProblem.build(dag, env))
+    return out
+
+
+def pack_problems(problems: Sequence[ProblemLike],
+                  bucket: bool = True) -> PaddedProblem:
+    """Pack N heterogeneous problems into one stacked ``PaddedProblem``.
+
+    Every leaf gains a leading ``N`` axis; per-problem true sizes live in
+    the ``num_layers`` / ``num_servers`` / ``num_apps`` fields (shape
+    (N,)). With ``bucket=True`` the layer/server axes round up to power-
+    of-two buckets so fleets of similar shapes share compiled programs.
+    """
+    probs = _as_problems(problems)
+    if not probs:
+        raise ValueError("pack_problems needs at least one problem")
+    max_p = max(pr.num_layers for pr in probs)
+    max_S = max(pr.num_servers for pr in probs)
+    if bucket:
+        max_p, max_S = bucket_size(max_p), bucket_size(max_S, floor=4)
+    max_in = max(pr.parent_idx.shape[1] for pr in probs)
+    max_out = max(pr.child_idx.shape[1] for pr in probs)
+    max_apps = max(pr.num_apps for pr in probs)
+    padded = [pad_problem(pr, max_p=max_p, max_S=max_S, max_in=max_in,
+                          max_out=max_out, max_apps=max_apps)
+              for pr in probs]
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *padded)
+
+
+# --------------------------------------------------------------------------
+# compiled fleet runner, cached per shape bucket
+# --------------------------------------------------------------------------
+
+_RUNNER_CACHE: Dict[tuple, Callable] = {}
+
+
+def runner_cache_info() -> Tuple[PSOGAConfig, ...]:
+    """Configs currently holding a compiled fleet runner."""
+    return tuple(_RUNNER_CACHE)
+
+
+def _done(state: _SwarmState, cfg: PSOGAConfig) -> jnp.ndarray:
+    """(N,) bool — which problems have hit the paper's stopping rule."""
+    return (state.it >= cfg.max_iters) | (state.stall >= cfg.stall_iters)
+
+
+def _fleet_runner(cfg: PSOGAConfig) -> Callable:
+    """Jitted ``(ppb, keys, X0b) -> final _SwarmState`` for one config.
+
+    One cache entry per ``cfg`` (the config is baked into the traced
+    loop); jit's own cache handles shape specialization underneath, and
+    the power-of-two buckets of ``pack_problems`` keep the number of
+    distinct ``(max_p, max_S)`` shapes it sees small. Distinct fleet
+    sizes N still trace separately — batch at stable sizes if that
+    matters.
+    """
+    cached = _RUNNER_CACHE.get(cfg)
+    if cached is not None:
+        return cached
+
+    vstep = jax.vmap(lambda pp, st: swarm_step(pp, st, cfg))
+    vfit = jax.vmap(jax.vmap(
+        lambda pp, x: fitness_key(simulate_padded(pp, x, cfg.faithful_sim)),
+        in_axes=(None, 0)))
+
+    def run(ppb: PaddedProblem, keys: jnp.ndarray,
+            X0b: jnp.ndarray) -> _SwarmState:
+        n = X0b.shape[0]
+        f0 = vfit(ppb, X0b)                                    # (N, P)
+        i0 = jnp.argmin(f0, axis=1)                            # (N,)
+        gbest_x = jnp.take_along_axis(
+            X0b, i0[:, None, None], axis=1)[:, 0, :]           # (N, max_p)
+        gbest_f = jnp.take_along_axis(f0, i0[:, None], axis=1)[:, 0]
+        state = _SwarmState(
+            key=keys, X=X0b, pbest_x=X0b, pbest_f=f0,
+            gbest_x=gbest_x, gbest_f=gbest_f,
+            it=jnp.zeros((n,), jnp.int32), stall=jnp.zeros((n,), jnp.int32))
+
+        def cond(st: _SwarmState) -> jnp.ndarray:
+            return jnp.any(~_done(st, cfg))
+
+        def body(st: _SwarmState) -> _SwarmState:
+            new = vstep(ppb, st)
+            frozen = _done(st, cfg)                            # (N,)
+            return jax.tree.map(
+                lambda nw, old: jnp.where(
+                    frozen.reshape((-1,) + (1,) * (nw.ndim - 1)), old, nw),
+                new, st)
+
+        return jax.lax.while_loop(cond, body, state)
+
+    jitted = jax.jit(run)
+    _RUNNER_CACHE[cfg] = jitted
+    return jitted
+
+
+def run_pso_ga_batch(problems: Sequence[ProblemLike],
+                     cfg: PSOGAConfig = PSOGAConfig(),
+                     seed: Union[int, Sequence[int]] = 0,
+                     bucket: bool = True,
+                     return_state: bool = False):
+    """Solve N offloading problems with one fleet of swarms.
+
+    Args:
+      problems: ``SimProblem``s or ``(LayerDAG, Environment)`` pairs.
+      cfg: shared PSO-GA hyperparameters (one compiled program per cfg).
+      seed: one seed for every problem, or a per-problem sequence —
+        problem i behaves exactly like ``run_pso_ga(..., seed=seed_i)``.
+      bucket: round padded shapes up to power-of-two buckets so repeated
+        fleet shapes reuse the compiled runner.
+      return_state: also return the final stacked ``_SwarmState`` (tests
+        use it to assert padded genes were never touched).
+
+    Returns a list of per-problem ``PSOGAResult`` (and the state if asked).
+    ``record_history`` is not supported in fleet mode — use the sequential
+    solver to trace a single problem's convergence curve.
+    """
+    probs = _as_problems(problems)
+    n = len(probs)
+    seeds = [int(seed)] * n if np.isscalar(seed) else [int(s) for s in seed]
+    if len(seeds) != n:
+        raise ValueError(f"{len(seeds)} seeds for {n} problems")
+
+    ppb = pack_problems(probs, bucket=bucket)
+    max_p = int(ppb.compute.shape[1])
+
+    # Per-problem init mirrors run_pso_ga exactly: split the problem's own
+    # key, draw the link-aware swarm at the TRUE (p, S) shape, then embed
+    # into the padded gene space (padded genes start — and stay — 0).
+    keys = []
+    X0b = np.zeros((n, cfg.pop_size, max_p), np.int32)
+    for i, pr in enumerate(probs):
+        key, k_init = jax.random.split(jax.random.PRNGKey(seeds[i]))
+        keys.append(np.asarray(key))
+        X0b[i, :, :pr.num_layers] = np.asarray(init_swarm(k_init, pr, cfg))
+
+    runner = _fleet_runner(cfg)
+    state = runner(ppb, jnp.asarray(np.stack(keys)), jnp.asarray(X0b))
+    jax.block_until_ready(state.gbest_f)
+
+    # Re-simulate each gbest (same as the sequential epilogue).
+    res = jax.vmap(
+        lambda pp, x: simulate_padded(pp, x, cfg.faithful_sim))(
+            ppb, state.gbest_x)
+    results: List[PSOGAResult] = []
+    for i, pr in enumerate(probs):
+        feasible = bool(res.feasible[i])
+        results.append(PSOGAResult(
+            best_x=np.asarray(state.gbest_x[i])[:pr.num_layers],
+            best_fitness=float(state.gbest_f[i]),
+            best_cost=float(res.total_cost[i]) if feasible else float("inf"),
+            feasible=feasible,
+            iterations=int(state.it[i]),
+            history=None))
+    if return_state:
+        return results, state
+    return results

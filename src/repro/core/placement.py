@@ -15,11 +15,14 @@ the encoder output fans out to every decoder block (cross-attention), so
 the DAG is not a chain — exactly the regime where PSO-GA beats Greedy.
 
 ``plan_offload`` = lower + deadline(HEFT × ratio) + optimize + partition.
+``plan_offload_batch`` plans MANY requests in one batched PSO-GA fleet
+(DESIGN.md §4) — the serve path and ``benchmarks/fleet_plan.py`` use it so
+heterogeneous (arch, shape, deadline) requests share one compiled solver.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,7 +33,8 @@ from .environment import DEVICE, Environment, tpu_fleet_environment
 from .partition import Stage, contiguous_stages
 from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga
 
-__all__ = ["arch_to_dag", "block_flops", "OffloadPlan", "plan_offload"]
+__all__ = ["arch_to_dag", "block_flops", "OffloadPlan", "plan_offload",
+           "plan_offload_batch"]
 
 
 def _glu_mult(act: str) -> int:
@@ -214,3 +218,39 @@ def plan_offload(cfg: ModelConfig, shape: ShapeSpec,
     stages = contiguous_stages(dag, res.best_x)
     return OffloadPlan(dag=dag, env=env, result=res, stages=stages,
                        deadline=float(deadline), heft=float(heft))
+
+
+def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
+                                                float]],
+                       env: Optional[Environment] = None,
+                       pin_server: Optional[int] = None,
+                       pso: PSOGAConfig = PSOGAConfig(pop_size=64,
+                                                      max_iters=300,
+                                                      stall_iters=40),
+                       seed: int = 0) -> List[OffloadPlan]:
+    """Plan many serving requests with ONE batched PSO-GA fleet.
+
+    ``requests``: sequence of (cfg, shape, deadline_ratio). All requests
+    share the environment; each is lowered to its own DAG with its own
+    HEFT-derived deadline, then the whole fleet is solved by
+    ``run_pso_ga_batch`` (each problem matches a sequential
+    ``run_pso_ga(..., seed=seed)`` gene-for-gene; see DESIGN.md §4).
+    """
+    from .batch import run_pso_ga_batch      # local: avoid import cycle
+
+    env = env or tpu_fleet_environment()
+    if pin_server is None:
+        pin_server = int(env.servers_of_tier(DEVICE)[0])
+    dags, hefts, deadlines = [], [], []
+    for mcfg, shape, ratio in requests:
+        dag = arch_to_dag(mcfg, shape, pin_server=pin_server)
+        heft, _ = heft_makespan(dag, env)
+        deadline = ratio * heft
+        dags.append(dag.with_deadline(np.asarray([deadline])))
+        hefts.append(float(heft))
+        deadlines.append(float(deadline))
+    results = run_pso_ga_batch([(d, env) for d in dags], cfg=pso, seed=seed)
+    return [OffloadPlan(dag=d, env=env, result=r,
+                        stages=contiguous_stages(d, r.best_x),
+                        deadline=dl, heft=h)
+            for d, r, dl, h in zip(dags, results, deadlines, hefts)]

@@ -35,9 +35,11 @@ import numpy as np
 from .dag import LayerDAG
 from .environment import Environment
 from .fitness import fitness_key
-from .simulator import SimProblem, build_simulator
+from .simulator import (PaddedProblem, SimProblem, build_simulator,
+                        pad_problem, simulate_padded)
 
-__all__ = ["PSOGAConfig", "PSOGAResult", "run_pso_ga", "init_swarm"]
+__all__ = ["PSOGAConfig", "PSOGAResult", "run_pso_ga", "init_swarm",
+           "swarm_step"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,66 +133,86 @@ def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
     return _clamp_pins(X, jnp.asarray(prob.pinned))
 
 
-def _make_step(prob: SimProblem, cfg: PSOGAConfig):
-    sim = build_simulator(prob, faithful=cfg.faithful_sim)
-    fit = jax.vmap(lambda x: fitness_key(sim(x)))
-    pinned = jnp.asarray(prob.pinned)
-    p, s = prob.num_layers, prob.num_servers
+def swarm_step(pp: PaddedProblem, state: _SwarmState,
+               cfg: PSOGAConfig) -> _SwarmState:
+    """One PSO-GA iteration on the padded representation (Eq. 17–23).
+
+    Pure in ``(pp, state)`` — ``repro.core.batch`` vmaps it over a fleet of
+    problems. Mutation/crossover positions and mutation values draw their
+    bounds from ``pp.num_layers`` / ``pp.num_servers`` (the TRUE sizes,
+    traced per problem under vmap), so a padded layer is never mutated and
+    a padded server is never proposed: padded genes stay at their initial
+    value and padding is invisible to the search (DESIGN.md §4).
+    """
+    max_p = pp.pinned.shape[-1]
+    p = pp.num_layers                 # true sizes; 0-d, traced under vmap
+    s = pp.num_servers
     P = cfg.pop_size
+    fit = jax.vmap(
+        lambda x: fitness_key(simulate_padded(pp, x, cfg.faithful_sim)))
 
-    def step(state: _SwarmState) -> _SwarmState:
-        key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
-            state.key, 8)
-        t = state.it.astype(jnp.float32) / cfg.max_iters
-        c1 = cfg.c1_start + (cfg.c1_end - cfg.c1_start) * t
-        c2 = cfg.c2_start + (cfg.c2_end - cfg.c2_start) * t
+    key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
+        state.key, 8)
+    t = state.it.astype(jnp.float32) / cfg.max_iters
+    c1 = cfg.c1_start + (cfg.c1_end - cfg.c1_start) * t
+    c2 = cfg.c2_start + (cfg.c2_end - cfg.c2_start) * t
 
-        # --- adaptive inertia (Eq. 22-23): per-particle w from divergence
-        d = jnp.mean((state.X != state.gbest_x[None, :]).astype(jnp.float32),
-                     axis=1)                                   # (P,)
-        w = cfg.w_max - (cfg.w_max - cfg.w_min) * jnp.exp(d / (d - 1.01))
+    # --- adaptive inertia (Eq. 22-23): per-particle w from divergence.
+    # Padded genes never differ from gBest's (both frozen at init value),
+    # so the sum only counts real genes; divide by the TRUE gene count.
+    d = jnp.sum((state.X != state.gbest_x[None, :]).astype(jnp.float32),
+                axis=1) / p.astype(jnp.float32)                # (P,)
+    w = cfg.w_max - (cfg.w_max - cfg.w_min) * jnp.exp(d / (d - 1.01))
 
-        # --- inertia: mutation Mu with prob w (Eq. 20)
-        do_mu = jax.random.uniform(kmu, (P,)) < w
-        pos = jax.random.randint(kmu_pos, (P,), 0, p)
-        val = jax.random.randint(kmu_val, (P,), 0, s, dtype=jnp.int32)
-        A = jnp.where(
-            (jnp.arange(p)[None, :] == pos[:, None]) & do_mu[:, None],
-            val[:, None], state.X)
+    # --- inertia: mutation Mu with prob w (Eq. 20)
+    do_mu = jax.random.uniform(kmu, (P,)) < w
+    pos = jax.random.randint(kmu_pos, (P,), 0, p)
+    val = jax.random.randint(kmu_val, (P,), 0, s, dtype=jnp.int32)
+    A = jnp.where(
+        (jnp.arange(max_p)[None, :] == pos[:, None]) & do_mu[:, None],
+        val[:, None], state.X)
 
-        # --- individual cognition: crossover with pBest (Eq. 18)
-        do_c1 = jax.random.uniform(kc1, (P,)) < c1
-        seg1 = jax.random.randint(kx1, (P, 2), 0, p)
-        lo1 = jnp.min(seg1, axis=1)[:, None]
-        hi1 = jnp.max(seg1, axis=1)[:, None]
-        in_seg1 = (jnp.arange(p)[None, :] >= lo1) & (jnp.arange(p)[None, :] <= hi1)
-        B = jnp.where(in_seg1 & do_c1[:, None], state.pbest_x, A)
+    # --- individual cognition: crossover with pBest (Eq. 18)
+    do_c1 = jax.random.uniform(kc1, (P,)) < c1
+    seg1 = jax.random.randint(kx1, (P, 2), 0, p)
+    lo1 = jnp.min(seg1, axis=1)[:, None]
+    hi1 = jnp.max(seg1, axis=1)[:, None]
+    in_seg1 = (jnp.arange(max_p)[None, :] >= lo1) \
+        & (jnp.arange(max_p)[None, :] <= hi1)
+    B = jnp.where(in_seg1 & do_c1[:, None], state.pbest_x, A)
 
-        # --- social cognition: crossover with gBest (Eq. 19)
-        do_c2 = jax.random.uniform(kc2, (P,)) < c2
-        seg2 = jax.random.randint(kx2, (P, 2), 0, p)
-        lo2 = jnp.min(seg2, axis=1)[:, None]
-        hi2 = jnp.max(seg2, axis=1)[:, None]
-        in_seg2 = (jnp.arange(p)[None, :] >= lo2) & (jnp.arange(p)[None, :] <= hi2)
-        C = jnp.where(in_seg2 & do_c2[:, None], state.gbest_x[None, :], B)
+    # --- social cognition: crossover with gBest (Eq. 19)
+    do_c2 = jax.random.uniform(kc2, (P,)) < c2
+    seg2 = jax.random.randint(kx2, (P, 2), 0, p)
+    lo2 = jnp.min(seg2, axis=1)[:, None]
+    hi2 = jnp.max(seg2, axis=1)[:, None]
+    in_seg2 = (jnp.arange(max_p)[None, :] >= lo2) \
+        & (jnp.arange(max_p)[None, :] <= hi2)
+    C = jnp.where(in_seg2 & do_c2[:, None], state.gbest_x[None, :], B)
 
-        X = _clamp_pins(C, pinned)
-        f = fit(X)
+    X = _clamp_pins(C, pp.pinned)
+    f = fit(X)
 
-        improved = f < state.pbest_f
-        pbest_x = jnp.where(improved[:, None], X, state.pbest_x)
-        pbest_f = jnp.where(improved, f, state.pbest_f)
-        i_best = jnp.argmin(pbest_f)
-        cand_f = pbest_f[i_best]
-        better = cand_f < state.gbest_f
-        gbest_x = jnp.where(better, pbest_x[i_best], state.gbest_x)
-        gbest_f = jnp.where(better, cand_f, state.gbest_f)
-        stall = jnp.where(better, 0, state.stall + 1)
-        return _SwarmState(key=key, X=X, pbest_x=pbest_x, pbest_f=pbest_f,
-                           gbest_x=gbest_x, gbest_f=gbest_f,
-                           it=state.it + 1, stall=stall)
+    improved = f < state.pbest_f
+    pbest_x = jnp.where(improved[:, None], X, state.pbest_x)
+    pbest_f = jnp.where(improved, f, state.pbest_f)
+    i_best = jnp.argmin(pbest_f)
+    cand_f = pbest_f[i_best]
+    better = cand_f < state.gbest_f
+    gbest_x = jnp.where(better, pbest_x[i_best], state.gbest_x)
+    gbest_f = jnp.where(better, cand_f, state.gbest_f)
+    stall = jnp.where(better, 0, state.stall + 1)
+    return _SwarmState(key=key, X=X, pbest_x=pbest_x, pbest_f=pbest_f,
+                       gbest_x=gbest_x, gbest_f=gbest_f,
+                       it=state.it + 1, stall=stall)
 
-    return step, fit
+
+def _make_step(prob: SimProblem, cfg: PSOGAConfig):
+    """Unbatched (zero-padding) step + swarm-fitness for one problem."""
+    pp = pad_problem(prob)
+    fit = jax.vmap(
+        lambda x: fitness_key(simulate_padded(pp, x, cfg.faithful_sim)))
+    return partial(swarm_step, pp, cfg=cfg), fit
 
 
 def run_pso_ga(dag: LayerDAG, env: Environment,

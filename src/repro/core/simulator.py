@@ -31,12 +31,21 @@ particles) a meaningful total order instead of inf == inf.
 
 Both a pure-numpy reference (`simulate_np`) and a jit/vmap-able JAX
 implementation (`build_simulator`) are provided; tests assert they agree.
+
+The JAX path operates on a *padded* representation (``PaddedProblem`` +
+``simulate_padded``): layers are padded to ``max_p`` (padded ``order``
+entries are -1 and execute as zero-cost no-ops), servers to ``max_S``
+(padded servers are unreachable: ``link_ok`` false, never selected by the
+solver), apps to ``max_apps`` (deadline +inf). ``build_simulator`` is the
+zero-padding special case; ``repro.core.batch`` stacks N heterogeneous
+``PaddedProblem``s along a leading axis and vmaps ``simulate_padded`` over
+the whole fleet (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +55,8 @@ from .dag import LayerDAG, topological_order
 from .environment import Environment
 
 MIN_BW = 1e-9   # MB/s stand-in for "no link"
-__all__ = ["SimResult", "SimProblem", "simulate_np", "build_simulator",
-           "MIN_BW"]
+__all__ = ["SimResult", "SimProblem", "PaddedProblem", "pad_problem",
+           "simulate_padded", "simulate_np", "build_simulator", "MIN_BW"]
 
 
 class SimResult(NamedTuple):
@@ -169,91 +178,188 @@ def simulate_np(prob: SimProblem, x: np.ndarray, faithful: bool = True
 
 
 # ---------------------------------------------------------------------------
-# JAX implementation — lax.scan over layers, vmap over particles
+# JAX implementation — padded representation, lax.scan over layers,
+# vmap over particles (and, in repro.core.batch, over problems)
 # ---------------------------------------------------------------------------
+
+
+class PaddedProblem(NamedTuple):
+    """Device-ready padded arrays for one problem (DESIGN.md §4).
+
+    Every field is a jnp array; ``repro.core.batch`` stacks N of these
+    along a leading axis and vmaps the simulator/step over it. Padding
+    conventions (all padding is appended AFTER the real entries so float
+    reductions accumulate identical partial sums):
+      * layers  -> ``max_p``:   ``order`` padded -1 (scan no-op), compute 0,
+        pinned -1, parent/child idx -1.
+      * servers -> ``max_S``:   power 1 (no div-by-0), cost 0, link_ok
+        False, inv_bw 1/MIN_BW — and the solver never emits genes >=
+        ``num_servers``, so padded servers are unreachable by construction.
+      * apps    -> ``max_apps``: deadline +inf (never violated; an empty
+        app's completion clamps to 0).
+    ``num_layers`` / ``num_servers`` / ``num_apps`` are the TRUE counts as
+    0-d int32 arrays — traced per problem under vmap, so PSO-GA mutation
+    and crossover draw bounds from the real sizes, not the padded ones.
+    """
+    compute: jnp.ndarray        # (max_p,)
+    order: jnp.ndarray          # (max_p,) topo order, padded -1
+    parent_idx: jnp.ndarray     # (max_p, max_in) padded -1
+    parent_mb: jnp.ndarray      # (max_p, max_in)
+    child_idx: jnp.ndarray      # (max_p, max_out) padded -1
+    child_mb: jnp.ndarray       # (max_p, max_out)
+    app_id: jnp.ndarray         # (max_p,)
+    deadline: jnp.ndarray       # (max_apps,) padded +inf
+    pinned: jnp.ndarray         # (max_p,) padded -1
+    power: jnp.ndarray          # (max_S,)
+    cost_per_sec: jnp.ndarray   # (max_S,)
+    inv_bw: jnp.ndarray         # (max_S, max_S)
+    tran_cost: jnp.ndarray      # (max_S, max_S)
+    link_ok: jnp.ndarray        # (max_S, max_S) bool
+    num_layers: jnp.ndarray     # () int32 — true p
+    num_servers: jnp.ndarray    # () int32 — true S
+    num_apps: jnp.ndarray       # () int32 — true n_apps
+
+    @property
+    def max_layers(self) -> int:
+        return int(self.compute.shape[-1])
+
+    @property
+    def max_servers(self) -> int:
+        return int(self.power.shape[-1])
+
+
+def pad_problem(prob: SimProblem,
+                max_p: Optional[int] = None,
+                max_S: Optional[int] = None,
+                max_in: Optional[int] = None,
+                max_out: Optional[int] = None,
+                max_apps: Optional[int] = None) -> PaddedProblem:
+    """Embed a ``SimProblem`` into the padded representation.
+
+    With all sizes None this is the identity embedding (zero padding) —
+    ``build_simulator`` uses exactly that, so the unbatched solver is the
+    N=1 case of the batched machinery.
+    """
+    p, s, a = prob.num_layers, prob.num_servers, prob.num_apps
+    in0, out0 = prob.parent_idx.shape[1], prob.child_idx.shape[1]
+    max_p = p if max_p is None else max_p
+    max_S = s if max_S is None else max_S
+    max_in = in0 if max_in is None else max_in
+    max_out = out0 if max_out is None else max_out
+    max_apps = a if max_apps is None else max_apps
+    if max_p < p or max_S < s or max_in < in0 or max_out < out0 \
+            or max_apps < a:
+        raise ValueError("padded sizes smaller than problem sizes")
+
+    def pad(arr, shape, fill):
+        out = np.full(shape, fill, dtype=arr.dtype)
+        out[tuple(slice(0, n) for n in arr.shape)] = arr
+        return jnp.asarray(out)
+
+    return PaddedProblem(
+        compute=pad(prob.compute, (max_p,), 0.0),
+        order=pad(prob.order, (max_p,), -1),
+        parent_idx=pad(prob.parent_idx, (max_p, max_in), -1),
+        parent_mb=pad(prob.parent_mb, (max_p, max_in), 0.0),
+        child_idx=pad(prob.child_idx, (max_p, max_out), -1),
+        child_mb=pad(prob.child_mb, (max_p, max_out), 0.0),
+        app_id=pad(prob.app_id, (max_p,), 0),
+        deadline=pad(prob.deadline, (max_apps,), np.inf),
+        pinned=pad(prob.pinned, (max_p,), -1),
+        power=pad(prob.power, (max_S,), 1.0),
+        cost_per_sec=pad(prob.cost_per_sec, (max_S,), 0.0),
+        inv_bw=pad(prob.inv_bw, (max_S, max_S), 1.0 / MIN_BW),
+        tran_cost=pad(prob.tran_cost, (max_S, max_S), 0.0),
+        link_ok=pad(prob.link_ok, (max_S, max_S), False),
+        num_layers=jnp.asarray(p, jnp.int32),
+        num_servers=jnp.asarray(s, jnp.int32),
+        num_apps=jnp.asarray(a, jnp.int32))
+
+
+def simulate_padded(pp: PaddedProblem, x: jnp.ndarray,
+                    faithful: bool = True) -> SimResult:
+    """Algorithm 2 on the padded representation. Pure — vmap over particles
+    (``x`` axis) and/or problems (leading ``pp`` axis) freely.
+
+    Padded ``order`` entries (-1) leave every piece of carry state
+    untouched, so a padded layer is a zero-cost no-op and the result is
+    bit-identical to the unpadded simulation of the embedded problem.
+    """
+    x = jnp.asarray(x).astype(jnp.int32)
+    max_p = pp.compute.shape[0]
+    max_S = pp.power.shape[0]
+    max_apps = pp.deadline.shape[0]
+
+    def step(carry, j):
+        lease, t_on, used, end, trans_cost, link_bad = carry
+        valid = j >= 0
+        jsafe = jnp.where(valid, j, 0)
+        srv = x[jsafe]
+        exe = pp.compute[jsafe] / pp.power[srv]
+        pars = pp.parent_idx[jsafe]               # (max_in,)
+        pmask = (pars >= 0) & valid
+        psafe = jnp.where(pmask, pars, 0)
+        psrv = x[psafe]
+        mb = pp.parent_mb[jsafe]
+        tt = mb * pp.inv_bw[psrv, srv]            # (max_in,)
+        max_trans = jnp.max(jnp.where(pmask, tt, 0.0), initial=0.0)
+        parent_gate = jnp.max(jnp.where(pmask, end[psafe] + tt, 0.0),
+                              initial=0.0)
+        trans_cost = trans_cost + jnp.sum(
+            jnp.where(pmask, pp.tran_cost[psrv, srv] * mb, 0.0))
+        link_bad = link_bad | jnp.any(
+            pmask & ~pp.link_ok[psrv, srv] & (psrv != srv))
+        if faithful:
+            start = lease[srv] + max_trans
+        else:
+            start = jnp.maximum(lease[srv], parent_gate)
+        t_end = start + exe
+        end = end.at[jsafe].set(jnp.where(valid, t_end, end[jsafe]))
+        t_on = t_on.at[srv].min(jnp.where(valid, start, jnp.inf))
+        used = used.at[srv].set(used[srv] | valid)
+        kids = pp.child_idx[jsafe]
+        kmask = (kids >= 0) & valid
+        ksafe = jnp.where(kmask, kids, 0)
+        out_t = jnp.sum(jnp.where(kmask,
+                                  pp.child_mb[jsafe] * pp.inv_bw[srv, x[ksafe]],
+                                  0.0))
+        link_bad = link_bad | jnp.any(
+            kmask & ~pp.link_ok[srv, x[ksafe]] & (x[ksafe] != srv))
+        if faithful:
+            new_lease = lease[srv] + exe + out_t
+        else:
+            new_lease = t_end + out_t
+        lease = lease.at[srv].set(jnp.where(valid, new_lease, lease[srv]))
+        return (lease, t_on, used, end, trans_cost, link_bad), None
+
+    init = (jnp.zeros(max_S), jnp.full(max_S, jnp.inf),
+            jnp.zeros(max_S, bool), jnp.zeros(max_p),
+            jnp.asarray(0.0), jnp.asarray(False))
+    (lease, t_on, used, end, trans_cost, link_bad), _ = jax.lax.scan(
+        step, init, pp.order)
+
+    # Empty (padded) apps reduce to -inf under segment_max; clamp to 0 —
+    # real completions are >= 0, so this changes nothing for real apps.
+    app_completion = jnp.maximum(
+        jax.ops.segment_max(end, pp.app_id, num_segments=max_apps), 0.0)
+    t_on_safe = jnp.where(jnp.isinf(t_on), 0.0, t_on)
+    comp_cost = jnp.sum(jnp.where(used,
+                                  pp.cost_per_sec * (lease - t_on_safe), 0.0))
+    pin_ok = jnp.all((pp.pinned < 0) | (x == pp.pinned))
+    feasible = (jnp.all(app_completion <= pp.deadline) & pin_ok & ~link_bad)
+    total = comp_cost + trans_cost
+    return SimResult(end_times=end, app_completion=app_completion,
+                     comp_cost=comp_cost, trans_cost=trans_cost,
+                     total_cost=total, feasible=feasible,
+                     makespan=jnp.max(end, initial=0.0))
+
 
 def build_simulator(prob: SimProblem, faithful: bool = True):
     """Returns a jit-able ``sim(x) -> SimResult`` closed over static arrays.
 
     ``x``: (p,) int32 server assignment. vmap over a swarm:
-    ``jax.vmap(sim)(X)`` with X (P, p).
+    ``jax.vmap(sim)(X)`` with X (P, p). This is the zero-padding case of
+    ``simulate_padded``.
     """
-    compute = jnp.asarray(prob.compute)
-    order = jnp.asarray(prob.order)
-    parent_idx = jnp.asarray(prob.parent_idx)
-    parent_mb = jnp.asarray(prob.parent_mb)
-    child_idx = jnp.asarray(prob.child_idx)
-    child_mb = jnp.asarray(prob.child_mb)
-    app_id = jnp.asarray(prob.app_id)
-    deadline = jnp.asarray(prob.deadline)
-    pinned = jnp.asarray(prob.pinned)
-    power = jnp.asarray(prob.power)
-    cost_per_sec = jnp.asarray(prob.cost_per_sec)
-    inv_bw = jnp.asarray(prob.inv_bw)
-    tran_cost = jnp.asarray(prob.tran_cost)
-    link_ok = jnp.asarray(prob.link_ok)
-    n_apps = prob.num_apps
-    p = prob.num_layers
-    s = prob.num_servers
-
-    def sim(x: jnp.ndarray) -> SimResult:
-        x = jnp.asarray(x).astype(jnp.int32)
-
-        def step(carry, j):
-            lease, t_on, used, end, trans_cost, link_bad = carry
-            srv = x[j]
-            exe = compute[j] / power[srv]
-            pars = parent_idx[j]                  # (max_in,)
-            pmask = pars >= 0
-            psafe = jnp.where(pmask, pars, 0)
-            psrv = x[psafe]
-            mb = parent_mb[j]
-            tt = mb * inv_bw[psrv, srv]           # (max_in,)
-            max_trans = jnp.max(jnp.where(pmask, tt, 0.0), initial=0.0)
-            parent_gate = jnp.max(jnp.where(pmask, end[psafe] + tt, 0.0),
-                                  initial=0.0)
-            trans_cost = trans_cost + jnp.sum(
-                jnp.where(pmask, tran_cost[psrv, srv] * mb, 0.0))
-            link_bad = link_bad | jnp.any(
-                pmask & ~link_ok[psrv, srv] & (psrv != srv))
-            if faithful:
-                start = lease[srv] + max_trans
-            else:
-                start = jnp.maximum(lease[srv], parent_gate)
-            t_end = start + exe
-            end = end.at[j].set(t_end)
-            t_on = t_on.at[srv].min(start)
-            used = used.at[srv].set(True)
-            kids = child_idx[j]
-            kmask = kids >= 0
-            ksafe = jnp.where(kmask, kids, 0)
-            out_t = jnp.sum(jnp.where(kmask,
-                                      child_mb[j] * inv_bw[srv, x[ksafe]],
-                                      0.0))
-            link_bad = link_bad | jnp.any(
-                kmask & ~link_ok[srv, x[ksafe]] & (x[ksafe] != srv))
-            if faithful:
-                new_lease = lease[srv] + exe + out_t
-            else:
-                new_lease = t_end + out_t
-            lease = lease.at[srv].set(new_lease)
-            return (lease, t_on, used, end, trans_cost, link_bad), None
-
-        init = (jnp.zeros(s), jnp.full(s, jnp.inf), jnp.zeros(s, bool),
-                jnp.zeros(p), jnp.asarray(0.0), jnp.asarray(False))
-        (lease, t_on, used, end, trans_cost, link_bad), _ = jax.lax.scan(
-            step, init, order)
-
-        app_completion = jax.ops.segment_max(end, app_id, num_segments=n_apps)
-        t_on_safe = jnp.where(jnp.isinf(t_on), 0.0, t_on)
-        comp_cost = jnp.sum(jnp.where(used,
-                                      cost_per_sec * (lease - t_on_safe), 0.0))
-        pin_ok = jnp.all((pinned < 0) | (x == pinned))
-        feasible = (jnp.all(app_completion <= deadline) & pin_ok & ~link_bad)
-        total = comp_cost + trans_cost
-        return SimResult(end_times=end, app_completion=app_completion,
-                         comp_cost=comp_cost, trans_cost=trans_cost,
-                         total_cost=total, feasible=feasible,
-                         makespan=jnp.max(end, initial=0.0))
-
-    return sim
+    pp = pad_problem(prob)
+    return partial(simulate_padded, pp, faithful=faithful)

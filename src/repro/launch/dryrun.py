@@ -104,6 +104,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     pod_size = 0
     if multi_pod:

@@ -119,10 +119,16 @@ def main() -> None:
 
     cfg = get(args.arch)
     if args.plan:
-        from ..core import plan_offload
-        plan = plan_offload(cfg, SHAPES[1], deadline_ratio=1.5)
-        print("[serve] PSO-GA fleet placement for prefill_32k:")
-        print(plan.summary())
+        # one batched PSO-GA fleet plans every serving shape at once
+        # (DESIGN.md §4) instead of re-compiling the solver per shape.
+        from ..core import PSOGAConfig, plan_offload_batch
+        shapes = [s for s in SHAPES if s.kind != "train"]
+        plans = plan_offload_batch(
+            [(cfg, s, 1.5) for s in shapes],
+            pso=PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40))
+        for shape, plan in zip(shapes, plans):
+            print(f"[serve] PSO-GA fleet placement for {shape.name}:")
+            print(plan.summary())
     if args.reduced:
         cfg = cfg.reduced()
     srv = Server(cfg, args.batch, args.prompt_len, args.max_new,

@@ -8,11 +8,16 @@ import pytest
 # here (smoke tests and benches must see 1 device).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
-
-settings.register_profile("ci", deadline=None, max_examples=25,
-                          derandomize=True)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # hypothesis is optional: the property-based tests skip themselves via
+    # tests/hypo_compat.py, the rest of the suite runs normally.
+    pass
+else:
+    settings.register_profile("ci", deadline=None, max_examples=25,
+                              derandomize=True)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

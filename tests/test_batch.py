@@ -1,0 +1,174 @@
+"""Fleet-scale batched PSO-GA (repro.core.batch, DESIGN.md §4):
+sequential parity, padding masks, and per-problem convergence freezing."""
+import numpy as np
+import pytest
+
+from repro.core import (PSOGAConfig, SimProblem, pack_problems,
+                        pad_problem, paper_environment, run_pso_ga,
+                        run_pso_ga_batch, sample_environment,
+                        simulate_np, simulate_padded, zoo)
+from repro.core.batch import bucket_size
+from repro.core.dag import LayerDAG
+
+FAST = PSOGAConfig(pop_size=24, max_iters=80, stall_iters=25)
+
+
+def fig2_dag(env):
+    return LayerDAG(
+        compute=np.array([1.1, 1.92, 2.35, 2.12]) * env.power[0],
+        edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]]),
+        edge_mb=np.array([1.0, 1.0, 0.5, 0.5]),
+        app_id=np.zeros(4, np.int32), deadline=np.array([3.7]),
+        pinned=np.array([0, -1, -1, -1], np.int32))
+
+
+@pytest.fixture(scope="module")
+def fleet3():
+    """Three heterogeneous problems: different DAGs, envs, pins, deadlines."""
+    env_s = sample_environment()
+    env_p = paper_environment()
+    return [(fig2_dag(env_s), env_s),
+            (zoo.alexnet(pin_server=0, deadline=6.0), env_p),
+            (zoo.vgg19(pin_server=1, deadline=40.0), env_p)]
+
+
+# ---------------------------------------------------------------------------
+# padded simulator == unpadded numpy oracle, regardless of padding amount
+# ---------------------------------------------------------------------------
+
+def test_padded_sim_matches_np_oracle(rng):
+    """Fitness is invariant under (arbitrary) padding: the padded JAX sim
+    reproduces the unpadded numpy oracle bit-for-bit in every field."""
+    env = sample_environment()
+    dag = zoo.alexnet(pin_server=0, deadline=6.0)
+    prob = SimProblem.build(dag, env)
+    pp = pad_problem(prob, max_p=32, max_S=11, max_in=4, max_out=5,
+                     max_apps=3)
+    for faithful in (True, False):
+        for _ in range(5):
+            x = rng.integers(0, env.num_servers, size=dag.num_layers)
+            xp = np.zeros(32, np.int32)
+            xp[:dag.num_layers] = x
+            ref = simulate_np(prob, x, faithful=faithful)
+            out = simulate_padded(pp, xp, faithful=faithful)
+            np.testing.assert_allclose(
+                np.asarray(out.end_times)[:dag.num_layers],
+                ref.end_times, rtol=1e-6)
+            np.testing.assert_allclose(float(out.total_cost),
+                                       float(ref.total_cost), rtol=1e-6)
+            assert bool(out.feasible) == bool(ref.feasible)
+            np.testing.assert_allclose(float(out.makespan),
+                                       float(ref.makespan), rtol=1e-6)
+            # padded layers are no-ops: end time stays 0
+            assert np.all(np.asarray(out.end_times)[dag.num_layers:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# batched == sequential, gene for gene
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_sequential(fleet3):
+    """N=3 heterogeneous problems, same seeds: the batched fleet returns
+    the sequential solver's gbest exactly — fitness, genes, iterations."""
+    seeds = [0, 1, 2]
+    seq = [run_pso_ga(dag, env, FAST, seed=s)
+           for (dag, env), s in zip(fleet3, seeds)]
+    bat = run_pso_ga_batch(fleet3, FAST, seed=seeds)
+    for a, b in zip(seq, bat):
+        assert a.best_fitness == b.best_fitness
+        assert np.array_equal(a.best_x, b.best_x)
+        assert a.iterations == b.iterations
+        assert a.feasible == b.feasible
+        assert a.best_cost == b.best_cost
+
+
+def test_batched_scalar_seed_broadcasts(fleet3):
+    one = run_pso_ga(*fleet3[0], FAST, seed=7)
+    bat = run_pso_ga_batch(fleet3, FAST, seed=7)
+    assert bat[0].best_fitness == one.best_fitness
+
+
+# ---------------------------------------------------------------------------
+# padding masks: padded layers / servers are never selected
+# ---------------------------------------------------------------------------
+
+def test_padding_never_selected(fleet3):
+    results, state = run_pso_ga_batch(fleet3, FAST, seed=0,
+                                      return_state=True)
+    X = np.asarray(state.X)                    # (N, P, max_p)
+    gbest = np.asarray(state.gbest_x)
+    for i, (dag, env) in enumerate(fleet3):
+        p, s = dag.num_layers, env.num_servers
+        # real genes only ever name real servers (padded servers would be
+        # unreachable: link_ok false, power 1)
+        assert np.all(X[i, :, :p] < s)
+        assert np.all(gbest[i, :p] < s)
+        assert np.all(results[i].best_x < s)
+        # padded genes were never mutated away from their init value 0
+        assert np.all(X[i, :, p:] == 0)
+        assert np.all(gbest[i, p:] == 0)
+        assert results[i].best_x.shape == (p,)
+
+
+def test_pack_problems_buckets_shapes(fleet3):
+    ppb = pack_problems(fleet3, bucket=True)
+    n_layers = max(d.num_layers for d, _ in fleet3)
+    n_srv = max(e.num_servers for _, e in fleet3)
+    assert ppb.compute.shape == (3, bucket_size(n_layers))
+    assert ppb.power.shape[1] == bucket_size(n_srv, floor=4)
+    assert np.array_equal(np.asarray(ppb.num_layers),
+                          [d.num_layers for d, _ in fleet3])
+    # padded deadlines are +inf -> never violated
+    assert np.all(np.isinf(np.asarray(ppb.deadline)[:, 1:]))
+
+
+def test_bucket_size():
+    assert bucket_size(3) == 8
+    assert bucket_size(8) == 8
+    assert bucket_size(9) == 16
+    assert bucket_size(341) == 512
+    assert bucket_size(3, floor=4) == 4
+
+
+# ---------------------------------------------------------------------------
+# convergence freeze: an early-converged problem stops evolving
+# ---------------------------------------------------------------------------
+
+def test_convergence_freeze(fleet3):
+    """A trivially-converged problem (everything pinned home, gbest found
+    at init) freezes at stall_iters while harder problems keep iterating —
+    and its frozen gbest equals its sequential solution."""
+    env = paper_environment()
+    alex = zoo.alexnet(pin_server=0, deadline=1e9)
+    trivial = LayerDAG(compute=alex.compute, edges=alex.edges,
+                       edge_mb=alex.edge_mb, app_id=alex.app_id,
+                       deadline=alex.deadline,
+                       pinned=np.zeros(alex.num_layers, np.int32))
+    hard_dag, hard_env = fleet3[0]
+    results = run_pso_ga_batch([(trivial, env), (hard_dag, hard_env)],
+                               FAST, seed=0)
+    triv, hard = results
+    seq = run_pso_ga(trivial, env, FAST, seed=0)
+    # converged immediately: gbest never improved after init, so the stall
+    # counter ran straight to the stopping rule
+    assert triv.iterations == FAST.stall_iters
+    assert triv.best_fitness == seq.best_fitness == 0.0
+    assert np.array_equal(triv.best_x, seq.best_x)
+    # the harder problem kept iterating after the trivial one froze
+    assert hard.iterations > triv.iterations
+    # and matches ITS sequential run too (freeze leaked nothing across)
+    seq_hard = run_pso_ga(hard_dag, hard_env, FAST, seed=0)
+    assert hard.best_fitness == seq_hard.best_fitness
+
+
+def test_runner_cache_reused(fleet3):
+    from repro.core.batch import runner_cache_info
+    run_pso_ga_batch(fleet3, FAST, seed=0)
+    n_before = len(runner_cache_info())
+    run_pso_ga_batch(fleet3, FAST, seed=3)     # same shapes, new seeds
+    assert len(runner_cache_info()) == n_before
+
+
+def test_batch_seed_count_mismatch(fleet3):
+    with pytest.raises(ValueError):
+        run_pso_ga_batch(fleet3, FAST, seed=[0, 1])

@@ -1,0 +1,40 @@
+"""Docs can't dangle: every `DESIGN.md §N` / `EXPERIMENTS.md §X` citation
+in the sources must resolve to a real heading (scripts/check_docs.py)."""
+import importlib.util
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKER = REPO / "scripts" / "check_docs.py"
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location("check_docs", CHECKER)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_no_dangling_doc_citations():
+    mod = _load_checker()
+    problems = mod.find_dangling(REPO)
+    assert not problems, "\n".join(problems)
+
+
+def test_citations_actually_found():
+    """The checker must actually see the known citations — if the regex
+    rots, this fails before the no-dangling assert goes vacuous."""
+    mod = _load_checker()
+    cites = {(doc, sec) for _, _, doc, sec in mod.find_citations(REPO)}
+    for expected in [("DESIGN.md", "2"), ("DESIGN.md", "3"),
+                     ("DESIGN.md", "4"), ("DESIGN.md", "5"),
+                     ("DESIGN.md", "6"), ("DESIGN.md", "7"),
+                     ("EXPERIMENTS.md", "Perf")]:
+        assert expected in cites, f"lost citation {expected}"
+
+
+def test_checker_cli_green():
+    out = subprocess.run([sys.executable, str(CHECKER)], cwd=REPO,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr

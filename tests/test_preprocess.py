@@ -1,6 +1,6 @@
 """Algorithm 1 (cut-edge merging) properties + the paper's zoo anchors."""
 import numpy as np
-from hypothesis import given, strategies as st
+from hypo_compat import given, st
 
 from repro.core import merge_dags, preprocess, zoo
 from repro.core.dag import LayerDAG, topological_order

@@ -2,7 +2,7 @@
 modes, and the paper's worked example (Fig. 2 / Tables I-III)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypo_compat import given, st
 
 from repro.core import (Environment, SimProblem, build_simulator,
                         sample_environment, simulate_np)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypo_compat import given, st
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get
