@@ -6,10 +6,18 @@ layer; the paper ran seconds-per-iteration on a Pentium G3250).
 Also benchmarks fleet planning: the sequential per-problem loop (one
 re-traced ``run_pso_ga`` per problem) vs the batched fleet solver
 (``run_pso_ga_batch``, DESIGN.md §4) at N ∈ {1, 8, 64} heterogeneous
-problems (EXPERIMENTS.md §Perf)."""
+problems (EXPERIMENTS.md §Perf).
+
+``--backend {scan,pallas}`` selects the swarm-fitness backend
+(DESIGN.md §8; pallas runs in interpret mode off-TPU, so its CPU numbers
+measure correctness plumbing, not kernel speed). Every run writes a
+machine-readable ``BENCH_pso.json`` (per-net µs/iter, fleet speedups) so
+the perf trajectory is tracked across PRs (EXPERIMENTS.md §Perf)."""
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 import jax
@@ -64,11 +72,13 @@ def bench_fleet(n: int, cfg: PSOGAConfig = FLEET_CFG):
     }
 
 
-def bench_net(net: str, pop: int = 100, iters: int = 50):
+def bench_net(net: str, pop: int = 100, iters: int = 50,
+              backend: str = "scan"):
     env = paper_environment()
     dag = zoo.build(net, deadline=1e9)
     prob = SimProblem.build(dag, env)
-    cfg = PSOGAConfig(pop_size=pop, max_iters=iters)
+    cfg = PSOGAConfig(pop_size=pop, max_iters=iters,
+                      fitness_backend=backend)
     step, fit = _make_step(prob, cfg)
     key = jax.random.PRNGKey(0)
     X0 = init_swarm(key, prob, cfg)
@@ -87,6 +97,7 @@ def bench_net(net: str, pop: int = 100, iters: int = 50):
     dt = (time.time() - t0) / iters
     return {
         "net": net, "layers": dag.num_layers, "pop": pop,
+        "backend": backend,
         "us_per_iter": dt * 1e6,
         "evals_per_s": pop / dt,
         "layersteps_per_s": pop * dag.num_layers / dt,
@@ -96,18 +107,27 @@ def bench_net(net: str, pop: int = 100, iters: int = 50):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pop", type=int, default=100)
+    ap.add_argument("--backend", default="scan",
+                    choices=("scan", "pallas"),
+                    help="swarm-fitness backend (DESIGN.md §8); pallas "
+                         "runs in interpret mode off-TPU")
+    ap.add_argument("--json", default="BENCH_pso.json",
+                    help="write machine-readable results here "
+                         "('' to disable)")
     ap.add_argument("--skip-fleet", action="store_true",
                     help="skip the sequential-vs-batched fleet benchmark")
     ap.add_argument("--fleet-sizes", type=int, nargs="*", default=[1, 8, 64])
     args = ap.parse_args()
-    rows = [bench_net(n, pop=args.pop)
+    rows = [bench_net(n, pop=args.pop, backend=args.backend)
             for n in ("alexnet", "vgg19", "googlenet", "resnet101")]
-    print_csv(rows, ["net", "layers", "pop", "us_per_iter", "evals_per_s",
-                     "layersteps_per_s"])
+    print_csv(rows, ["net", "layers", "pop", "backend", "us_per_iter",
+                     "evals_per_s", "layersteps_per_s"])
+    fleet_rows = []
     if not args.skip_fleet:
-        fleet_rows = []
+        fleet_cfg = dataclasses.replace(FLEET_CFG,
+                                        fitness_backend=args.backend)
         for n in args.fleet_sizes:
-            row = bench_fleet(n)
+            row = bench_fleet(n, fleet_cfg)
             print(f"# fleet N={n}: seq {row['seq_s']:.2f}s, "
                   f"batch {row['batch_s']:.2f}s "
                   f"({row['speedup']:.1f}x; cached "
@@ -117,6 +137,18 @@ def main() -> None:
         print_csv(fleet_rows, ["n_problems", "seq_s", "batch_s",
                                "batch_cached_s", "speedup",
                                "speedup_cached", "fitness_match"])
+    if args.json:
+        payload = {
+            "bench": "bench_pso",
+            "backend": args.backend,
+            "pop": args.pop,
+            "device": jax.devices()[0].platform,
+            "nets": rows,
+            "fleet": fleet_rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -17,10 +17,11 @@ from .dag import LayerDAG, merge_dags, preprocess, topological_order
 from .environment import (CLOUD, DEVICE, EDGE, Environment,
                           paper_environment, sample_environment,
                           tpu_fleet_environment)
-from .fitness import INFEASIBLE_OFFSET, fitness_key
+from .fitness import (INFEASIBLE_OFFSET, fitness_key, make_swarm_fitness,
+                      resolve_fitness_backend)
 from .simulator import (PaddedProblem, SimProblem, SimResult,
                         build_simulator, pad_problem, simulate_np,
-                        simulate_padded)
+                        simulate_padded, simulate_swarm)
 from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga, swarm_step
 from .batch import pack_problems, run_pso_ga_batch
 from .baselines import (GAConfig, greedy_offload, heft_makespan, pre_pso,
@@ -35,9 +36,10 @@ __all__ = [
     "LayerDAG", "merge_dags", "preprocess", "topological_order",
     "Environment", "paper_environment", "sample_environment",
     "tpu_fleet_environment", "CLOUD", "EDGE", "DEVICE",
-    "INFEASIBLE_OFFSET", "fitness_key",
+    "INFEASIBLE_OFFSET", "fitness_key", "make_swarm_fitness",
+    "resolve_fitness_backend",
     "SimProblem", "SimResult", "build_simulator", "simulate_np",
-    "PaddedProblem", "pad_problem", "simulate_padded",
+    "PaddedProblem", "pad_problem", "simulate_padded", "simulate_swarm",
     "PSOGAConfig", "PSOGAResult", "run_pso_ga", "swarm_step",
     "pack_problems", "run_pso_ga_batch",
     "GAConfig", "greedy_offload", "heft_makespan", "pre_pso", "run_ga",

@@ -24,10 +24,10 @@ import numpy as np
 
 from .dag import LayerDAG, preprocess, topological_order
 from .environment import Environment
-from .fitness import INFEASIBLE_OFFSET, fitness_key
+from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
 from .pso_ga import PSOGAConfig, PSOGAResult, _SwarmState, _make_step, \
     init_swarm, run_pso_ga
-from .simulator import SimProblem, build_simulator, simulate_np
+from .simulator import SimProblem, build_simulator, pad_problem, simulate_np
 
 __all__ = ["greedy_offload", "run_ga", "run_pso_linear", "heft_makespan",
            "pre_pso", "GAConfig"]
@@ -127,13 +127,15 @@ class GAConfig:
     p_mutation: float = 0.02          # per-gene
     elite: int = 2
     faithful_sim: bool = False        # match PSOGAConfig (paper-consistent)
+    fitness_backend: str = "scan"     # scan | pallas | auto (DESIGN.md §8)
 
 
 def run_ga(dag: LayerDAG, env: Environment, cfg: GAConfig = GAConfig(),
            seed: int = 0) -> PSOGAResult:
     prob = SimProblem.build(dag, env)
     sim = build_simulator(prob, faithful=cfg.faithful_sim)
-    fit = jax.vmap(lambda x: fitness_key(sim(x)))
+    fit = make_swarm_fitness(pad_problem(prob), cfg.faithful_sim,
+                             cfg.fitness_backend)
     pinned = jnp.asarray(prob.pinned)
     p, s, P = prob.num_layers, prob.num_servers, cfg.pop_size
 
@@ -200,7 +202,8 @@ def run_pso_linear(dag: LayerDAG, env: Environment,
     """Same operators as PSO-GA but w follows Eq. 21 (linear decay)."""
     prob = SimProblem.build(dag, env)
     sim = build_simulator(prob, faithful=cfg.faithful_sim)
-    fit = jax.vmap(lambda x: fitness_key(sim(x)))
+    fit = make_swarm_fitness(pad_problem(prob), cfg.faithful_sim,
+                             cfg.fitness_backend)
     pinned = jnp.asarray(prob.pinned)
     p, s, P = prob.num_layers, prob.num_servers, cfg.pop_size
 

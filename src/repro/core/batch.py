@@ -38,7 +38,7 @@ import numpy as np
 
 from .dag import LayerDAG
 from .environment import Environment
-from .fitness import fitness_key
+from .fitness import make_swarm_fitness
 from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
                      swarm_step)
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
@@ -63,6 +63,28 @@ def _as_problems(problems: Sequence[ProblemLike]) -> List[SimProblem]:
             dag, env = pr
             out.append(SimProblem.build(dag, env))
     return out
+
+
+def _normalize_seeds(seed, n: int) -> List[int]:
+    """One seed per problem from any int-like scalar or sequence.
+
+    ``np.isscalar`` is the wrong predicate here: it rejects 0-d numpy
+    arrays (``np.array(7)``) and, on some numpy versions, numpy integer
+    scalars — both of which flow naturally out of configs and RNGs. Treat
+    anything 0-d as a broadcast scalar, any 1-d integer-like sequence as
+    per-problem seeds.
+    """
+    arr = np.asarray(seed)
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(f"seed must be int-like, got dtype {arr.dtype}")
+    if arr.ndim == 0:
+        return [int(arr)] * n
+    if arr.ndim != 1:
+        raise ValueError(f"seed must be a scalar or 1-d sequence, "
+                         f"got shape {arr.shape}")
+    if arr.shape[0] != n:
+        raise ValueError(f"{arr.shape[0]} seeds for {n} problems")
+    return [int(s) for s in arr]
 
 
 def pack_problems(problems: Sequence[ProblemLike],
@@ -122,9 +144,11 @@ def _fleet_runner(cfg: PSOGAConfig) -> Callable:
         return cached
 
     vstep = jax.vmap(lambda pp, st: swarm_step(pp, st, cfg))
-    vfit = jax.vmap(jax.vmap(
-        lambda pp, x: fitness_key(simulate_padded(pp, x, cfg.faithful_sim)),
-        in_axes=(None, 0)))
+    # one swarm-fitness per problem, vmapped over the fleet: the scan
+    # backend batches the two-phase simulate_padded; the pallas backend's
+    # grid picks up the problem axis as an outer grid dimension.
+    vfit = jax.vmap(lambda pp, X: make_swarm_fitness(
+        pp, cfg.faithful_sim, cfg.fitness_backend)(X))
 
     def run(ppb: PaddedProblem, keys: jnp.ndarray,
             X0b: jnp.ndarray) -> _SwarmState:
@@ -180,9 +204,7 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
     """
     probs = _as_problems(problems)
     n = len(probs)
-    seeds = [int(seed)] * n if np.isscalar(seed) else [int(s) for s in seed]
-    if len(seeds) != n:
-        raise ValueError(f"{len(seeds)} seeds for {n} problems")
+    seeds = _normalize_seeds(seed, n)
 
     ppb = pack_problems(probs, bucket=bucket)
     max_p = int(ppb.compute.shape[1])

@@ -19,18 +19,69 @@ particles is exactly the paper's Eq. 16 order.
 """
 from __future__ import annotations
 
+from typing import Callable
+
 import jax.numpy as jnp
 
-from .simulator import SimResult
+from .simulator import PaddedProblem, SimResult, simulate_swarm
 
 #: Must exceed any attainable C_total; costs in both the paper fleet and the
 #: TPU fleet are well under $1e4 per request batch.
 INFEASIBLE_OFFSET = 1e4
 
-__all__ = ["INFEASIBLE_OFFSET", "fitness_key"]
+__all__ = ["INFEASIBLE_OFFSET", "fitness_key", "make_swarm_fitness",
+           "resolve_fitness_backend"]
 
 
 def fitness_key(res: SimResult) -> jnp.ndarray:
     total_time = jnp.sum(res.app_completion, axis=-1)
     infeasible_key = INFEASIBLE_OFFSET + jnp.log1p(total_time)
     return jnp.where(res.feasible, res.total_cost, infeasible_key)
+
+
+def resolve_fitness_backend(backend: str) -> str:
+    """``"auto"`` → pallas on TPU, scan elsewhere (matching
+    ``kernels.ops.interpret_default``); else validate and pass through."""
+    if backend == "auto":
+        from ..kernels.ops import interpret_default
+        return "scan" if interpret_default() else "pallas"
+    if backend not in ("scan", "pallas"):
+        raise ValueError(f"unknown fitness_backend {backend!r} "
+                         "(expected scan | pallas | auto)")
+    return backend
+
+
+def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
+                       backend: str = "scan"
+                       ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Swarm-fitness evaluator ``X (P, max_p) -> keys (P,)`` (DESIGN.md §8).
+
+    ``backend="scan"`` is the bit-exact default: the swarm-level
+    two-phase scan (``simulator.simulate_swarm`` — shared step indices,
+    particle axis inside each op). ``backend="pallas"`` dispatches the
+    whole tile to ``kernels.schedule_sim`` (the layer loop lives inside
+    the kernel, interpret mode off-TPU). Both return the same
+    ``(total_cost, feasible, Σ T_i^comp)`` summary, to which the 3-case
+    key (Eq. 14–16) is applied here. Both close over ``pp`` — ``vmap``
+    freely over a fleet axis (pallas picks up an outer grid dimension).
+    """
+    backend = resolve_fitness_backend(backend)
+    if backend == "scan":
+        def raw(X: jnp.ndarray):
+            return simulate_swarm(pp, X, faithful)
+    else:
+        from ..kernels.ops import interpret_default
+        from ..kernels.schedule_sim import schedule_replay_folded
+
+        def raw(X: jnp.ndarray):
+            return schedule_replay_folded(
+                pp.order, pp.compute, pp.parent_idx, pp.parent_mb,
+                pp.child_idx, pp.child_mb, pp.app_id, pp.deadline,
+                pp.pinned, pp.power, pp.cost_per_sec, pp.inv_bw,
+                pp.tran_cost, pp.link_ok, X, faithful=faithful,
+                interpret=interpret_default())
+
+    def fit(X: jnp.ndarray) -> jnp.ndarray:
+        total, feas, tsum = raw(X)
+        return jnp.where(feas, total, INFEASIBLE_OFFSET + jnp.log1p(tsum))
+    return fit

@@ -227,7 +227,9 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
                        pso: PSOGAConfig = PSOGAConfig(pop_size=64,
                                                       max_iters=300,
                                                       stall_iters=40),
-                       seed: int = 0) -> List[OffloadPlan]:
+                       seed: int = 0,
+                       fitness_backend: Optional[str] = None
+                       ) -> List[OffloadPlan]:
     """Plan many serving requests with ONE batched PSO-GA fleet.
 
     ``requests``: sequence of (cfg, shape, deadline_ratio). All requests
@@ -235,9 +237,14 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
     HEFT-derived deadline, then the whole fleet is solved by
     ``run_pso_ga_batch`` (each problem matches a sequential
     ``run_pso_ga(..., seed=seed)`` gene-for-gene; see DESIGN.md §4).
+    ``fitness_backend`` (scan | pallas | auto, DESIGN.md §8) overrides
+    ``pso.fitness_backend`` when given — the serve path exposes it as
+    ``--fitness-backend`` without rebuilding the whole config.
     """
     from .batch import run_pso_ga_batch      # local: avoid import cycle
 
+    if fitness_backend is not None:
+        pso = dataclasses.replace(pso, fitness_backend=fitness_backend)
     env = env or tpu_fleet_environment()
     if pin_server is None:
         pin_server = int(env.servers_of_tier(DEVICE)[0])

@@ -16,9 +16,11 @@ with the self-adaptive inertia weight (Eq. 22–23)
 (d→0 ⇒ w→w_min: converged particles mutate rarely; d→1 ⇒ w→w_max).
 Acceleration coefficients ramp linearly: c1 0.9→0.2, c2 0.4→0.9 [34].
 
-The whole swarm advances in one jitted step: fitness is the vmapped
-Algorithm-2 simulator, mutation/crossover are vectorized index ops, and
-the iteration loop is a ``lax.while_loop`` with the paper's stopping rule
+The whole swarm advances in one jitted step: fitness is the swarm-level
+Algorithm-2 simulator (``fitness.make_swarm_fitness`` — two-phase scan
+or the Pallas replay kernel, per ``PSOGAConfig.fitness_backend``,
+DESIGN.md §8), mutation/crossover are vectorized index ops, and the
+iteration loop is a ``lax.while_loop`` with the paper's stopping rule
 (terminate when gBest is unchanged for ``stall_iters`` iterations, or at
 ``max_iters``).
 """
@@ -34,9 +36,9 @@ import numpy as np
 
 from .dag import LayerDAG
 from .environment import Environment
-from .fitness import fitness_key
+from .fitness import make_swarm_fitness
 from .simulator import (PaddedProblem, SimProblem, build_simulator,
-                        pad_problem, simulate_padded)
+                        pad_problem)
 
 __all__ = ["PSOGAConfig", "PSOGAResult", "run_pso_ga", "init_swarm",
            "swarm_step"]
@@ -58,6 +60,10 @@ class PSOGAConfig:
     #   ">4 s" are only reproduced with parent gating); True = the printed
     #   Alg. 2 line-21 recurrence verbatim (see DESIGN.md §2).
     bias_init_to_tiers: bool = True  # seed swarm with tier-aware particles
+    fitness_backend: str = "scan"   # scan | pallas | auto (DESIGN.md §8):
+    #   "scan" = two-phase simulate_padded under vmap (bit-exact default);
+    #   "pallas" = kernels/schedule_sim tile kernel (interpret off-TPU);
+    #   "auto" = pallas on TPU, scan elsewhere.
 
 
 class PSOGAResult(NamedTuple):
@@ -117,9 +123,11 @@ def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
     # behind two WIFI hops); mutation may still propose them.
     logits = jnp.where(jnp.asarray(allowed), 0.0, -jnp.inf)   # (p, S)
     k1, _ = jax.random.split(key)
+    # categorical broadcasts logits over the requested sample shape: the
+    # gumbel draw is (P, p, S) either way, so this samples bit-identically
+    # to materializing a (P, p, S) logits tensor — without the copy.
     X = jax.random.categorical(
-        k1, logits[None, :, :].repeat(cfg.pop_size, axis=0), axis=-1
-    ).astype(jnp.int32)
+        k1, logits, axis=-1, shape=(cfg.pop_size, p)).astype(jnp.int32)
     if cfg.bias_init_to_tiers:
         # Warm-start anchors (standard metaheuristic practice; ≤ S+1 of the
         # swarm): the all-home placement (the paper's loose-deadline
@@ -148,8 +156,7 @@ def swarm_step(pp: PaddedProblem, state: _SwarmState,
     p = pp.num_layers                 # true sizes; 0-d, traced under vmap
     s = pp.num_servers
     P = cfg.pop_size
-    fit = jax.vmap(
-        lambda x: fitness_key(simulate_padded(pp, x, cfg.faithful_sim)))
+    fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend)
 
     key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
         state.key, 8)
@@ -210,8 +217,7 @@ def swarm_step(pp: PaddedProblem, state: _SwarmState,
 def _make_step(prob: SimProblem, cfg: PSOGAConfig):
     """Unbatched (zero-padding) step + swarm-fitness for one problem."""
     pp = pad_problem(prob)
-    fit = jax.vmap(
-        lambda x: fitness_key(simulate_padded(pp, x, cfg.faithful_sim)))
+    fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend)
     return partial(swarm_step, pp, cfg=cfg), fit
 
 
@@ -235,8 +241,10 @@ def run_pso_ga(dag: LayerDAG, env: Environment,
         def body(state, _):
             state = step(state)
             return state, state.gbest_f
-        state, hist = jax.lax.scan(
-            jax.jit(body), state, None, length=cfg.max_iters)
+        # scan traces (and the surrounding dispatch jit-compiles) the body
+        # itself — wrapping it in jax.jit would only re-enter the jit
+        # cache every iteration.
+        state, hist = jax.lax.scan(body, state, None, length=cfg.max_iters)
         history = np.asarray(hist)
         iters = cfg.max_iters
     else:

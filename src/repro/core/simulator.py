@@ -38,14 +38,23 @@ entries are -1 and execute as zero-cost no-ops), servers to ``max_S``
 (padded servers are unreachable: ``link_ok`` false, never selected by the
 solver), apps to ``max_apps`` (deadline +inf). ``build_simulator`` is the
 zero-padding special case; ``repro.core.batch`` stacks N heterogeneous
-``PaddedProblem``s along a leading axis and vmaps ``simulate_padded`` over
-the whole fleet (DESIGN.md §4).
+``PaddedProblem``s along a leading axis and vmaps the swarm evaluator
+over the whole fleet (DESIGN.md §4).
+
+Both JAX entry points use the two-phase split of DESIGN.md §8 —
+carry-independent quantities precomputed in one vectorized pass, then a
+minimal-carry ``lax.scan``: ``simulate_padded`` evaluates ONE assignment
+and returns the full ``SimResult`` (the epilogue/test path);
+``simulate_swarm`` evaluates a whole ``(P, max_p)`` swarm with shared
+step indices and returns only the fitness summary — the PSO-GA hot path
+(``fitness.make_swarm_fitness``'s "scan" backend; the "pallas" backend
+is its in-kernel twin, ``kernels/schedule_sim.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +65,8 @@ from .environment import Environment
 
 MIN_BW = 1e-9   # MB/s stand-in for "no link"
 __all__ = ["SimResult", "SimProblem", "PaddedProblem", "pad_problem",
-           "simulate_padded", "simulate_np", "build_simulator", "MIN_BW"]
+           "simulate_padded", "simulate_swarm", "simulate_np",
+           "build_simulator", "MIN_BW"]
 
 
 class SimResult(NamedTuple):
@@ -276,10 +286,81 @@ def pad_problem(prob: SimProblem,
         num_apps=jnp.asarray(a, jnp.int32))
 
 
+class _ScanInputs(NamedTuple):
+    """Carry-independent per-step quantities (phase 1 of the two-phase
+    split, DESIGN.md §8) — everything Algorithm 2 needs at step ``t``
+    except the evolving ``(lease, end, t_on)`` state. All leading axes
+    are ``max_p`` (one row per scan step, in ``order`` sequence)."""
+    valid: jnp.ndarray      # (max_p,) bool — real (non-padded) step
+    jsafe: jnp.ndarray      # (max_p,) layer index (0 for padded steps)
+    srv: jnp.ndarray        # (max_p,) server executing the layer
+    exe: jnp.ndarray        # (max_p,) execution seconds a/p  (Eq. 4)
+    max_trans: jnp.ndarray  # (max_p,) max incoming transfer ∂/ℓ (Eq. 6)
+    out_t: jnp.ndarray      # (max_p,) total outgoing transfer (line 21)
+    psafe: jnp.ndarray      # (max_p, max_in) parent indices (0-safe)
+    pmask: jnp.ndarray      # (max_p, max_in) real-parent mask
+    tt: jnp.ndarray         # (max_p, max_in) per-edge transfer seconds
+
+
+def _precompute_scan_inputs(pp: PaddedProblem, x: jnp.ndarray
+                            ) -> Tuple[_ScanInputs, jnp.ndarray, jnp.ndarray]:
+    """Phase 1: one vectorized O(max_p · max_in) pass over the schedule.
+
+    Returns ``(inputs, trans_cost, link_bad)``. Per-edge transfer times,
+    transmission cost, link-violation flags, per-layer execution times and
+    the server gathers ``x[parent_idx]`` are all carry-independent, so
+    they vectorize over every step at once instead of being recomputed
+    one dynamic gather at a time inside the scan (DESIGN.md §8). Masked
+    (padded) entries contribute exact zeros, appended after the real
+    entries, so reductions are padding-invariant.
+    """
+    j = pp.order                                   # (max_p,)
+    valid = j >= 0
+    jsafe = jnp.where(valid, j, 0)
+    srv = x[jsafe]                                 # (max_p,)
+    exe = pp.compute[jsafe] / pp.power[srv]
+    pars = pp.parent_idx[jsafe]                    # (max_p, max_in)
+    pmask = (pars >= 0) & valid[:, None]
+    psafe = jnp.where(pmask, pars, 0)
+    psrv = x[psafe]                                # (max_p, max_in)
+    srv_b = srv[:, None]
+    mb = pp.parent_mb[jsafe]
+    tt = mb * pp.inv_bw[psrv, srv_b]               # (max_p, max_in)
+    max_trans = jnp.max(jnp.where(pmask, tt, 0.0), axis=1, initial=0.0)
+    trans_cost = jnp.sum(jnp.where(pmask, pp.tran_cost[psrv, srv_b] * mb,
+                                   0.0))
+    link_bad = jnp.any(pmask & ~pp.link_ok[psrv, srv_b] & (psrv != srv_b))
+    kids = pp.child_idx[jsafe]                     # (max_p, max_out)
+    kmask = (kids >= 0) & valid[:, None]
+    ksrv = x[jnp.where(kmask, kids, 0)]
+    out_t = jnp.sum(jnp.where(kmask,
+                              pp.child_mb[jsafe] * pp.inv_bw[srv_b, ksrv],
+                              0.0), axis=1)
+    link_bad = link_bad | jnp.any(
+        kmask & ~pp.link_ok[srv_b, ksrv] & (ksrv != srv_b))
+    return (_ScanInputs(valid=valid, jsafe=jsafe, srv=srv, exe=exe,
+                        max_trans=max_trans, out_t=out_t,
+                        psafe=psafe, pmask=pmask, tt=tt),
+            trans_cost, link_bad)
+
+
 def simulate_padded(pp: PaddedProblem, x: jnp.ndarray,
                     faithful: bool = True) -> SimResult:
     """Algorithm 2 on the padded representation. Pure — vmap over particles
     (``x`` axis) and/or problems (leading ``pp`` axis) freely.
+
+    Two-phase evaluation (DESIGN.md §8): phase 1 precomputes every
+    carry-independent quantity in one vectorized pass
+    (``_precompute_scan_inputs``); phase 2 is a ``lax.scan`` whose carry
+    is just ``(lease, end)`` — ``(lease,)`` alone in faithful mode, whose
+    recurrence never reads ``end`` — and whose body is one server gather,
+    the parent-gate ``end`` gather (corrected mode only), and drop-mode
+    scatters (a padded step scatters out of bounds and is dropped, so no
+    read-modify-write). ``t_on`` leaves the carry entirely: the scan
+    emits per-step start times and ``t_on`` is a post-scan
+    ``segment_min`` over servers (min is order-independent, so this is
+    bit-identical to the carried version); ``used`` is
+    ``isfinite(t_on)``.
 
     Padded ``order`` entries (-1) leave every piece of carry state
     untouched, so a padded layer is a zero-cost no-op and the result is
@@ -290,54 +371,46 @@ def simulate_padded(pp: PaddedProblem, x: jnp.ndarray,
     max_S = pp.power.shape[0]
     max_apps = pp.deadline.shape[0]
 
-    def step(carry, j):
-        lease, t_on, used, end, trans_cost, link_bad = carry
-        valid = j >= 0
-        jsafe = jnp.where(valid, j, 0)
-        srv = x[jsafe]
-        exe = pp.compute[jsafe] / pp.power[srv]
-        pars = pp.parent_idx[jsafe]               # (max_in,)
-        pmask = (pars >= 0) & valid
-        psafe = jnp.where(pmask, pars, 0)
-        psrv = x[psafe]
-        mb = pp.parent_mb[jsafe]
-        tt = mb * pp.inv_bw[psrv, srv]            # (max_in,)
-        max_trans = jnp.max(jnp.where(pmask, tt, 0.0), initial=0.0)
-        parent_gate = jnp.max(jnp.where(pmask, end[psafe] + tt, 0.0),
-                              initial=0.0)
-        trans_cost = trans_cost + jnp.sum(
-            jnp.where(pmask, pp.tran_cost[psrv, srv] * mb, 0.0))
-        link_bad = link_bad | jnp.any(
-            pmask & ~pp.link_ok[psrv, srv] & (psrv != srv))
-        if faithful:
-            start = lease[srv] + max_trans
-        else:
-            start = jnp.maximum(lease[srv], parent_gate)
-        t_end = start + exe
-        end = end.at[jsafe].set(jnp.where(valid, t_end, end[jsafe]))
-        t_on = t_on.at[srv].min(jnp.where(valid, start, jnp.inf))
-        used = used.at[srv].set(used[srv] | valid)
-        kids = pp.child_idx[jsafe]
-        kmask = (kids >= 0) & valid
-        ksafe = jnp.where(kmask, kids, 0)
-        out_t = jnp.sum(jnp.where(kmask,
-                                  pp.child_mb[jsafe] * pp.inv_bw[srv, x[ksafe]],
-                                  0.0))
-        link_bad = link_bad | jnp.any(
-            kmask & ~pp.link_ok[srv, x[ksafe]] & (x[ksafe] != srv))
-        if faithful:
-            new_lease = lease[srv] + exe + out_t
-        else:
-            new_lease = t_end + out_t
-        lease = lease.at[srv].set(jnp.where(valid, new_lease, lease[srv]))
-        return (lease, t_on, used, end, trans_cost, link_bad), None
+    inputs, trans_cost, link_bad = _precompute_scan_inputs(pp, x)
+    # out-of-bounds index for padded steps: drop-mode scatters skip them
+    srv_idx = jnp.where(inputs.valid, inputs.srv, max_S)
+    j_idx = jnp.where(inputs.valid, inputs.jsafe, max_p)
 
-    init = (jnp.zeros(max_S), jnp.full(max_S, jnp.inf),
-            jnp.zeros(max_S, bool), jnp.zeros(max_p),
-            jnp.asarray(0.0), jnp.asarray(False))
-    (lease, t_on, used, end, trans_cost, link_bad), _ = jax.lax.scan(
-        step, init, pp.order)
+    def step(carry, inp):
+        inp, srv_i, j_i = inp
+        if faithful:
+            lease, = carry
+            lease_srv = lease[inp.srv]
+            start = lease_srv + inp.max_trans
+            new_lease = lease_srv + inp.exe + inp.out_t
+        else:
+            lease, end = carry
+            parent_gate = jnp.max(
+                jnp.where(inp.pmask, end[inp.psafe] + inp.tt, 0.0),
+                initial=0.0)
+            start = jnp.maximum(lease[inp.srv], parent_gate)
+            new_lease = start + inp.exe + inp.out_t
+        t_end = start + inp.exe
+        lease = lease.at[srv_i].set(new_lease, mode="drop")
+        if faithful:
+            return (lease,), (start, t_end)
+        end = end.at[j_i].set(t_end, mode="drop")
+        return (lease, end), (start, t_end)
 
+    init = (jnp.zeros(max_S),) if faithful \
+        else (jnp.zeros(max_S), jnp.zeros(max_p))
+    carry, (start_seq, t_end_seq) = jax.lax.scan(
+        step, init, (inputs, srv_idx, j_idx))
+    lease = carry[0]
+    if faithful:   # end never feeds back into the faithful recurrence —
+        # one vectorized scatter after the scan (padded steps dropped)
+        end = jnp.zeros(max_p).at[j_idx].set(t_end_seq, mode="drop")
+    else:
+        end = carry[1]
+    t_on = jax.ops.segment_min(
+        jnp.where(inputs.valid, start_seq, jnp.inf), inputs.srv,
+        num_segments=max_S)
+    used = ~jnp.isinf(t_on)
     # Empty (padded) apps reduce to -inf under segment_max; clamp to 0 —
     # real completions are >= 0, so this changes nothing for real apps.
     app_completion = jnp.maximum(
@@ -352,6 +425,119 @@ def simulate_padded(pp: PaddedProblem, x: jnp.ndarray,
                      comp_cost=comp_cost, trans_cost=trans_cost,
                      total_cost=total, feasible=feasible,
                      makespan=jnp.max(end, initial=0.0))
+
+
+def simulate_swarm(pp: PaddedProblem, X: jnp.ndarray,
+                   faithful: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Algorithm 2 for a whole swarm at once: ``X (P, max_p)`` int32 →
+    per-particle ``(total_cost, feasible, Σ T_i^comp)``.
+
+    This is the ``"scan"`` fitness backend's hot path (DESIGN.md §8) and
+    the jnp twin of the Pallas replay kernel: where
+    ``vmap(simulate_padded)`` would batch every per-particle dynamic
+    gather and recompute the x-independent DAG structure P times, here
+    the particle axis is explicit — step indices (layer id, parent ids)
+    are *shared* scalars, so per-step reads are column slices, the only
+    per-particle indexing is the ``(P, S)`` server one-hot select, and
+    phase 1 runs once for the whole swarm. ``t_on`` is recovered
+    post-scan by a masked min over steps (order-independent, bit-exact).
+    Returns the same summary triple as ``kernels.schedule_sim`` so
+    ``fitness.make_swarm_fitness`` treats both backends uniformly.
+    """
+    X = jnp.asarray(X).astype(jnp.int32)
+    P, max_p = X.shape
+    max_S = pp.power.shape[0]
+    max_apps = pp.deadline.shape[0]
+
+    # ---- phase 1, swarm-wide: everything carry-independent ----
+    order = pp.order
+    valid = order >= 0                                 # (max_p,) shared
+    jsafe = jnp.where(valid, order, 0)
+    srv = jnp.take(X, jsafe, axis=1)                   # (P, max_p)
+    exe = pp.compute[jsafe][None, :] / pp.power[srv]
+    pars = pp.parent_idx[jsafe]                        # (max_p, max_in)
+    pmask = (pars >= 0) & valid[:, None]               # shared
+    psafe = jnp.where(pmask, pars, 0)
+    psrv = jnp.take(X, psafe, axis=1)                  # (P, max_p, max_in)
+    srv_b = srv[:, :, None]
+    mb = pp.parent_mb[jsafe][None, :, :]
+    tt = mb * pp.inv_bw[psrv, srv_b]                   # (P, max_p, max_in)
+    pm = pmask[None, :, :]
+    max_trans = jnp.max(jnp.where(pm, tt, 0.0), axis=2, initial=0.0)
+    trans_cost = jnp.sum(jnp.where(pm, pp.tran_cost[psrv, srv_b] * mb, 0.0),
+                         axis=(1, 2))
+    link_bad = jnp.any(pm & ~pp.link_ok[psrv, srv_b] & (psrv != srv_b),
+                       axis=(1, 2))
+    kids = pp.child_idx[jsafe]
+    kmask = ((kids >= 0) & valid[:, None])[None, :, :]
+    ksrv = jnp.take(X, jnp.where(kmask[0], kids, 0), axis=1)
+    out_t = jnp.sum(jnp.where(kmask,
+                              pp.child_mb[jsafe][None] * pp.inv_bw[srv_b,
+                                                                   ksrv],
+                              0.0), axis=2)
+    link_bad = link_bad | jnp.any(
+        kmask & ~pp.link_ok[srv_b, ksrv] & (ksrv != srv_b), axis=(1, 2))
+
+    # ---- phase 2: scan over steps, particle axis inside each op ----
+    iota_S = jnp.arange(max_S)
+    xs = (valid, jsafe, srv.T, exe.T, max_trans.T, out_t.T,
+          psafe, pmask, jnp.swapaxes(tt, 0, 1))
+
+    def step(carry, inp):
+        valid_t, j_t, srv_t, exe_t, mt_t, ot_t, psafe_t, pmask_t, tt_t = inp
+        srv_oh = (srv_t[:, None] == iota_S[None, :]) & valid_t   # (P, S)
+        if faithful:
+            lease, = carry
+        else:
+            lease, end = carry
+        lease_srv = jnp.take_along_axis(lease, srv_t[:, None], axis=1)[:, 0]
+        if faithful:
+            start = lease_srv + mt_t
+            new_lease = lease_srv + exe_t + ot_t
+        else:
+            ep = jnp.take(end, psafe_t, axis=1)        # (P, max_in) shared
+            gate = jnp.max(jnp.where(pmask_t[None, :], ep + tt_t, 0.0),
+                           axis=1, initial=0.0)
+            start = jnp.maximum(lease_srv, gate)
+            new_lease = start + exe_t + ot_t
+        t_end = start + exe_t
+        lease = jnp.where(srv_oh, new_lease[:, None], lease)
+        if faithful:
+            return (lease,), (start, t_end)
+        old = jax.lax.dynamic_slice(end, (0, j_t), (P, 1))
+        end = jax.lax.dynamic_update_slice(
+            end, jnp.where(valid_t, t_end[:, None], old), (0, j_t))
+        return (lease, end), (start, t_end)
+
+    init = (jnp.zeros((P, max_S)),) if faithful \
+        else (jnp.zeros((P, max_S)), jnp.zeros((P, max_p)))
+    carry, (start_seq, t_end_seq) = jax.lax.scan(step, init, xs)
+    lease = carry[0]
+    if faithful:
+        j_idx = jnp.where(valid, jsafe, max_p)
+        end = jnp.zeros((P, max_p)).at[:, j_idx].set(t_end_seq.T,
+                                                     mode="drop")
+    else:
+        end = carry[1]
+    start_all = start_seq.T                            # (P, max_p)
+    t_on = jnp.min(jnp.where((srv[:, :, None] == iota_S) & valid[None, :,
+                                                                 None],
+                             start_all[:, :, None], jnp.inf), axis=1)
+
+    used = ~jnp.isinf(t_on)
+    app_oh = pp.app_id[None, :] == jnp.arange(max_apps)[:, None]
+    appc = jnp.maximum(jnp.max(jnp.where(app_oh[None, :, :],
+                                         end[:, None, :], -jnp.inf),
+                               axis=2), 0.0)          # (P, max_apps)
+    t_on_safe = jnp.where(used, t_on, 0.0)
+    comp_cost = jnp.sum(jnp.where(used, pp.cost_per_sec[None, :]
+                                  * (lease - t_on_safe), 0.0), axis=1)
+    pin_ok = jnp.all((pp.pinned[None, :] < 0) | (X == pp.pinned[None, :]),
+                     axis=1)
+    feasible = jnp.all(appc <= pp.deadline[None, :], axis=1) \
+        & pin_ok & ~link_bad
+    return comp_cost + trans_cost, feasible, jnp.sum(appc, axis=1)
 
 
 def build_simulator(prob: SimProblem, faithful: bool = True):

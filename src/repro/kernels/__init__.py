@@ -2,15 +2,20 @@
 
 The paper itself has no kernel-level contribution (it is a scheduling
 paper); these kernels are the hot inner loops of the serving/training
-substrate its placements execute on (DESIGN.md §3):
+substrate its placements execute on (DESIGN.md §3) — plus the planner's
+own hot loop:
 
   * flash_attention — causal / sliding-window prefill attention
   * ssd_scan        — Mamba2 intra-chunk SSD quadratic form
   * decode_attention — flash-decode against long KV caches
+  * schedule_sim    — Algorithm-2 swarm-fitness replay for PSO-GA
+    (grid over particle tiles, layer loop + lease/end/t_on state inside
+    the kernel; DESIGN.md §8)
 
-Each has ``ops.py`` (jit'd layout wrapper) and ``ref.py`` (pure-jnp
-oracle); tests sweep shapes/dtypes and assert allclose in interpret mode.
+Each has ``ops.py`` (jit'd layout wrapper) or a folded entry point and
+``ref.py`` (pure-jnp oracle); tests sweep shapes/dtypes and assert
+allclose in interpret mode.
 """
-from . import ops, ref
+from . import ops, ref, schedule_sim
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "schedule_sim"]

@@ -6,15 +6,16 @@ fine here.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -2.0 ** 30
 
 __all__ = ["flash_attention_ref", "ssd_intra_ref", "decode_attention_ref",
-           "NEG_INF"]
+           "schedule_replay_ref", "NEG_INF"]
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -66,3 +67,82 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     s = jnp.where(ok, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgc,bckd->bkgd", w, v.astype(jnp.float32))
+
+
+def schedule_replay_ref(order, compute, parent_idx, parent_mb, child_idx,
+                        child_mb, app_id, deadline, pinned, power,
+                        cost_per_sec, inv_bw, tran_cost, link_ok, X,
+                        faithful: bool = True
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for ``schedule_sim.schedule_replay_folded`` — Algorithm 2
+    replayed with a plain Python layer loop, vectorized over particles.
+
+    Same padded contract as the kernel: ``order``/parent/child ids padded
+    -1, apps padded deadline +inf; ``X`` is (P, max_p) int32. Returns
+    per-particle ``(total_cost, feasible, time_sum)``. The DAG structure
+    is concretized with numpy (this is a definition, not a fast path).
+    """
+    order = np.asarray(order)
+    parent_idx_np = np.asarray(parent_idx)
+    child_idx_np = np.asarray(child_idx)
+    X = jnp.asarray(X, jnp.int32)
+    P, max_p = X.shape
+    S = power.shape[0]
+    rows = jnp.arange(P)
+    lease = jnp.zeros((P, S))
+    t_on = jnp.full((P, S), jnp.inf)
+    end = jnp.zeros((P, max_p))
+    trans = jnp.zeros(P)
+    bad = jnp.zeros(P, bool)
+
+    for j in order:
+        if j < 0:
+            continue
+        srv = X[:, j]
+        exe = compute[j] / power[srv]
+        max_tr = jnp.zeros(P)
+        gate = jnp.zeros(P)
+        for k in range(parent_idx_np.shape[1]):
+            pj = int(parent_idx_np[j, k])
+            if pj < 0:
+                continue
+            psrv = X[:, pj]
+            tt = parent_mb[j, k] * inv_bw[psrv, srv]
+            max_tr = jnp.maximum(max_tr, tt)
+            gate = jnp.maximum(gate, end[:, pj] + tt)
+            trans = trans + tran_cost[psrv, srv] * parent_mb[j, k]
+            bad = bad | (~link_ok[psrv, srv].astype(bool) & (psrv != srv))
+        lease_srv = lease[rows, srv]
+        start = lease_srv + max_tr if faithful \
+            else jnp.maximum(lease_srv, gate)
+        t_end = start + exe
+        out_t = jnp.zeros(P)
+        for k in range(child_idx_np.shape[1]):
+            cj = int(child_idx_np[j, k])
+            if cj < 0:
+                continue
+            csrv = X[:, cj]
+            out_t = out_t + child_mb[j, k] * inv_bw[srv, csrv]
+            bad = bad | (~link_ok[srv, csrv].astype(bool) & (csrv != srv))
+        end = end.at[:, j].set(t_end)
+        t_on = t_on.at[rows, srv].min(start)
+        lease = lease.at[rows, srv].set(
+            lease_srv + exe + out_t if faithful else t_end + out_t)
+
+    app_id_np = np.asarray(app_id)
+    feas = jnp.ones(P, bool)
+    tsum = jnp.zeros(P)
+    for a in range(deadline.shape[0]):
+        sel = app_id_np == a
+        appc = jnp.maximum(
+            jnp.max(jnp.where(jnp.asarray(sel)[None, :], end, -jnp.inf),
+                    axis=1), 0.0)
+        feas &= appc <= deadline[a]
+        tsum += appc
+    pin = jnp.asarray(pinned)[None, :]
+    feas &= jnp.all((pin < 0) | (X == pin), axis=1)
+    used = ~jnp.isinf(t_on)
+    comp = jnp.sum(jnp.where(used, cost_per_sec[None, :]
+                             * (lease - jnp.where(used, t_on, 0.0)), 0.0),
+                   axis=1)
+    return comp + trans, feas & ~bad, tsum

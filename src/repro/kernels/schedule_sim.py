@@ -1,0 +1,253 @@
+"""Pallas TPU kernel replaying paper Algorithm 2 for a whole particle tile.
+
+The PSO-GA fitness hot path evaluates P particles (server-assignment
+vectors) against one padded problem per swarm iteration. The scan-based
+path (``core.simulator.simulate_padded`` under ``vmap``) pays per-layer
+dispatch for every step of the schedule replay; this kernel moves the
+layer loop *inside* one ``pallas_call`` so the whole replay of a particle
+tile is a single fused program (DESIGN.md §8):
+
+  * grid ``(num_particle_tiles,)`` — one grid cell replays ``tile_p``
+    particles; ``jax.vmap`` adds the fleet's problem axis as an outer
+    grid dimension (``core.batch._fleet_runner`` relies on this).
+  * ``lease (tile_p, S)`` / ``t_on (tile_p, S)`` / ``end (tile_p, p)``
+    are held in VMEM scratch across the ``fori_loop`` over layers;
+    scalar accumulators (transmission cost, link violations) ride in a
+    ``(tile_p, 2)`` scratch strip.
+  * server-indexed lookups (``inv_bw[x[parent], x[j]]`` etc.) are
+    expressed as one-hot row selections — ``(tile_p, S) @ (S, S)``
+    contractions that hit the MXU — instead of gathers, which Mosaic
+    supports poorly; per-layer DAG structure (parent/child ids, datasets)
+    is read as scalars since it is shared by every particle in the tile.
+
+The kernel returns the per-particle summary the fitness key needs —
+``(total_cost, feasible, Σ app_completion)`` — not the full ``SimResult``
+(the solver epilogue re-simulates only the single gbest). Feasibility
+folds deadlines, pins, and link violations, exactly like the scan path.
+
+No ``repro.core`` imports here: the kernel layer stays below core
+(DESIGN.md §1), so the problem arrives as raw padded arrays and the
+3-case fitness key (Eq. 14–16) is applied by ``core.fitness``.
+
+Validated in interpret mode against ``ref.schedule_replay_ref`` and the
+numpy oracle (``tests/test_schedule_sim.py``); this container is
+CPU-only, TPU is the TARGET.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["schedule_replay_folded", "DEFAULT_TILE_P"]
+
+#: particles per grid cell; swarm sizes are padded up to a multiple.
+DEFAULT_TILE_P = 32
+
+
+def _row(one_hot_f: jnp.ndarray, mat: jnp.ndarray) -> jnp.ndarray:
+    """(T, S) one-hot @ (S, S) matrix -> (T, S): row ``mat[sel, :]``."""
+    return jax.lax.dot_general(one_hot_f, mat, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _schedule_kernel(x_ref, order_ref, compute_ref, parent_idx_ref,
+                     parent_mb_ref, child_idx_ref, child_mb_ref, app_id_ref,
+                     deadline_ref, pinned_ref, power_ref, cost_ref,
+                     inv_bw_ref, tran_ref, link_ref,
+                     total_ref, feas_ref, tsum_ref,
+                     lease_s, t_on_s, end_s, acc_s, *,
+                     tile_p: int, max_p: int, max_in: int, max_out: int,
+                     max_S: int, max_apps: int, faithful: bool):
+    X = x_ref[:]                                   # (T, max_p) int32
+    inv_bw = inv_bw_ref[:]                         # (S, S) f32
+    tran = tran_ref[:]
+    link = link_ref[:]                             # (S, S) f32 (1 = ok)
+    power = power_ref[:]                           # (S,)
+    col_S = jax.lax.broadcasted_iota(jnp.int32, (tile_p, max_S), 1)
+    # transposed copies: parent-side lookups select column `srv`, i.e. a
+    # row of the transpose — keeps every select a row-select.
+    inv_bw_t = inv_bw.T
+    tran_t = tran.T
+    link_t = link.T
+
+    lease_s[:] = jnp.zeros((tile_p, max_S), jnp.float32)
+    t_on_s[:] = jnp.full((tile_p, max_S), jnp.inf, jnp.float32)
+    end_s[:] = jnp.zeros((tile_p, max_p), jnp.float32)
+    acc_s[:] = jnp.zeros((tile_p, 2), jnp.float32)  # [trans_cost, n_bad]
+
+    def body(t, _):
+        j = order_ref[t]                           # scalar int32
+        valid = j >= 0
+        jsafe = jnp.maximum(j, 0)
+        srv = jax.lax.dynamic_slice(X, (0, jsafe), (tile_p, 1))[:, 0]
+        srv_ohf = (col_S == srv[:, None]).astype(jnp.float32)  # (T, S)
+        lease = lease_s[:]
+        end = end_s[:]
+        lease_srv = jnp.sum(lease * srv_ohf, axis=1)           # (T,)
+        exe = compute_ref[jsafe] / jnp.sum(power[None, :] * srv_ohf, axis=1)
+        # rows of the (transposed) link matrices for this layer's server
+        in_ibw = _row(srv_ohf, inv_bw_t)           # inv_bw[:, srv]
+        in_tc = _row(srv_ohf, tran_t)              # tran_cost[:, srv]
+        in_lk = _row(srv_ohf, link_t)              # link_ok[:, srv]
+        out_ibw = _row(srv_ohf, inv_bw)            # inv_bw[srv, :]
+        out_lk = _row(srv_ohf, link)               # link_ok[srv, :]
+
+        max_trans = jnp.zeros((tile_p,), jnp.float32)
+        gate = jnp.zeros((tile_p,), jnp.float32)
+        trans_add = jnp.zeros((tile_p,), jnp.float32)
+        bad_add = jnp.zeros((tile_p,), jnp.float32)
+        for k in range(max_in):                    # DAG structure: scalars
+            pj = parent_idx_ref[jsafe, k]
+            pmask = (pj >= 0) & valid
+            pjs = jnp.maximum(pj, 0)
+            mb = parent_mb_ref[jsafe, k]
+            psrv = jax.lax.dynamic_slice(X, (0, pjs), (tile_p, 1))[:, 0]
+            psrv_ohf = (col_S == psrv[:, None]).astype(jnp.float32)
+            tt = mb * jnp.sum(in_ibw * psrv_ohf, axis=1)
+            lk = jnp.sum(in_lk * psrv_ohf, axis=1)
+            max_trans = jnp.maximum(max_trans, jnp.where(pmask, tt, 0.0))
+            if not faithful:   # faithful recurrence never reads `end`
+                ep = jax.lax.dynamic_slice(end, (0, pjs), (tile_p, 1))[:, 0]
+                gate = jnp.maximum(gate, jnp.where(pmask, ep + tt, 0.0))
+            trans_add += jnp.where(
+                pmask, mb * jnp.sum(in_tc * psrv_ohf, axis=1), 0.0)
+            bad_add += jnp.where(pmask & (psrv != srv), 1.0 - lk, 0.0)
+
+        out_t = jnp.zeros((tile_p,), jnp.float32)
+        for k in range(max_out):
+            cj = child_idx_ref[jsafe, k]
+            cmask = (cj >= 0) & valid
+            cjs = jnp.maximum(cj, 0)
+            csrv = jax.lax.dynamic_slice(X, (0, cjs), (tile_p, 1))[:, 0]
+            csrv_ohf = (col_S == csrv[:, None]).astype(jnp.float32)
+            out_t += jnp.where(
+                cmask,
+                child_mb_ref[jsafe, k] * jnp.sum(out_ibw * csrv_ohf, axis=1),
+                0.0)
+            bad_add += jnp.where(
+                cmask & (csrv != srv),
+                1.0 - jnp.sum(out_lk * csrv_ohf, axis=1), 0.0)
+
+        if faithful:
+            start = lease_srv + max_trans
+            new_lease = lease_srv + exe + out_t
+        else:
+            start = jnp.maximum(lease_srv, gate)
+            new_lease = start + exe + out_t
+        t_end = start + exe
+        upd = srv_ohf * valid.astype(jnp.float32)              # (T, S)
+        lease_s[:] = jnp.where(upd > 0, new_lease[:, None], lease)
+        t_on_s[:] = jnp.minimum(
+            t_on_s[:], jnp.where(upd > 0, start[:, None], jnp.inf))
+        old_end = jax.lax.dynamic_slice(end, (0, jsafe), (tile_p, 1))[:, 0]
+        end_s[:, pl.ds(jsafe, 1)] = jnp.where(valid, t_end,
+                                              old_end)[:, None]
+        acc_s[:] = acc_s[:] + jnp.concatenate(
+            [trans_add[:, None], bad_add[:, None]], axis=1)
+        return 0
+
+    jax.lax.fori_loop(0, max_p, body, 0)
+
+    end = end_s[:]
+    lease = lease_s[:]
+    t_on = t_on_s[:]
+    acc = acc_s[:]
+    app_id = app_id_ref[:]                         # (max_p,)
+    pinned = pinned_ref[:]                         # (max_p,)
+    deadline_ok = jnp.ones((tile_p,), bool)
+    tsum = jnp.zeros((tile_p,), jnp.float32)
+    for a in range(max_apps):                      # max_apps is small
+        sel = (app_id == a)[None, :]
+        appc = jnp.maximum(
+            jnp.max(jnp.where(sel, end, -jnp.inf), axis=1), 0.0)
+        deadline_ok &= appc <= deadline_ref[a]
+        tsum += appc
+    pin_ok = jnp.all((pinned[None, :] < 0) | (X == pinned[None, :]), axis=1)
+    used = ~jnp.isinf(t_on)
+    t_on_safe = jnp.where(used, t_on, 0.0)
+    comp = jnp.sum(jnp.where(used, cost_ref[:][None, :] * (lease - t_on_safe),
+                             0.0), axis=1)
+    total_ref[:] = comp + acc[:, 0]
+    feas_ref[:] = deadline_ok & pin_ok & (acc[:, 1] == 0.0)
+    tsum_ref[:] = tsum
+
+
+def schedule_replay_folded(
+        order: jnp.ndarray, compute: jnp.ndarray, parent_idx: jnp.ndarray,
+        parent_mb: jnp.ndarray, child_idx: jnp.ndarray,
+        child_mb: jnp.ndarray, app_id: jnp.ndarray, deadline: jnp.ndarray,
+        pinned: jnp.ndarray, power: jnp.ndarray, cost_per_sec: jnp.ndarray,
+        inv_bw: jnp.ndarray, tran_cost: jnp.ndarray, link_ok: jnp.ndarray,
+        X: jnp.ndarray, *, faithful: bool = True,
+        tile_p: int = DEFAULT_TILE_P, interpret: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Replay Algorithm 2 for every particle in ``X``.
+
+    Args use the padded-problem layout of ``core.simulator.PaddedProblem``
+    (``order`` padded -1, parent/child ids padded -1, servers padded
+    unreachable, apps padded deadline +inf); ``X`` is ``(P, max_p)``
+    int32 server assignments. Returns per-particle
+    ``(total_cost (P,) f32, feasible (P,) bool, time_sum (P,) f32)`` where
+    ``time_sum`` is ``Σ_i T_i^comp`` (the Case-3 fitness input, Eq. 16).
+    """
+    P, max_p = X.shape
+    max_S = power.shape[0]
+    max_in = parent_idx.shape[1]
+    max_out = child_idx.shape[1]
+    max_apps = deadline.shape[0]
+    tile_p = min(tile_p, max(P, 1))
+    n_tiles = pl.cdiv(P, tile_p)
+    p_pad = n_tiles * tile_p
+    if p_pad != P:                                 # pad with copies of row 0
+        X = jnp.concatenate(
+            [X, jnp.broadcast_to(X[:1], (p_pad - P, max_p))], axis=0)
+
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    kernel = functools.partial(
+        _schedule_kernel, tile_p=tile_p, max_p=max_p, max_in=max_in,
+        max_out=max_out, max_S=max_S, max_apps=max_apps, faithful=faithful)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    total, feas, tsum = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_p, max_p), lambda i: (i, 0)),   # X tile
+            full((max_p,)),                                    # order
+            full((max_p,)),                                    # compute
+            full((max_p, max_in)),                             # parent_idx
+            full((max_p, max_in)),                             # parent_mb
+            full((max_p, max_out)),                            # child_idx
+            full((max_p, max_out)),                            # child_mb
+            full((max_p,)),                                    # app_id
+            full((max_apps,)),                                 # deadline
+            full((max_p,)),                                    # pinned
+            full((max_S,)),                                    # power
+            full((max_S,)),                                    # cost_per_sec
+            full((max_S, max_S)),                              # inv_bw
+            full((max_S, max_S)),                              # tran_cost
+            full((max_S, max_S)),                              # link_ok
+        ],
+        out_specs=[pl.BlockSpec((tile_p,), lambda i: (i,))] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad,), jnp.bool_),
+            jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_p, max_S), jnp.float32),          # lease
+            pltpu.VMEM((tile_p, max_S), jnp.float32),          # t_on
+            pltpu.VMEM((tile_p, max_p), jnp.float32),          # end
+            pltpu.VMEM((tile_p, 2), jnp.float32),              # accumulators
+        ],
+        interpret=interpret,
+    )(i32(X), i32(order), f32(compute), i32(parent_idx), f32(parent_mb),
+      i32(child_idx), f32(child_mb), i32(app_id), f32(deadline), i32(pinned),
+      f32(power), f32(cost_per_sec), f32(inv_bw), f32(tran_cost),
+      f32(link_ok))
+    return total[:P], feas[:P], tsum[:P]

@@ -115,6 +115,9 @@ def main() -> None:
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--plan", action="store_true",
                     help="print the PSO-GA fleet placement first")
+    ap.add_argument("--fitness-backend", default="scan",
+                    choices=("scan", "pallas", "auto"),
+                    help="swarm-fitness backend for --plan (DESIGN.md §8)")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -125,7 +128,8 @@ def main() -> None:
         shapes = [s for s in SHAPES if s.kind != "train"]
         plans = plan_offload_batch(
             [(cfg, s, 1.5) for s in shapes],
-            pso=PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40))
+            pso=PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40),
+            fitness_backend=args.fitness_backend)
         for shape, plan in zip(shapes, plans):
             print(f"[serve] PSO-GA fleet placement for {shape.name}:")
             print(plan.summary())

@@ -172,3 +172,29 @@ def test_runner_cache_reused(fleet3):
 def test_batch_seed_count_mismatch(fleet3):
     with pytest.raises(ValueError):
         run_pso_ga_batch(fleet3, FAST, seed=[0, 1])
+
+
+def test_batch_seed_int_like_scalars(fleet3):
+    """np.int64 / 0-d arrays broadcast like python ints (regression:
+    np.isscalar rejects 0-d arrays, so these used to crash or misfire)."""
+    ref = run_pso_ga_batch(fleet3, FAST, seed=7)
+    for seed in (np.int64(7), np.array(7), np.asarray(7, np.int32)):
+        out = run_pso_ga_batch(fleet3, FAST, seed=seed)
+        for a, b in zip(ref, out):
+            assert a.best_fitness == b.best_fitness
+            assert np.array_equal(a.best_x, b.best_x)
+
+
+def test_batch_seed_array_sequence(fleet3):
+    """Per-problem seeds as a numpy array behave like the list form."""
+    ref = run_pso_ga_batch(fleet3, FAST, seed=[3, 4, 5])
+    out = run_pso_ga_batch(fleet3, FAST, seed=np.array([3, 4, 5]))
+    for a, b in zip(ref, out):
+        assert a.best_fitness == b.best_fitness
+
+
+def test_batch_seed_rejects_non_int(fleet3):
+    with pytest.raises(TypeError):
+        run_pso_ga_batch(fleet3, FAST, seed=0.5)
+    with pytest.raises(ValueError):
+        run_pso_ga_batch(fleet3, FAST, seed=np.zeros((2, 2), np.int32))

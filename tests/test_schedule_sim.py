@@ -1,0 +1,193 @@
+"""Fitness backends (DESIGN.md §8): the Pallas Algorithm-2 replay kernel
+vs the pure-jnp ref and the numpy oracle, the two-phase scan split vs the
+oracle on randomized problems, and padded-vs-unpadded equivalence — for
+BOTH fidelity modes and BOTH backends (pallas in interpret mode)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypo_compat import given, st
+from test_simulator import random_dag, random_env
+
+from repro.core import (PSOGAConfig, SimProblem, pad_problem, run_pso_ga,
+                        simulate_np, simulate_padded)
+from repro.core.simulator import simulate_swarm
+from repro.core.fitness import (INFEASIBLE_OFFSET, fitness_key,
+                                make_swarm_fitness, resolve_fitness_backend)
+from repro.kernels.ref import schedule_replay_ref
+from repro.kernels.schedule_sim import schedule_replay_folded
+
+
+def _pp_fields(pp):
+    return (pp.order, pp.compute, pp.parent_idx, pp.parent_mb, pp.child_idx,
+            pp.child_mb, pp.app_id, pp.deadline, pp.pinned, pp.power,
+            pp.cost_per_sec, pp.inv_bw, pp.tran_cost, pp.link_ok)
+
+
+def _random_problem(seed, p=None, s=None, n_apps=1):
+    rng = np.random.default_rng(seed)
+    p = p or int(rng.integers(2, 20))
+    s = s or int(rng.integers(2, 7))
+    dag = random_dag(rng, p, n_apps=n_apps)
+    env = random_env(rng, s)
+    return SimProblem.build(dag, env), rng
+
+
+def _swarm(rng, P, p, s, max_p):
+    X = np.zeros((P, max_p), np.int32)
+    X[:, :p] = rng.integers(0, s, size=(P, p))
+    return jnp.asarray(X)
+
+
+# ---------------------------------------------------------------------------
+# kernel == pure-jnp ref == numpy oracle, randomized problems
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faithful", [True, False])
+@pytest.mark.parametrize("seed", range(6))
+def test_kernel_matches_np_oracle(seed, faithful):
+    """Interpret-mode kernel reproduces the numpy Algorithm-2 oracle:
+    total cost, feasibility, and Σ T_i^comp, per particle."""
+    prob, rng = _random_problem(seed, n_apps=1 + seed % 3)
+    pp = pad_problem(prob)
+    X = _swarm(rng, 9, prob.num_layers, prob.num_servers, prob.num_layers)
+    total, feas, tsum = schedule_replay_folded(
+        *_pp_fields(pp), X, faithful=faithful, tile_p=4, interpret=True)
+    for i in range(X.shape[0]):
+        ref = simulate_np(prob, np.asarray(X[i]), faithful=faithful)
+        np.testing.assert_allclose(float(total[i]), float(ref.total_cost),
+                                   rtol=2e-5, atol=1e-6)
+        assert bool(feas[i]) == bool(ref.feasible)
+        np.testing.assert_allclose(float(tsum[i]),
+                                   float(ref.app_completion.sum()),
+                                   rtol=2e-5)
+
+
+@pytest.mark.parametrize("faithful", [True, False])
+def test_kernel_matches_ref(faithful):
+    """Kernel vs the pure-jnp ref on a padded problem (padding exercised)."""
+    prob, rng = _random_problem(3, p=12, s=4, n_apps=2)
+    pp = pad_problem(prob, max_p=16, max_S=8, max_apps=3)
+    X = _swarm(rng, 7, prob.num_layers, prob.num_servers, 16)
+    out = schedule_replay_folded(*_pp_fields(pp), X, faithful=faithful,
+                                 tile_p=4, interpret=True)
+    ref = schedule_replay_ref(*_pp_fields(pp), X, faithful=faithful)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                               rtol=2e-5, atol=1e-6)
+    assert np.array_equal(np.asarray(out[1]), np.asarray(ref[1]))
+    np.testing.assert_allclose(np.asarray(out[2]), np.asarray(ref[2]),
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# property test: simulate_padded == simulate_np, both modes, both backends
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), faithful=st.booleans(),
+       backend=st.sampled_from(["scan", "pallas"]))
+def test_backends_match_np_oracle_property(seed, faithful, backend):
+    _assert_backend_matches_oracle(seed, faithful, backend)
+
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+@pytest.mark.parametrize("faithful", [True, False])
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_backends_match_np_oracle_seeded(seed, faithful, backend):
+    """Deterministic fallback sweep for environments without hypothesis."""
+    _assert_backend_matches_oracle(seed, faithful, backend)
+
+
+def _assert_backend_matches_oracle(seed, faithful, backend):
+    prob, rng = _random_problem(seed, n_apps=1 + seed % 2)
+    pp = pad_problem(prob)
+    p, s = prob.num_layers, prob.num_servers
+    X = _swarm(rng, 5, p, s, p)
+    keys = make_swarm_fitness(pp, faithful, backend)(X)
+    for i in range(X.shape[0]):
+        ref = simulate_np(prob, np.asarray(X[i]), faithful=faithful)
+        expect = float(ref.total_cost) if ref.feasible else \
+            INFEASIBLE_OFFSET + np.log1p(float(ref.app_completion.sum()))
+        np.testing.assert_allclose(float(keys[i]), expect, rtol=2e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# padded == unpadded, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+@pytest.mark.parametrize("faithful", [True, False])
+def test_padding_equivalence_sweep(faithful, backend):
+    """Fitness is invariant under arbitrary extra padding for both
+    backends (padded genes 0, appended after the real entries)."""
+    prob, rng = _random_problem(11, p=10, s=4, n_apps=2)
+    p, s = prob.num_layers, prob.num_servers
+    tight = pad_problem(prob)
+    fit_tight = make_swarm_fitness(tight, faithful, backend)
+    X = _swarm(rng, 6, p, s, p)
+    base = np.asarray(fit_tight(X))
+    for max_p, max_S, max_apps in ((16, 6, 2), (32, 11, 4)):
+        loose = pad_problem(prob, max_p=max_p, max_S=max_S,
+                            max_apps=max_apps)
+        Xp = jnp.zeros((6, max_p), jnp.int32).at[:, :p].set(X)
+        out = np.asarray(make_swarm_fitness(loose, faithful, backend)(Xp))
+        np.testing.assert_allclose(out, base, rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# two-phase scan internals + backend plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faithful", [True, False])
+def test_simulate_swarm_matches_per_particle(faithful):
+    """The swarm-level scan (shared step indices) agrees with the
+    per-particle simulate_padded on every summary field."""
+    prob, rng = _random_problem(9, p=13, s=5, n_apps=2)
+    pp = pad_problem(prob, max_p=16, max_apps=3)
+    X = _swarm(rng, 8, prob.num_layers, prob.num_servers, 16)
+    total, feas, tsum = simulate_swarm(pp, X, faithful)
+    for i in range(X.shape[0]):
+        res = simulate_padded(pp, X[i], faithful)
+        np.testing.assert_allclose(float(total[i]), float(res.total_cost),
+                                   rtol=1e-6)
+        assert bool(feas[i]) == bool(res.feasible)
+        np.testing.assert_allclose(float(tsum[i]),
+                                   float(res.app_completion.sum()),
+                                   rtol=1e-6)
+
+
+def test_two_phase_end_times_match_oracle():
+    """The shrunk-carry scan still reproduces per-layer end times (the
+    carry-dependent part phase 1 cannot precompute)."""
+    prob, rng = _random_problem(5, p=14, s=5)
+    pp = pad_problem(prob)
+    for faithful in (True, False):
+        x = rng.integers(0, prob.num_servers, size=prob.num_layers)
+        ref = simulate_np(prob, x, faithful=faithful)
+        out = simulate_padded(pp, jnp.asarray(x), faithful=faithful)
+        np.testing.assert_allclose(np.asarray(out.end_times), ref.end_times,
+                                   rtol=1e-5)
+
+
+def test_resolve_backend():
+    assert resolve_fitness_backend("scan") == "scan"
+    assert resolve_fitness_backend("pallas") == "pallas"
+    # this container is CPU-only -> auto selects the scan path
+    assert resolve_fitness_backend("auto") == "scan"
+    with pytest.raises(ValueError):
+        resolve_fitness_backend("cuda")
+
+
+def test_pallas_backend_solver_matches_scan():
+    """Full PSO-GA runs agree across backends (same seed, same genes)."""
+    cfg = PSOGAConfig(pop_size=16, max_iters=40, stall_iters=15)
+    rng = np.random.default_rng(2)
+    dag = random_dag(rng, 8)
+    env = random_env(rng, 4)
+    a = run_pso_ga(dag, env, cfg, seed=0)
+    b = run_pso_ga(dag, env,
+                   dataclasses.replace(cfg, fitness_backend="pallas"),
+                   seed=0)
+    assert a.best_fitness == pytest.approx(b.best_fitness, rel=2e-5)
+    assert a.iterations == b.iterations
