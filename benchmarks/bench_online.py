@@ -1,0 +1,199 @@
+"""Online re-planning engine benchmark (DESIGN.md §9, EXPERIMENTS.md
+§Online): a 16-problem fleet is driven through drifting-environment
+traces and re-planned warm at every event; each round is also re-solved
+COLD from scratch (the oracle) to measure
+
+  * cost-vs-oracle regret  — Σ warm realized cost − Σ oracle realized
+    cost, where realized = plan cost + the Eq. 6 migration paid to adopt
+    it from the deployed incumbent (the oracle's fresh plan pays
+    migration too — adopting it moves layers just the same)
+  * iterations-to-converge — warm vs cold ``converge_iters`` (iterations
+    until the final gbest was found; the stopping rule then burns
+    ``stall_iters`` more confirming it, identically in both arms)
+  * replan wall-clock      — warm round latency (compiled-runner hot)
+
+Warm-start must converge in ≤ 0.5× the cold iterations at equal-or-
+better realized fleet cost (the ISSUE-4 acceptance bar); every run
+writes a machine-readable ``BENCH_online.json`` so the trajectory is
+tracked across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (PSOGAConfig, ReplanConfig, TRACE_KINDS,
+                        heft_makespan, paper_environment, replan_round,
+                        run_pso_ga_batch, runner_cache_stats, sample_trace,
+                        zoo)
+from repro.core.online import migration_cost_np
+from repro.core.simulator import SimProblem
+
+from .common import print_csv
+
+#: warm rounds should stall out fast; cold solves get the full budget
+ONLINE_CFG = PSOGAConfig(pop_size=32, max_iters=200, stall_iters=30)
+
+
+def _json_safe(obj):
+    """Replace non-finite floats with None (JSON null): heavy drift can
+    legitimately make a round's plan infeasible (cost inf, regret nan),
+    and strict JSON consumers reject bare Infinity/NaN tokens."""
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def make_fleet(n: int, env, ratios=(1.2, 1.5, 2.0, 3.0)):
+    """N heterogeneous problems (mixed nets / pins / deadline ratios)."""
+    dags = []
+    for i in range(n):
+        net = ("alexnet", "vgg19", "googlenet")[i % 3]
+        dag = zoo.build(net, pin_server=i % 10)
+        h, _ = heft_makespan(dag, env)
+        dags.append(dag.with_deadline(np.array([ratios[i % 4] * h])))
+    return dags
+
+
+def run_scenario(kind: str, n: int, rounds: int, seed: int,
+                 cfg: ReplanConfig):
+    env = paper_environment()
+    dags = make_fleet(n, env)
+    trace = sample_trace(kind, env, rounds=rounds, seed=seed)
+
+    probs0 = [SimProblem.build(d, trace.env_at(0)) for d in dags]
+    t0 = time.perf_counter()
+    cold0 = run_pso_ga_batch(probs0, cfg.pso, seed=seed)
+    wall_cold0 = time.perf_counter() - t0
+    plans = [np.asarray(r.best_x, np.int32) for r in cold0]
+
+    rows = []
+    for k in range(1, rounds):
+        probs_k = [SimProblem.build(d, trace.env_at(k)) for d in dags]
+        prev = [p.copy() for p in plans]
+        plans, log = replan_round(probs_k, plans, cfg, seed=seed + k,
+                                  round_no=k, label=trace.events[k].label)
+        # the oracle: same round, same seeds, solved cold from scratch —
+        # but adopting ITS plan pays migration from the incumbent too
+        t0 = time.perf_counter()
+        oracle, o_state = run_pso_ga_batch(probs_k, cfg.pso,
+                                           seed=seed + k,
+                                           return_state=True)
+        wall_oracle = time.perf_counter() - t0
+        o_mig = np.array([migration_cost_np(pr, pv, r.best_x)
+                          for pr, pv, r in zip(probs_k, prev, oracle)])
+        o_cost = np.array([r.best_cost for r in oracle])
+        o_iters = np.array([r.iterations for r in oracle])
+        o_conv = np.maximum(o_iters - np.asarray(o_state.stall), 0)
+        warm_real = float(np.sum(log.cost + cfg.migration_weight
+                                 * log.migration))
+        oracle_real = float(np.sum(o_cost + cfg.migration_weight * o_mig))
+        conv_ratio = (float(log.converge_iters.mean())
+                      / max(float(o_conv.mean()), 1.0))
+        rows.append({
+            "kind": kind, "round": k, "label": log.label,
+            "replanned": int(log.replanned.sum()),
+            "warm_converge_iters": float(log.converge_iters.mean()),
+            "cold_converge_iters": float(o_conv.mean()),
+            "iters_ratio": conv_ratio,
+            "warm_iters_mean": float(log.iterations.mean()),
+            "cold_iters_mean": float(o_iters.mean()),
+            "warm_cost_sum": warm_real,
+            "oracle_cost_sum": oracle_real,
+            "warm_plan_cost": float(np.sum(log.cost)),
+            "oracle_plan_cost": float(np.sum(o_cost)),
+            "regret": warm_real - oracle_real,
+            "moved_layers": int(log.moved_layers.sum()),
+            "warm_wall_s": log.wall_s,
+            "cold_wall_s": wall_oracle,
+        })
+        print(f"# {kind} round {k} ({log.label}): converge warm "
+              f"{rows[-1]['warm_converge_iters']:.1f} / cold "
+              f"{rows[-1]['cold_converge_iters']:.1f} "
+              f"(ratio {conv_ratio:.2f}), realized cost warm "
+              f"{warm_real:.5f} vs oracle {oracle_real:.5f}, "
+              f"replan {log.wall_s:.2f}s vs cold {wall_oracle:.2f}s",
+              flush=True)
+    summary = {
+        "kind": kind,
+        "n_problems": n,
+        "rounds": rounds,
+        "cold0_wall_s": wall_cold0,
+        "iters_ratio_mean": float(np.mean([r["iters_ratio"]
+                                           for r in rows])),
+        "warm_cost_total": float(sum(r["warm_cost_sum"] for r in rows)),
+        "oracle_cost_total": float(sum(r["oracle_cost_sum"]
+                                       for r in rows)),
+        "regret_total": float(sum(r["regret"] for r in rows)),
+        "warm_wall_mean_s": float(np.mean([r["warm_wall_s"]
+                                           for r in rows])),
+        "cold_wall_mean_s": float(np.mean([r["cold_wall_s"]
+                                           for r in rows])),
+    }
+    return rows, summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16,
+                    help="fleet size (problems per round)")
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="trace length incl. the round-0 cold solve")
+    ap.add_argument("--kinds", nargs="*", default=["wifi-fade"],
+                    choices=list(TRACE_KINDS) + ["all"],
+                    help="drift scenario families to run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--migration-weight", type=float, default=1.0)
+    ap.add_argument("--json", default="BENCH_online.json",
+                    help="machine-readable results ('' to disable)")
+    args = ap.parse_args()
+    kinds = TRACE_KINDS if "all" in args.kinds else args.kinds
+    cfg = ReplanConfig(pso=ONLINE_CFG,
+                       migration_weight=args.migration_weight)
+
+    all_rows, summaries = [], []
+    for kind in kinds:
+        rows, summary = run_scenario(kind, args.n, args.rounds,
+                                     args.seed, cfg)
+        all_rows.extend(rows)
+        summaries.append(summary)
+        ok = (summary["iters_ratio_mean"] <= 0.5
+              and summary["warm_cost_total"]
+              <= summary["oracle_cost_total"] + 1e-9)
+        print(f"# {kind}: iters ratio {summary['iters_ratio_mean']:.2f} "
+              f"(bar <= 0.50), regret {summary['regret_total']:+.5f} "
+              f"-> {'PASS' if ok else 'MISS'}", flush=True)
+    print_csv(all_rows, ["kind", "round", "label", "replanned",
+                         "warm_converge_iters", "cold_converge_iters",
+                         "iters_ratio", "warm_cost_sum",
+                         "oracle_cost_sum", "regret", "moved_layers",
+                         "warm_wall_s", "cold_wall_s"])
+    if args.json:
+        payload = {
+            "bench": "bench_online",
+            "device": jax.devices()[0].platform,
+            "n_problems": args.n,
+            "rounds": args.rounds,
+            "pso": {"pop_size": ONLINE_CFG.pop_size,
+                    "max_iters": ONLINE_CFG.max_iters,
+                    "stall_iters": ONLINE_CFG.stall_iters},
+            "migration_weight": args.migration_weight,
+            "runner_cache": runner_cache_stats(),
+            "rounds_detail": all_rows,
+            "scenarios": summaries,
+        }
+        with open(args.json, "w") as f:
+            json.dump(_json_safe(payload), f, indent=2, allow_nan=False)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,16 +49,16 @@ def make_fleet(n: int, env=None):
 
 def bench_fleet(n: int, cfg: PSOGAConfig = FLEET_CFG):
     problems = make_fleet(n)
-    t0 = time.time()
+    t0 = time.perf_counter()
     seq = [run_pso_ga(dag, env, cfg, seed=i)
            for i, (dag, env) in enumerate(problems)]
-    t_seq = time.time() - t0
-    t0 = time.time()
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
     bat = run_pso_ga_batch(problems, cfg, seed=list(range(n)))
-    t_batch = time.time() - t0
-    t0 = time.time()                 # second call hits the compiled cache
+    t_batch = time.perf_counter() - t0
+    t0 = time.perf_counter()                 # second call hits the compiled cache
     run_pso_ga_batch(problems, cfg, seed=list(range(n)))
-    t_cached = time.time() - t0
+    t_cached = time.perf_counter() - t0
     match = sum(a.best_fitness == b.best_fitness
                 for a, b in zip(seq, bat))
     return {
@@ -90,11 +90,11 @@ def bench_net(net: str, pop: int = 100, iters: int = 50,
     jstep = jax.jit(step)
     state = jstep(state)                       # compile + warmup
     jax.block_until_ready(state.X)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         state = jstep(state)
     jax.block_until_ready(state.X)
-    dt = (time.time() - t0) / iters
+    dt = (time.perf_counter() - t0) / iters
     return {
         "net": net, "layers": dag.num_layers, "pop": pop,
         "backend": backend,

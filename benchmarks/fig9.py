@@ -39,9 +39,9 @@ def run(proto=QUICK, algos=("psoga", "ga", "greedy")):
                 costs, feas, times = [], 0, []
                 seeds = 1 if algo == "greedy" else proto.seeds
                 for seed in range(seeds):
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     res = ALGOS[algo](merged, env, proto, seed)
-                    times.append(time.time() - t0)
+                    times.append(time.perf_counter() - t0)
                     if res.feasible:
                         feas += 1
                         costs.append(res.best_cost)

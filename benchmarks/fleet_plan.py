@@ -30,18 +30,18 @@ def run(archs, ratios=(1.2, 1.5, 3.0)):
     cells = [(arch, ratio) for arch in archs for ratio in ratios]
 
     # one batched PSO-GA fleet for every (arch, ratio) cell
-    t0 = time.time()
+    t0 = time.perf_counter()
     plans = plan_offload_batch(
         [(get(arch), shape, ratio) for arch, ratio in cells],
         env=env, pso=FAST, seed=0)
-    batch_wall = time.time() - t0
+    batch_wall = time.perf_counter() - t0
     print(f"# batched PSO-GA: {len(cells)} problems in {batch_wall:.2f}s "
           f"({batch_wall / len(cells):.3f}s/problem)", flush=True)
 
     rows = []
     for (arch, ratio), pso in zip(cells, plans):
         cfg = get(arch)
-        t0 = time.time()
+        t0 = time.perf_counter()
         grd = plan_offload(cfg, shape, env=env, deadline_ratio=ratio,
                            algo="greedy")
         # uniform depth split across 1 cloud + 1 edge + home device
@@ -60,7 +60,7 @@ def run(archs, ratios=(1.2, 1.5, 3.0)):
             "uniform_cost": float(ru.total_cost)
             if bool(ru.feasible) else -1.0,
             "psoga_stages": len(pso.stages),
-            "wall_s": (time.time() - t0) + batch_wall / len(cells),
+            "wall_s": (time.perf_counter() - t0) + batch_wall / len(cells),
         })
         print(f"# {arch} r={ratio}: psoga=${pso.cost:.4f} "
               f"greedy=${rows[-1]['greedy_cost']:.4f} "

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden_costs.json — the seeded end-to-end PSO-GA
+costs pinned by tests/test_golden_costs.py.
+
+Run after any INTENDED fitness/simulator/solver change:
+
+    PYTHONPATH=src python scripts/gen_goldens.py
+
+then review the diff: every changed number is a behaviour change the PR
+must justify. The goldens catch silent fitness drift that the
+backend-vs-backend parity tests cannot see (both backends drifting
+together looks like parity).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (PSOGAConfig, heft_makespan, paper_environment,
+                        run_pso_ga, zoo)
+
+OUT = Path(__file__).resolve().parent.parent / "tests" / "golden_costs.json"
+
+#: small-but-nontrivial budget: every case converges via the stall rule
+GOLDEN = dict(pop_size=16, max_iters=30, stall_iters=12)
+SEED = 42
+DEADLINE_RATIO = 2.0
+
+
+def generate() -> dict:
+    env = paper_environment()
+    out = {
+        "_config": {**GOLDEN, "seed": SEED,
+                    "deadline_ratio": DEADLINE_RATIO,
+                    "env": "paper_environment"},
+    }
+    for net in zoo.NAMES:
+        base = zoo.build(net, pin_server=0)
+        h, _ = heft_makespan(base, env)
+        dag = base.with_deadline(np.array([DEADLINE_RATIO * h]))
+        for faithful in (False, True):
+            for backend in ("scan", "pallas"):
+                cfg = PSOGAConfig(**GOLDEN, faithful_sim=faithful,
+                                  fitness_backend=backend)
+                res = run_pso_ga(dag, env, cfg, seed=SEED)
+                key = f"{net}|faithful={faithful}|{backend}"
+                out[key] = {
+                    "best_fitness": float(res.best_fitness),
+                    "best_cost": float(res.best_cost),
+                    "feasible": bool(res.feasible),
+                    # informational: not asserted (hardware-dependent
+                    # float rounding may legitimately shift a stall exit)
+                    "iterations": int(res.iterations),
+                }
+                print(f"{key}: cost={res.best_cost:.8g} "
+                      f"iters={res.iterations}")
+    return out
+
+
+if __name__ == "__main__":
+    OUT.write_text(json.dumps(generate(), indent=1) + "\n")
+    print(f"wrote {OUT}")

@@ -12,18 +12,24 @@ Public surface:
   * placement / partition                   — TPU-fleet bridge (DESIGN.md §3)
   * batch / run_pso_ga_batch                — fleet-scale batched solver
                                               (DESIGN.md §4)
+  * online / EnvTrace / replan_fleet        — online re-planning for
+                                              drifting fleets (DESIGN.md §9)
 """
 from .dag import LayerDAG, merge_dags, preprocess, topological_order
 from .environment import (CLOUD, DEVICE, EDGE, Environment,
                           paper_environment, sample_environment,
                           tpu_fleet_environment)
 from .fitness import (INFEASIBLE_OFFSET, fitness_key, make_swarm_fitness,
-                      resolve_fitness_backend)
+                      migration_cost, resolve_fitness_backend)
 from .simulator import (PaddedProblem, SimProblem, SimResult,
                         build_simulator, pad_problem, simulate_np,
                         simulate_padded, simulate_swarm)
 from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga, swarm_step
-from .batch import pack_problems, run_pso_ga_batch
+from .batch import (pack_problems, run_pso_ga_batch, runner_cache_stats,
+                    reset_runner_cache_stats)
+from .online import (DriftEvent, EnvTrace, OnlineReport, ReplanConfig,
+                     RoundLog, TRACE_KINDS, replan_fleet, replan_round,
+                     sample_trace, zero_drift_trace)
 from .baselines import (GAConfig, greedy_offload, heft_makespan, pre_pso,
                         run_ga, run_pso_linear)
 from .partition import Stage, contiguous_stages, stage_cut_cost, \
@@ -37,11 +43,15 @@ __all__ = [
     "Environment", "paper_environment", "sample_environment",
     "tpu_fleet_environment", "CLOUD", "EDGE", "DEVICE",
     "INFEASIBLE_OFFSET", "fitness_key", "make_swarm_fitness",
-    "resolve_fitness_backend",
+    "migration_cost", "resolve_fitness_backend",
     "SimProblem", "SimResult", "build_simulator", "simulate_np",
     "PaddedProblem", "pad_problem", "simulate_padded", "simulate_swarm",
     "PSOGAConfig", "PSOGAResult", "run_pso_ga", "swarm_step",
-    "pack_problems", "run_pso_ga_batch",
+    "pack_problems", "run_pso_ga_batch", "runner_cache_stats",
+    "reset_runner_cache_stats",
+    "DriftEvent", "EnvTrace", "OnlineReport", "ReplanConfig", "RoundLog",
+    "TRACE_KINDS", "replan_fleet", "replan_round", "sample_trace",
+    "zero_drift_trace",
     "GAConfig", "greedy_offload", "heft_makespan", "pre_pso", "run_ga",
     "run_pso_linear", "zoo",
     "Stage", "contiguous_stages", "stage_cut_cost", "uniform_stages",

@@ -30,7 +30,7 @@ similar shapes skip retracing entirely.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,8 @@ from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
 
 __all__ = ["pack_problems", "run_pso_ga_batch", "bucket_size",
-           "runner_cache_info"]
+           "runner_cache_info", "runner_cache_stats",
+           "reset_runner_cache_stats"]
 
 ProblemLike = Union[SimProblem, Tuple[LayerDAG, Environment]]
 
@@ -117,11 +118,28 @@ def pack_problems(problems: Sequence[ProblemLike],
 # --------------------------------------------------------------------------
 
 _RUNNER_CACHE: Dict[tuple, Callable] = {}
+#: hits/misses count _fleet_runner lookups; traces counts actual jit
+#: re-traces of the fleet loop (incremented from inside the traced body,
+#: so it only ticks when XLA really recompiles — the online re-planning
+#: invariant "every round after the first hits the compiled runner"
+#: (DESIGN.md §9) is asserted against this counter.
+_CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
 
 
 def runner_cache_info() -> Tuple[PSOGAConfig, ...]:
     """Configs currently holding a compiled fleet runner."""
     return tuple(_RUNNER_CACHE)
+
+
+def runner_cache_stats() -> Dict[str, int]:
+    """Snapshot of the fleet-runner cache counters (DESIGN.md §9)."""
+    return dict(_CACHE_STATS)
+
+
+def reset_runner_cache_stats() -> None:
+    """Zero the counters (the compiled runners themselves are kept)."""
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
 
 
 def _done(state: _SwarmState, cfg: PSOGAConfig) -> jnp.ndarray:
@@ -130,7 +148,7 @@ def _done(state: _SwarmState, cfg: PSOGAConfig) -> jnp.ndarray:
 
 
 def _fleet_runner(cfg: PSOGAConfig) -> Callable:
-    """Jitted ``(ppb, keys, X0b) -> final _SwarmState`` for one config.
+    """Jitted ``(ppb, keys, X0b, incb, migb) -> final _SwarmState``.
 
     One cache entry per ``cfg`` (the config is baked into the traced
     loop); jit's own cache handles shape specialization underneath, and
@@ -138,22 +156,35 @@ def _fleet_runner(cfg: PSOGAConfig) -> Callable:
     distinct ``(max_p, max_S)`` shapes it sees small. Distinct fleet
     sizes N still trace separately — batch at stable sizes if that
     matters.
+
+    Cold and warm (re-planning) solves share this ONE program: the
+    incumbent genes ``incb (N, max_p)`` and migration weights ``migb
+    (N,)`` are ordinary traced arrays, and a zero weight multiplies the
+    migration term away bit-exactly (DESIGN.md §9). Drift only changes
+    array *values*, so every re-planning round after the first reuses
+    the compiled runner — ``runner_cache_stats()["traces"]`` counts the
+    actual re-traces.
     """
     cached = _RUNNER_CACHE.get(cfg)
     if cached is not None:
+        _CACHE_STATS["hits"] += 1
         return cached
+    _CACHE_STATS["misses"] += 1
 
-    vstep = jax.vmap(lambda pp, st: swarm_step(pp, st, cfg))
+    vstep = jax.vmap(lambda pp, st, inc, mw: swarm_step(
+        pp, st, cfg, incumbent=inc, mig_weight=mw))
     # one swarm-fitness per problem, vmapped over the fleet: the scan
     # backend batches the two-phase simulate_padded; the pallas backend's
     # grid picks up the problem axis as an outer grid dimension.
-    vfit = jax.vmap(lambda pp, X: make_swarm_fitness(
-        pp, cfg.faithful_sim, cfg.fitness_backend)(X))
+    vfit = jax.vmap(lambda pp, X, inc, mw: make_swarm_fitness(
+        pp, cfg.faithful_sim, cfg.fitness_backend,
+        incumbent=inc, mig_weight=mw)(X))
 
-    def run(ppb: PaddedProblem, keys: jnp.ndarray,
-            X0b: jnp.ndarray) -> _SwarmState:
+    def run(ppb: PaddedProblem, keys: jnp.ndarray, X0b: jnp.ndarray,
+            incb: jnp.ndarray, migb: jnp.ndarray) -> _SwarmState:
+        _CACHE_STATS["traces"] += 1        # python side effect: trace-time only
         n = X0b.shape[0]
-        f0 = vfit(ppb, X0b)                                    # (N, P)
+        f0 = vfit(ppb, X0b, incb, migb)                        # (N, P)
         i0 = jnp.argmin(f0, axis=1)                            # (N,)
         gbest_x = jnp.take_along_axis(
             X0b, i0[:, None, None], axis=1)[:, 0, :]           # (N, max_p)
@@ -167,7 +198,7 @@ def _fleet_runner(cfg: PSOGAConfig) -> Callable:
             return jnp.any(~_done(st, cfg))
 
         def body(st: _SwarmState) -> _SwarmState:
-            new = vstep(ppb, st)
+            new = vstep(ppb, st, incb, migb)
             frozen = _done(st, cfg)                            # (N,)
             return jax.tree.map(
                 lambda nw, old: jnp.where(
@@ -185,7 +216,11 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
                      cfg: PSOGAConfig = PSOGAConfig(),
                      seed: Union[int, Sequence[int]] = 0,
                      bucket: bool = True,
-                     return_state: bool = False):
+                     return_state: bool = False,
+                     incumbent: Optional[Sequence[np.ndarray]] = None,
+                     migration_weight: Union[float,
+                                             Sequence[float]] = 0.0,
+                     warm_rescue: Optional[Sequence[bool]] = None):
     """Solve N offloading problems with one fleet of swarms.
 
     Args:
@@ -197,14 +232,31 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         fleet shapes reuse the compiled runner.
       return_state: also return the final stacked ``_SwarmState`` (tests
         use it to assert padded genes were never touched).
+      incumbent: per-problem (p_i,) incumbent assignments (online
+        re-planning, DESIGN.md §9): swarms are warm-started in the
+        incumbent's neighborhood (``init_swarm`` incumbent mode) and the
+        fitness pays ``migration_weight`` × the Eq. 6 input-dataset cost
+        for every moved layer. ``None`` is a cold solve — bit-identical
+        to the pre-warm-start solver, via the SAME compiled runner.
+      migration_weight: scalar or per-problem migration-cost weights
+        (ignored without ``incumbent``).
+      warm_rescue: per-problem flags (with ``incumbent`` only): seed the
+        cold tier anchors into that problem's warm swarm tail — the
+        re-planner sets it where drift stranded the incumbent
+        infeasible, so feasibility recovery starts from the same escape
+        hatches a cold solve gets (``init_swarm`` rescue mode).
 
     Returns a list of per-problem ``PSOGAResult`` (and the state if asked).
     ``record_history`` is not supported in fleet mode — use the sequential
     solver to trace a single problem's convergence curve.
+    ``best_fitness`` is the migration-adjusted key when warm;
+    ``best_cost`` is always the raw replayed plan cost.
     """
     probs = _as_problems(problems)
     n = len(probs)
     seeds = _normalize_seeds(seed, n)
+    if incumbent is not None and len(incumbent) != n:
+        raise ValueError(f"{len(incumbent)} incumbents for {n} problems")
 
     ppb = pack_problems(probs, bucket=bucket)
     max_p = int(ppb.compute.shape[1])
@@ -214,13 +266,31 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
     # into the padded gene space (padded genes start — and stay — 0).
     keys = []
     X0b = np.zeros((n, cfg.pop_size, max_p), np.int32)
+    incb = np.zeros((n, max_p), np.int32)
+    migb = np.zeros((n,), np.float32)
+    if incumbent is not None:
+        migb[:] = np.asarray(migration_weight, np.float32)
     for i, pr in enumerate(probs):
         key, k_init = jax.random.split(jax.random.PRNGKey(seeds[i]))
         keys.append(np.asarray(key))
-        X0b[i, :, :pr.num_layers] = np.asarray(init_swarm(k_init, pr, cfg))
+        inc_i = None
+        rescue_i = False
+        if incumbent is not None:
+            inc_i = np.asarray(incumbent[i], np.int32)
+            if inc_i.shape != (pr.num_layers,):
+                raise ValueError(
+                    f"incumbent[{i}] has shape {inc_i.shape}, expected "
+                    f"({pr.num_layers},)")
+            incb[i, :pr.num_layers] = inc_i
+            rescue_i = bool(warm_rescue[i]) if warm_rescue is not None \
+                else False
+        X0b[i, :, :pr.num_layers] = np.asarray(
+            init_swarm(k_init, pr, cfg, incumbent=inc_i,
+                       rescue=rescue_i))
 
     runner = _fleet_runner(cfg)
-    state = runner(ppb, jnp.asarray(np.stack(keys)), jnp.asarray(X0b))
+    state = runner(ppb, jnp.asarray(np.stack(keys)), jnp.asarray(X0b),
+                   jnp.asarray(incb), jnp.asarray(migb))
     jax.block_until_ready(state.gbest_f)
 
     # Re-simulate each gbest (same as the sequential epilogue).

@@ -16,10 +16,23 @@ link) would otherwise swallow the completion-time differences that drive
 Case-3 evolution (float32 has ~1e-3 absolute resolution at 1e4).
 ``log1p`` is strictly monotone, so the induced order on infeasible
 particles is exactly the paper's Eq. 16 order.
+
+Online re-planning (DESIGN.md §9) adds an optional migration term: given
+an ``incumbent`` assignment, every *moved* layer (gene differing from the
+incumbent's) pays its input-dataset transfer over the old→new link in
+Eq. 6 form (∂ · c^tran per MB), scaled by ``mig_weight``:
+
+    key_warm(X) = key(X) + mig_weight · Σ_{j : x_j ≠ inc_j} ∂_j · c^tran(inc_j, x_j)
+
+so replans prefer cheap plan deltas. The term applies to feasible
+particles only (Case-3 ordering stays the paper's Eq. 16), and a
+``mig_weight`` of exactly 0.0 adds exactly 0.0 — the warm key is then
+bit-identical to the cold key, which is what lets the batched runner use
+ONE compiled program for cold and warm solves (DESIGN.md §9).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -30,7 +43,7 @@ from .simulator import PaddedProblem, SimResult, simulate_swarm
 INFEASIBLE_OFFSET = 1e4
 
 __all__ = ["INFEASIBLE_OFFSET", "fitness_key", "make_swarm_fitness",
-           "resolve_fitness_backend"]
+           "migration_cost", "resolve_fitness_backend"]
 
 
 def fitness_key(res: SimResult) -> jnp.ndarray:
@@ -51,8 +64,27 @@ def resolve_fitness_backend(backend: str) -> str:
     return backend
 
 
+def migration_cost(pp: PaddedProblem, X: jnp.ndarray,
+                   incumbent: jnp.ndarray) -> jnp.ndarray:
+    """Per-particle plan-delta cost (Eq. 6 form, DESIGN.md §9).
+
+    ``X (..., max_p)`` vs ``incumbent (max_p,)``: every moved layer pays
+    its input-dataset size (Σ of its incoming edge MBs) over the
+    incumbent→candidate link's $/MB rate. Padded layers carry zero
+    ``parent_mb`` and identical (zero) genes, so they contribute exactly
+    0 — the term is padding-invariant like the simulator itself.
+    """
+    inc = jnp.asarray(incumbent).astype(jnp.int32)
+    input_mb = jnp.sum(pp.parent_mb, axis=-1)                   # (max_p,)
+    moved = X != inc
+    rate = pp.tran_cost[inc, X]                                 # (..., max_p)
+    return jnp.sum(jnp.where(moved, input_mb * rate, 0.0), axis=-1)
+
+
 def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
-                       backend: str = "scan"
+                       backend: str = "scan",
+                       incumbent: Optional[jnp.ndarray] = None,
+                       mig_weight: Optional[jnp.ndarray] = None
                        ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Swarm-fitness evaluator ``X (P, max_p) -> keys (P,)`` (DESIGN.md §8).
 
@@ -64,6 +96,11 @@ def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
     ``(total_cost, feasible, Σ T_i^comp)`` summary, to which the 3-case
     key (Eq. 14–16) is applied here. Both close over ``pp`` — ``vmap``
     freely over a fleet axis (pallas picks up an outer grid dimension).
+
+    With ``incumbent`` (a (max_p,) assignment) the key gains the
+    migration term of ``migration_cost`` scaled by ``mig_weight``
+    (DESIGN.md §9); ``incumbent``/``mig_weight`` may be traced arrays so
+    the batched runner re-plans drifting fleets without retracing.
     """
     backend = resolve_fitness_backend(backend)
     if backend == "scan":
@@ -83,5 +120,8 @@ def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
 
     def fit(X: jnp.ndarray) -> jnp.ndarray:
         total, feas, tsum = raw(X)
+        if incumbent is not None:
+            w = 1.0 if mig_weight is None else mig_weight
+            total = total + w * migration_cost(pp, X, incumbent)
         return jnp.where(feas, total, INFEASIBLE_OFFSET + jnp.log1p(tsum))
     return fit

@@ -1,0 +1,379 @@
+"""Online re-planning for drifting fleets (DESIGN.md §9).
+
+The paper solves a *static* snapshot — one environment, one solve, one
+plan — but the quantity its whole cost model hinges on (WAN bandwidth,
+Eq. 6) is exactly what drifts in production. This module keeps a fleet's
+plans good as the environment changes:
+
+  * ``EnvTrace`` — a piecewise-constant time-varying environment: a base
+    ``Environment`` plus a sequence of ``DriftEvent``s, each scaling
+    bandwidth / power / price per server (or severing a churned node's
+    links). Shapes never change — only array values — so every
+    re-planning round after the first reuses the compiled fleet runner
+    (``batch.runner_cache_stats()`` proves it).
+  * ``sample_trace`` — generators for four drift families: ``wifi-fade``
+    (device↔edge fade random walk), ``congestion`` (WAN cloud links),
+    ``spot-price`` (cloud rental multipliers), ``node-loss`` (an edge or
+    cloud server churns out and recovers).
+  * ``replan_round`` / ``replan_fleet`` — the event-driven loop: at each
+    drift event the whole fleet is re-solved by ``run_pso_ga_batch``
+    **warm-started** from the incumbent plans (``init_swarm`` incumbent
+    mode: elite clones + mutated neighborhoods) with the Eq. 6-form
+    migration term (``fitness.migration_cost``) so replans prefer cheap
+    plan deltas. A candidate replaces the incumbent only when its
+    migration-adjusted key strictly beats the incumbent's key under the
+    NEW environment — a drift-free round therefore keeps the incumbent
+    bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batch import pack_problems, run_pso_ga_batch
+from .dag import LayerDAG
+from .environment import CLOUD, DEVICE, EDGE, Environment
+from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
+from .pso_ga import PSOGAConfig, PSOGAResult
+from .simulator import SimProblem
+
+__all__ = ["DriftEvent", "EnvTrace", "ReplanConfig", "RoundLog",
+           "OnlineReport", "sample_trace", "zero_drift_trace",
+           "replan_round", "replan_fleet", "TRACE_KINDS",
+           "incumbent_keys", "migration_cost_np"]
+
+TRACE_KINDS = ("wifi-fade", "congestion", "spot-price", "node-loss")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One piecewise-constant epoch of the trace.
+
+    Scales are multiplicative against the BASE environment (not the
+    previous epoch), so epochs are order-independent and a scale of 1
+    everywhere is exactly the base environment. ``down`` severs every
+    off-diagonal link of the flagged servers (node churn): placements on
+    them become link-infeasible, which is how Algorithm 2 already treats
+    unreachable servers — no new simulator machinery needed.
+    """
+    t: float                      # event time (s since trace start)
+    label: str                    # human tag, e.g. "wifi-fade[0.41]"
+    bw_scale: np.ndarray          # (S, S) on bandwidth (MB/s)
+    power_scale: np.ndarray      # (S,)  on compute power
+    price_scale: np.ndarray      # (S,)  on rental $/s
+    down: np.ndarray             # (S,)  bool — server churned out
+
+    def is_identity(self) -> bool:
+        return (not self.down.any()
+                and np.all(self.bw_scale == 1.0)
+                and np.all(self.power_scale == 1.0)
+                and np.all(self.price_scale == 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvTrace:
+    """A base environment plus one ``DriftEvent`` per re-planning round.
+
+    ``events[0]`` is the admission-time epoch (the cold solve);
+    ``env_at(k)`` materializes the environment of round ``k``. Every
+    epoch has the same server count, so packed problem shapes are
+    identical across rounds and the compiled fleet runner is reused
+    (DESIGN.md §9).
+    """
+    base: Environment
+    events: Tuple[DriftEvent, ...]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.events)
+
+    def env_at(self, k: int) -> Environment:
+        ev = self.events[k]
+        bw = self.base.bandwidth * ev.bw_scale
+        if ev.down.any():
+            off = ~np.eye(self.base.num_servers, dtype=bool)
+            dead = ev.down[:, None] | ev.down[None, :]
+            bw = np.where(dead & off, 0.0, bw)
+        return Environment(
+            power=np.maximum(self.base.power * ev.power_scale, 1e-12),
+            cost_per_sec=self.base.cost_per_sec * ev.price_scale,
+            tier=self.base.tier,
+            bandwidth=bw,
+            tran_cost=self.base.tran_cost)
+
+
+def _identity_event(s: int, t: float, label: str) -> DriftEvent:
+    return DriftEvent(t=t, label=label,
+                      bw_scale=np.ones((s, s)),
+                      power_scale=np.ones(s),
+                      price_scale=np.ones(s),
+                      down=np.zeros(s, bool))
+
+
+def zero_drift_trace(env: Environment, rounds: int = 2,
+                     period: float = 60.0) -> EnvTrace:
+    """A trace whose every epoch IS the base environment (the warm-start
+    parity fixture: replans must keep the incumbent bit-for-bit)."""
+    s = env.num_servers
+    return EnvTrace(base=env, events=tuple(
+        _identity_event(s, k * period, "zero-drift")
+        for k in range(rounds)))
+
+
+def _tier_pair_mask(tier: np.ndarray, ta: int, tb: int) -> np.ndarray:
+    """(S, S) bool — links whose endpoints are tiers {ta, tb} (symmetric)."""
+    a = tier == ta
+    b = tier == tb
+    return (a[:, None] & b[None, :]) | (b[:, None] & a[None, :])
+
+
+def sample_trace(kind: str, env: Environment, rounds: int,
+                 seed: int = 0, period: float = 60.0,
+                 severity: float = 0.6) -> EnvTrace:
+    """Generate a drift trace of one of the four scenario families.
+
+    ``wifi-fade``  — WIFI device↔edge bandwidth fades on a bounded random
+                     walk in [1 − severity, 1] (Eq. 6's denominator is
+                     the drifting quantity).
+    ``congestion`` — WAN cloud↔{cloud, edge, device} bandwidth scaled by
+                     congestion in [1 − severity, 1].
+    ``spot-price`` — cloud-tier rental rates multiplied by a spot factor
+                     in [1 − severity/2, 1 + severity].
+    ``node-loss``  — one non-device server churns out per drift epoch
+                     (links severed), recovering before the next draw.
+
+    Round 0 is always the identity epoch (the cold solve's environment).
+    ``severity`` ∈ (0, 1] controls drift amplitude; events are ``period``
+    seconds apart.
+    """
+    if kind not in TRACE_KINDS:
+        raise ValueError(f"unknown trace kind {kind!r} "
+                         f"(expected one of {TRACE_KINDS})")
+    rng = np.random.default_rng(seed)
+    s = env.num_servers
+    tier = np.asarray(env.tier)
+    events: List[DriftEvent] = [_identity_event(s, 0.0, f"{kind}[base]")]
+    lo = 1.0 - severity
+    fade = 1.0
+    for k in range(1, rounds):
+        ev = _identity_event(s, k * period, kind)
+        if kind == "wifi-fade":
+            fade = float(np.clip(fade + rng.uniform(-0.5, 0.35) * severity,
+                                 lo, 1.0))
+            m = _tier_pair_mask(tier, DEVICE, EDGE)
+            bw = np.ones((s, s))
+            bw[m] = fade
+            ev = dataclasses.replace(ev, bw_scale=bw,
+                                     label=f"wifi-fade[{fade:.2f}]")
+        elif kind == "congestion":
+            cong = float(rng.uniform(lo, 1.0))
+            m = (_tier_pair_mask(tier, CLOUD, CLOUD)
+                 | _tier_pair_mask(tier, CLOUD, EDGE)
+                 | _tier_pair_mask(tier, CLOUD, DEVICE))
+            bw = np.ones((s, s))
+            bw[m] = cong
+            ev = dataclasses.replace(ev, bw_scale=bw,
+                                     label=f"congestion[{cong:.2f}]")
+        elif kind == "spot-price":
+            spot = float(rng.uniform(1.0 - severity / 2, 1.0 + severity))
+            price = np.ones(s)
+            price[tier == CLOUD] = spot
+            ev = dataclasses.replace(ev, price_scale=price,
+                                     label=f"spot-price[{spot:.2f}]")
+        else:                                   # node-loss
+            cands = np.nonzero(tier != DEVICE)[0]
+            victim = int(rng.choice(cands))
+            down = np.zeros(s, bool)
+            down[victim] = True
+            ev = dataclasses.replace(ev, down=down,
+                                     label=f"node-loss[s{victim}]")
+        events.append(ev)
+    return EnvTrace(base=env, events=tuple(events))
+
+
+# ---------------------------------------------------------------------------
+# the event-driven re-planning loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Knobs of the warm-started re-planning loop (DESIGN.md §9)."""
+    pso: PSOGAConfig = PSOGAConfig(pop_size=32, max_iters=150,
+                                   stall_iters=30)
+    migration_weight: float = 1.0   # $ per Eq.6-MB of moved input dataset
+
+
+class RoundLog(NamedTuple):
+    """Everything one drift event's replan decided, per problem."""
+    round: int
+    label: str
+    replanned: np.ndarray        # (N,) bool — candidate accepted
+    incumbent_key: np.ndarray    # (N,) incumbent fitness under NEW env
+    candidate_key: np.ndarray    # (N,) warm gbest key (migration-adjusted)
+    cost: np.ndarray             # (N,) final plan's raw cost this round
+    migration: np.ndarray        # (N,) Eq.6-form $ paid to adopt the plan
+    feasible: np.ndarray         # (N,) final plan feasible this round
+    moved_layers: np.ndarray     # (N,) genes changed by the accepted plan
+    iterations: np.ndarray       # (N,) warm-solve iterations executed
+    converge_iters: np.ndarray   # (N,) iterations until the final gbest
+    #   was found (it − stall at exit: the stopping rule then confirms it
+    #   for stall_iters more) — the warm-vs-cold convergence metric
+    wall_s: float                # replan wall-clock for the round
+
+
+@dataclasses.dataclass
+class OnlineReport:
+    """Output of ``replan_fleet``: the cold round-0 results plus one
+    ``RoundLog`` per drift event, and the final surviving plans."""
+    cold: List[PSOGAResult]
+    rounds: List[RoundLog]
+    plans: List[np.ndarray]      # final per-problem assignments
+
+    def total_cost(self) -> float:
+        """Σ over problems of the last round's plan cost."""
+        if self.rounds:
+            return float(np.sum(self.rounds[-1].cost))
+        return float(sum(r.best_cost for r in self.cold
+                         if np.isfinite(r.best_cost)))
+
+
+@partial(jax.jit, static_argnames=("faithful", "backend"))
+def _fleet_keys(ppb, Xb, faithful: bool, backend: str):
+    """(N,) fitness keys of one assignment per problem — the incumbent
+    re-evaluated under a drifted environment. jit caches on the packed
+    shapes, which are constant across rounds."""
+    return jax.vmap(
+        lambda pp, x: make_swarm_fitness(pp, faithful, backend)(
+            x[None, :])[0])(ppb, Xb)
+
+
+def migration_cost_np(prob: SimProblem, old: np.ndarray,
+                      new: np.ndarray) -> float:
+    """Numpy twin of ``fitness.migration_cost`` for one assignment pair:
+    every moved layer pays its input-dataset MBs over the old→new link."""
+    old = np.asarray(old, np.int64)
+    new = np.asarray(new, np.int64)
+    input_mb = prob.parent_mb.sum(axis=1)
+    moved = old != new
+    return float(np.sum(np.where(moved,
+                                 input_mb * prob.tran_cost[old, new], 0.0)))
+
+
+def incumbent_keys(probs: Sequence[SimProblem],
+                   incumbent: Sequence[np.ndarray],
+                   cfg: PSOGAConfig) -> np.ndarray:
+    """Fitness keys of the incumbent plans under ``probs``'s environment
+    (no migration term: keeping the incumbent moves nothing)."""
+    ppb = pack_problems(probs)
+    max_p = int(ppb.compute.shape[1])
+    Xb = np.zeros((len(probs), max_p), np.int32)
+    for i, (pr, inc) in enumerate(zip(probs, incumbent)):
+        Xb[i, :pr.num_layers] = np.asarray(inc, np.int32)
+    return np.asarray(_fleet_keys(ppb, jnp.asarray(Xb), cfg.faithful_sim,
+                                  cfg.fitness_backend))
+
+
+def replan_round(probs: Sequence[SimProblem],
+                 incumbent: Sequence[np.ndarray],
+                 cfg: ReplanConfig = ReplanConfig(),
+                 seed: int = 0,
+                 round_no: int = 0,
+                 label: str = "") -> Tuple[List[np.ndarray], RoundLog]:
+    """One drift event: warm re-solve the fleet, accept-if-better.
+
+    ``probs`` carry the NEW (drifted) environment. Each problem's swarm
+    is warm-started from its incumbent; the candidate's migration-
+    adjusted key must STRICTLY beat the incumbent's key under the new
+    environment to be accepted — staying put is free, so a zero-drift
+    event keeps every incumbent bit-for-bit (the warm-start parity
+    invariant, tested in tests/test_online.py).
+
+    Returns the surviving per-problem plans and the round's log.
+    """
+    n = len(probs)
+    t0 = time.perf_counter()
+    inc_key = incumbent_keys(probs, incumbent, cfg.pso)
+    # an incumbent stranded infeasible by the drift gets the cold tier
+    # anchors back in its swarm tail (init_swarm rescue mode): recovery
+    # then matches a cold solve's escape hatches, while healthy
+    # incumbents keep the pure (faster-converging) neighborhood seeding.
+    rescue = inc_key >= INFEASIBLE_OFFSET
+    cand, state = run_pso_ga_batch(probs, cfg.pso, seed=seed,
+                                   incumbent=incumbent,
+                                   migration_weight=cfg.migration_weight,
+                                   warm_rescue=rescue,
+                                   return_state=True)
+    wall = time.perf_counter() - t0
+
+    plans: List[np.ndarray] = []
+    replanned = np.zeros(n, bool)
+    cand_key = np.array([c.best_fitness for c in cand], np.float64)
+    cost = np.zeros(n)
+    mig = np.zeros(n)
+    feas = np.zeros(n, bool)
+    moved = np.zeros(n, np.int64)
+    iters = np.array([c.iterations for c in cand], np.int64)
+    # stall counts iterations since the last gbest improvement, so the
+    # final plan was found at it − stall; the rest is the stopping rule
+    # confirming it.
+    converge = np.maximum(
+        iters - np.asarray(state.stall, np.int64), 0)
+    for i, (pr, inc, c) in enumerate(zip(probs, incumbent, cand)):
+        inc = np.asarray(inc, np.int32)
+        if c.best_fitness < inc_key[i]:            # strict improvement
+            replanned[i] = True
+            plans.append(np.asarray(c.best_x, np.int32))
+            cost[i] = c.best_cost
+            mig[i] = migration_cost_np(pr, inc, plans[-1])
+            feas[i] = c.feasible
+            moved[i] = int(np.sum(plans[-1] != inc))
+        else:
+            plans.append(inc)
+            # keeping the incumbent: its key IS its raw cost if feasible
+            feas[i] = inc_key[i] < INFEASIBLE_OFFSET
+            cost[i] = float(inc_key[i]) if feas[i] else float("inf")
+    log = RoundLog(round=round_no, label=label, replanned=replanned,
+                   incumbent_key=inc_key, candidate_key=cand_key,
+                   cost=cost, migration=mig, feasible=feas,
+                   moved_layers=moved, iterations=iters,
+                   converge_iters=converge, wall_s=wall)
+    return plans, log
+
+
+def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
+                 cfg: ReplanConfig = ReplanConfig(),
+                 seed: int = 0,
+                 initial: Optional[Sequence[PSOGAResult]] = None
+                 ) -> OnlineReport:
+    """Drive a fleet of DNN placements through a drift trace.
+
+    Round 0 solves cold on ``trace.env_at(0)`` (unless ``initial`` hands
+    in admission-time plans, e.g. from ``plan_offload_batch``); every
+    later round is a warm ``replan_round`` against that round's drifted
+    environment. All rounds share ONE compiled fleet runner — drift only
+    changes array values (DESIGN.md §9).
+    """
+    if initial is None:
+        probs0 = [SimProblem.build(d, trace.env_at(0)) for d in dags]
+        cold = run_pso_ga_batch(probs0, cfg.pso, seed=seed)
+    else:
+        if len(initial) != len(dags):
+            raise ValueError(f"{len(initial)} initial results for "
+                             f"{len(dags)} dags")
+        cold = list(initial)
+    plans = [np.asarray(r.best_x, np.int32) for r in cold]
+    rounds: List[RoundLog] = []
+    for k in range(1, trace.num_rounds):
+        probs_k = [SimProblem.build(d, trace.env_at(k)) for d in dags]
+        plans, log = replan_round(probs_k, plans, cfg,
+                                  seed=seed + k, round_no=k,
+                                  label=trace.events[k].label)
+        rounds.append(log)
+    return OnlineReport(cold=cold, rounds=rounds, plans=plans)

@@ -228,7 +228,9 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
                                                       max_iters=300,
                                                       stall_iters=40),
                        seed: int = 0,
-                       fitness_backend: Optional[str] = None
+                       fitness_backend: Optional[str] = None,
+                       warm: Optional[Sequence[np.ndarray]] = None,
+                       migration_weight: float = 1.0
                        ) -> List[OffloadPlan]:
     """Plan many serving requests with ONE batched PSO-GA fleet.
 
@@ -240,6 +242,13 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
     ``fitness_backend`` (scan | pallas | auto, DESIGN.md §8) overrides
     ``pso.fitness_backend`` when given — the serve path exposes it as
     ``--fitness-backend`` without rebuilding the whole config.
+
+    ``warm``: per-request incumbent assignments (online re-planning,
+    DESIGN.md §9) — swarms warm-start in the incumbent neighborhood and
+    pay ``migration_weight`` × the Eq. 6 input-dataset cost per moved
+    layer, so the new plans prefer cheap deltas against the ones already
+    deployed. Deadlines are still re-derived from HEFT on the CURRENT
+    ``env``, so pass the drifted environment when re-planning.
     """
     from .batch import run_pso_ga_batch      # local: avoid import cycle
 
@@ -256,7 +265,9 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
         dags.append(dag.with_deadline(np.asarray([deadline])))
         hefts.append(float(heft))
         deadlines.append(float(deadline))
-    results = run_pso_ga_batch([(d, env) for d in dags], cfg=pso, seed=seed)
+    results = run_pso_ga_batch([(d, env) for d in dags], cfg=pso, seed=seed,
+                               incumbent=warm,
+                               migration_weight=migration_weight)
     return [OffloadPlan(dag=d, env=env, result=r,
                         stages=contiguous_stages(d, r.best_x),
                         deadline=dl, heft=h)

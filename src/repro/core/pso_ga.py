@@ -64,6 +64,12 @@ class PSOGAConfig:
     #   "scan" = two-phase simulate_padded under vmap (bit-exact default);
     #   "pallas" = kernels/schedule_sim tile kernel (interpret off-TPU);
     #   "auto" = pallas on TPU, scan elsewhere.
+    # -- incumbent ("warm") seeding, used by online re-planning
+    #    (DESIGN.md §9); only consulted when init_swarm gets an incumbent.
+    warm_elite: int = 2             # exact clones of the incumbent plan
+    warm_fraction: float = 0.5      # swarm share seeded in the incumbent's
+    #   mutated neighborhood (per-gene redraw with prob warm_mutation)
+    warm_mutation: float = 0.1      # per-gene neighborhood redraw prob
 
 
 class PSOGAResult(NamedTuple):
@@ -101,8 +107,9 @@ def _home_servers(prob: SimProblem) -> np.ndarray:
     return np.array([pin_per_app.get(int(a), 0) for a in app_np], np.int32)
 
 
-def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
-               ) -> jnp.ndarray:
+def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig,
+               incumbent: Optional[np.ndarray] = None,
+               rescue: bool = False) -> jnp.ndarray:
     """Link-aware random initialization.
 
     Genes are drawn uniformly over the servers *reachable from the app's
@@ -113,6 +120,23 @@ def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
     (see EXPERIMENTS.md §Perf for its ablation). One particle is seeded
     with the everything-stays-home placement: the paper's own limiting
     solution (zero cost when the deadline is loose, Fig. 8(b)).
+
+    With ``incumbent`` (a (p,) assignment — online re-planning,
+    DESIGN.md §9) the seeding switches to incumbent mode:
+    ``cfg.warm_elite`` exact clones of the incumbent, then
+    ``cfg.warm_fraction`` of the swarm in its mutated neighborhood
+    (per-gene redraw with prob ``cfg.warm_mutation`` from the link-aware
+    allowed set), and the remaining particles keep the cold random draw
+    for diversity. ``rescue=True`` (the re-planner sets it per problem
+    when drift has stranded the incumbent infeasible — node-loss, heavy
+    congestion) additionally re-applies the cold tier anchors at the
+    tail, single-server placements ordered by DESCENDING power so the
+    strongest escape hatches survive tail truncation: recovering
+    feasibility then starts from the same anchors a cold solve gets. A
+    healthy incumbent skips the anchors — they only slow convergence
+    toward a plan that is already near-optimal. The cold draw consumes
+    the same key split either way, so passing ``incumbent=None`` is
+    bit-identical to the pre-warm-start initialization.
     """
     p, s = prob.num_layers, prob.num_servers
     home = _home_servers(prob)
@@ -122,13 +146,36 @@ def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
     # never initialize onto a *foreign* end device (free but slowest and
     # behind two WIFI hops); mutation may still propose them.
     logits = jnp.where(jnp.asarray(allowed), 0.0, -jnp.inf)   # (p, S)
-    k1, _ = jax.random.split(key)
+    k1, k_warm = jax.random.split(key)
     # categorical broadcasts logits over the requested sample shape: the
     # gumbel draw is (P, p, S) either way, so this samples bit-identically
     # to materializing a (P, p, S) logits tensor — without the copy.
     X = jax.random.categorical(
         k1, logits, axis=-1, shape=(cfg.pop_size, p)).astype(jnp.int32)
-    if cfg.bias_init_to_tiers:
+    if incumbent is not None:
+        inc = jnp.asarray(incumbent, jnp.int32)
+        n_elite = max(1, min(cfg.warm_elite, cfg.pop_size))
+        n_neigh = min(int(round(cfg.warm_fraction * cfg.pop_size)),
+                      cfg.pop_size - n_elite)
+        X = X.at[:n_elite].set(inc[None, :])
+        if n_neigh > 0:
+            k_mask, k_val = jax.random.split(k_warm)
+            mut = jax.random.uniform(
+                k_mask, (n_neigh, p)) < cfg.warm_mutation
+            vals = jax.random.categorical(
+                k_val, logits, axis=-1, shape=(n_neigh, p)
+            ).astype(jnp.int32)
+            X = X.at[n_elite:n_elite + n_neigh].set(
+                jnp.where(mut, vals, inc[None, :]))
+        tail = n_elite + n_neigh
+        if rescue and cfg.bias_init_to_tiers and tail < cfg.pop_size:
+            n_anchor = min(s + 1, cfg.pop_size - tail)
+            X = X.at[tail].set(jnp.asarray(home))
+            by_power = np.argsort(-np.asarray(prob.power), kind="stable")
+            for k in range(n_anchor - 1):
+                X = X.at[tail + 1 + k].set(
+                    jnp.full((p,), int(by_power[k]), jnp.int32))
+    elif cfg.bias_init_to_tiers:
         # Warm-start anchors (standard metaheuristic practice; ≤ S+1 of the
         # swarm): the all-home placement (the paper's loose-deadline
         # limiting solution) and the S single-server placements. The
@@ -142,7 +189,9 @@ def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig
 
 
 def swarm_step(pp: PaddedProblem, state: _SwarmState,
-               cfg: PSOGAConfig) -> _SwarmState:
+               cfg: PSOGAConfig,
+               incumbent: Optional[jnp.ndarray] = None,
+               mig_weight: Optional[jnp.ndarray] = None) -> _SwarmState:
     """One PSO-GA iteration on the padded representation (Eq. 17–23).
 
     Pure in ``(pp, state)`` — ``repro.core.batch`` vmaps it over a fleet of
@@ -151,12 +200,17 @@ def swarm_step(pp: PaddedProblem, state: _SwarmState,
     traced per problem under vmap), so a padded layer is never mutated and
     a padded server is never proposed: padded genes stay at their initial
     value and padding is invisible to the search (DESIGN.md §4).
+
+    ``incumbent`` / ``mig_weight`` (both traceable arrays) switch the
+    fitness to the migration-aware warm key (DESIGN.md §9); a zero
+    ``mig_weight`` reproduces the cold key bit-for-bit.
     """
     max_p = pp.pinned.shape[-1]
     p = pp.num_layers                 # true sizes; 0-d, traced under vmap
     s = pp.num_servers
     P = cfg.pop_size
-    fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend)
+    fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend,
+                             incumbent=incumbent, mig_weight=mig_weight)
 
     key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
         state.key, 8)

@@ -118,21 +118,57 @@ def main() -> None:
     ap.add_argument("--fitness-backend", default="scan",
                     choices=("scan", "pallas", "auto"),
                     help="swarm-fitness backend for --plan (DESIGN.md §8)")
+    ap.add_argument("--replan", default=None, metavar="SCENARIO",
+                    help="after --plan, drive the placements through a "
+                         "drift trace (wifi-fade | congestion | "
+                         "spot-price | node-loss) and re-plan warm at "
+                         "each event (DESIGN.md §9)")
+    ap.add_argument("--replan-rounds", type=int, default=4,
+                    help="drift events in the --replan trace")
     args = ap.parse_args()
 
     cfg = get(args.arch)
+    if args.replan and not args.plan:
+        ap.error("--replan requires --plan")
     if args.plan:
         # one batched PSO-GA fleet plans every serving shape at once
         # (DESIGN.md §4) instead of re-compiling the solver per shape.
-        from ..core import PSOGAConfig, plan_offload_batch
+        from ..core import (PSOGAConfig, plan_offload_batch,
+                            tpu_fleet_environment)
+        fleet_env = tpu_fleet_environment()
         shapes = [s for s in SHAPES if s.kind != "train"]
+        pso_cfg = PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40)
         plans = plan_offload_batch(
-            [(cfg, s, 1.5) for s in shapes],
-            pso=PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40),
-            fitness_backend=args.fitness_backend)
+            [(cfg, s, 1.5) for s in shapes], env=fleet_env,
+            pso=pso_cfg, fitness_backend=args.fitness_backend)
         for shape, plan in zip(shapes, plans):
             print(f"[serve] PSO-GA fleet placement for {shape.name}:")
             print(plan.summary())
+        if args.replan:
+            # warm re-planning across a drifting fleet: each event
+            # re-solves every shape from its incumbent plan, accepting
+            # only migration-adjusted improvements (DESIGN.md §9).
+            import dataclasses as _dc
+
+            from ..core import ReplanConfig, replan_fleet, sample_trace
+            trace = sample_trace(args.replan, fleet_env,
+                                 rounds=args.replan_rounds, seed=0)
+            # keep the cold solve's fitness backend: a different config
+            # would force a second fleet-runner compile mid-replan and
+            # silently override the user's --fitness-backend choice
+            replan_pso = _dc.replace(pso_cfg,
+                                     fitness_backend=args.fitness_backend)
+            report = replan_fleet(
+                [p.dag for p in plans], trace,
+                ReplanConfig(pso=replan_pso),
+                initial=[p.result for p in plans])
+            for log in report.rounds:
+                n_re = int(log.replanned.sum())
+                print(f"[serve] replan round {log.round} ({log.label}): "
+                      f"{n_re}/{len(plans)} plans changed, "
+                      f"fleet cost ${float(np.sum(log.cost)):.4f}, "
+                      f"moved layers {log.moved_layers.tolist()}, "
+                      f"{log.wall_s * 1e3:.0f}ms")
     if args.reduced:
         cfg = cfg.reduced()
     srv = Server(cfg, args.batch, args.prompt_len, args.max_new,

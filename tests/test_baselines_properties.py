@@ -1,0 +1,143 @@
+"""Property coverage for ``baselines.greedy_offload`` / ``heft_makespan``
+(ISSUE 4): emitted placements are always *feasible by construction* —
+pinning honored, link reachability respected — and every reported cost
+matches a gene-for-gene simulator replay.
+
+Runs twice: a seeded sweep that always executes (hypothesis is optional
+in this environment, tests/hypo_compat.py), plus ``@given`` property
+tests over the same checkers when hypothesis is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (SimProblem, greedy_offload, heft_makespan,
+                        paper_environment, sample_environment,
+                        simulate_np)
+from repro.core.dag import LayerDAG
+
+from hypo_compat import given, st
+
+
+def random_case(seed: int):
+    """A random multi-parent DAG + env + HEFT-derived deadline."""
+    rng = np.random.default_rng(seed)
+    env = paper_environment() if seed % 2 else sample_environment()
+    p = int(rng.integers(4, 13))
+    edges, mbs = [], []
+    for j in range(1, p):
+        parents = rng.choice(j, size=min(j, int(rng.integers(1, 3))),
+                             replace=False)
+        for u in parents:
+            edges.append((int(u), j))
+            mbs.append(float(rng.uniform(0.01, 2.0)))
+    pinned = np.full(p, -1, np.int32)
+    devices = np.nonzero(env.tier == 2)[0]
+    pinned[0] = int(rng.choice(devices))
+    dag = LayerDAG(compute=rng.uniform(0.05, 3.0, p),
+                   edges=np.asarray(edges, np.int32).reshape(-1, 2),
+                   edge_mb=np.asarray(mbs),
+                   app_id=np.zeros(p, np.int32),
+                   deadline=np.asarray([np.inf]),
+                   pinned=pinned)
+    h, _ = heft_makespan(dag, env)
+    ratio = float(rng.choice([1.2, 1.5, 3.0, 8.0, np.inf]))
+    dl = ratio * h if np.isfinite(ratio) else np.inf
+    return dag.with_deadline(np.asarray([dl])), env
+
+
+def check_greedy(dag: LayerDAG, env, faithful: bool) -> None:
+    prob = SimProblem.build(dag, env)
+    res = greedy_offload(dag, env, faithful=faithful)
+    p, s = dag.num_layers, env.num_servers
+    # well-formed placement
+    assert res.best_x.shape == (p,)
+    assert np.all((res.best_x >= 0) & (res.best_x < s))
+    # pinning respected even when the schedule is infeasible
+    pin = dag.pinned >= 0
+    assert np.all(res.best_x[pin] == dag.pinned[pin])
+    # reported numbers == gene-for-gene simulator replay
+    replay = simulate_np(prob, res.best_x, faithful=faithful)
+    if res.feasible:
+        assert bool(replay.feasible)
+        np.testing.assert_allclose(res.best_cost,
+                                   float(replay.total_cost), rtol=1e-9)
+        np.testing.assert_allclose(res.best_fitness,
+                                   float(replay.total_cost), rtol=1e-9)
+        # link reachability: every used edge crosses a real link
+        for (u, v) in dag.edges:
+            a, b = res.best_x[int(u)], res.best_x[int(v)]
+            assert a == b or prob.link_ok[a, b]
+    else:
+        assert res.best_cost == float("inf")
+
+
+def check_heft(dag: LayerDAG, env) -> None:
+    prob = SimProblem.build(dag, env)
+    makespan, x = heft_makespan(dag, env)
+    p, s = dag.num_layers, env.num_servers
+    assert x.shape == (p,)
+    assert np.all((x >= 0) & (x < s))
+    pin = dag.pinned >= 0
+    assert np.all(x[pin] == dag.pinned[pin])
+    assert makespan > 0.0
+    if np.isfinite(makespan):
+        # HEFT placements are link-feasible: with the deadline relaxed,
+        # a gene-for-gene replay violates nothing
+        relaxed = SimProblem.build(
+            dag.with_deadline(np.asarray([np.inf])), env)
+        replay = simulate_np(relaxed, x, faithful=False)
+        assert bool(replay.feasible)
+
+
+# --------------------------------------------------------------------------
+# seeded sweep — always runs, hypothesis or not
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faithful", [False, True])
+def test_greedy_properties_seeded_sweep(faithful):
+    for seed in range(24):
+        dag, env = random_case(seed)
+        check_greedy(dag, env, faithful)
+
+
+def test_heft_properties_seeded_sweep():
+    for seed in range(24):
+        dag, env = random_case(seed)
+        check_heft(dag, env)
+
+
+def test_greedy_zoo_nets_replay_consistent():
+    """The four paper DNNs: the greedy properties hold at tight AND
+    loose deadlines, and with the deadline effectively removed greedy
+    recovers the all-home zero-cost plan (everything on the free pinned
+    device — nothing cheaper exists)."""
+    from repro.core import zoo
+    env = paper_environment()
+    for net in zoo.NAMES:
+        base = zoo.build(net, pin_server=0)
+        h, _ = heft_makespan(base, env)
+        for ratio in (1.5, 5.0):
+            check_greedy(base.with_deadline(np.asarray([ratio * h])),
+                         env, faithful=False)
+        loose = base.with_deadline(np.asarray([1e9]))
+        check_greedy(loose, env, faithful=False)
+        res = greedy_offload(loose, env)
+        assert res.feasible
+        assert res.best_cost == 0.0
+        assert np.all(res.best_x == 0)
+
+
+# --------------------------------------------------------------------------
+# hypothesis properties — run when hypothesis is installed
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), faithful=st.booleans())
+def test_greedy_properties_hypothesis(seed, faithful):
+    dag, env = random_case(seed)
+    check_greedy(dag, env, faithful)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_heft_properties_hypothesis(seed):
+    dag, env = random_case(seed)
+    check_heft(dag, env)

@@ -1,0 +1,71 @@
+"""Golden-cost regression: seeded end-to-end ``run_pso_ga`` for all four
+zoo DNNs on ``paper_environment()``, parameterized over both fidelity
+modes × both fitness backends, pinned to the stored values in
+``golden_costs.json``.
+
+The existing parity tests compare backend AGAINST backend — if a change
+drifts the fitness of both (a simulator tweak, a cost-model slip, an
+accidental operator-order change), parity still passes. These goldens
+anchor the absolute numbers. Regenerate after an INTENDED behaviour
+change with ``PYTHONPATH=src python scripts/gen_goldens.py`` and justify
+the diff in the PR.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (PSOGAConfig, heft_makespan, paper_environment,
+                        run_pso_ga, zoo)
+
+GOLDENS = json.loads(
+    (Path(__file__).parent / "golden_costs.json").read_text())
+_CFG = GOLDENS["_config"]
+
+
+@pytest.fixture(scope="module")
+def golden_env():
+    return paper_environment()
+
+
+@pytest.fixture(scope="module")
+def golden_dags(golden_env):
+    dags = {}
+    for net in zoo.NAMES:
+        base = zoo.build(net, pin_server=0)
+        h, _ = heft_makespan(base, golden_env)
+        dags[net] = base.with_deadline(
+            np.array([_CFG["deadline_ratio"] * h]))
+    return dags
+
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+@pytest.mark.parametrize("faithful", [False, True])
+@pytest.mark.parametrize("net", zoo.NAMES)
+def test_golden_cost(net, faithful, backend, golden_env, golden_dags):
+    want = GOLDENS[f"{net}|faithful={faithful}|{backend}"]
+    cfg = PSOGAConfig(pop_size=_CFG["pop_size"],
+                      max_iters=_CFG["max_iters"],
+                      stall_iters=_CFG["stall_iters"],
+                      faithful_sim=faithful, fitness_backend=backend)
+    res = run_pso_ga(golden_dags[net], golden_env, cfg,
+                     seed=_CFG["seed"])
+    assert res.feasible == want["feasible"]
+    # rtol absorbs cross-platform float noise; any real fitness drift is
+    # orders of magnitude larger than 1e-5 relative.
+    np.testing.assert_allclose(res.best_fitness, want["best_fitness"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(res.best_cost, want["best_cost"],
+                               rtol=1e-5)
+
+
+def test_goldens_cover_full_matrix():
+    """The stored file must span nets × fidelity × backends — a silently
+    shrunken matrix would quietly stop guarding part of the surface."""
+    keys = [k for k in GOLDENS if k != "_config"]
+    assert len(keys) == len(zoo.NAMES) * 2 * 2
+    for net in zoo.NAMES:
+        for faithful in (False, True):
+            for backend in ("scan", "pallas"):
+                assert f"{net}|faithful={faithful}|{backend}" in GOLDENS

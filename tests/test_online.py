@@ -1,0 +1,322 @@
+"""Online re-planning (repro.core.online, DESIGN.md §9): trace
+generators, the migration-cost term, incumbent swarm seeding, the
+accept-if-better replan loop — and the two ISSUE-4 acceptance
+invariants: a zero-drift replan keeps the cold solve bit-for-bit, and
+every round after the first hits the compiled fleet runner (no retrace),
+asserted via the ``batch.runner_cache_stats`` counters."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DEVICE, EDGE, PSOGAConfig, ReplanConfig,
+                        SimProblem, TRACE_KINDS, heft_makespan,
+                        migration_cost, paper_environment, replan_fleet,
+                        run_pso_ga_batch, runner_cache_stats,
+                        sample_environment, sample_trace, simulate_np,
+                        zero_drift_trace, zoo)
+from repro.core.online import incumbent_keys, migration_cost_np
+from repro.core.pso_ga import init_swarm
+from repro.core.simulator import pad_problem
+
+#: distinct from every other test config so this file's first solve is a
+#: fresh runner-cache entry (the counters below rely on that)
+FAST = PSOGAConfig(pop_size=24, max_iters=81, stall_iters=25)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    env = paper_environment()
+    dags = []
+    for i, net in enumerate(("alexnet", "googlenet", "vgg19")):
+        dag = zoo.build(net, pin_server=i)
+        h, _ = heft_makespan(dag, env)
+        dags.append(dag.with_deadline(np.array([1.5 * h])))
+    return env, dags
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def test_zero_drift_trace_is_identity():
+    env = paper_environment()
+    trace = zero_drift_trace(env, rounds=3)
+    assert trace.num_rounds == 3
+    for k in range(3):
+        assert trace.events[k].is_identity()
+        e = trace.env_at(k)
+        np.testing.assert_array_equal(e.bandwidth, env.bandwidth)
+        np.testing.assert_array_equal(e.power, env.power)
+        np.testing.assert_array_equal(e.cost_per_sec, env.cost_per_sec)
+
+
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_sample_trace_families(kind):
+    """Each family drifts only its own knob, keeps shapes, and round 0 is
+    always the base environment."""
+    env = paper_environment()
+    trace = sample_trace(kind, env, rounds=5, seed=3)
+    assert trace.num_rounds == 5
+    assert trace.events[0].is_identity()
+    s = env.num_servers
+    saw_drift = False
+    for k in range(1, 5):
+        ev = trace.events[k]
+        e = trace.env_at(k)
+        assert e.num_servers == s                 # churn never resizes
+        saw_drift |= not ev.is_identity()
+        if kind == "wifi-fade":
+            # only device<->edge entries may scale; others untouched
+            d = np.asarray(env.tier) == DEVICE
+            g = np.asarray(env.tier) == EDGE
+            m = d[:, None] & g[None, :] | g[:, None] & d[None, :]
+            np.testing.assert_array_equal(e.bandwidth[~m],
+                                          env.bandwidth[~m])
+            assert np.all(e.bandwidth[m] <= env.bandwidth[m])
+            np.testing.assert_array_equal(e.cost_per_sec, env.cost_per_sec)
+        elif kind == "spot-price":
+            np.testing.assert_array_equal(e.bandwidth, env.bandwidth)
+            dev_edge = np.asarray(env.tier) != 0
+            np.testing.assert_array_equal(e.cost_per_sec[dev_edge],
+                                          env.cost_per_sec[dev_edge])
+        elif kind == "node-loss":
+            down = ev.down
+            assert down.sum() == 1
+            assert env.tier[np.nonzero(down)[0][0]] != DEVICE
+            off = ~np.eye(s, dtype=bool)
+            dead = down[:, None] | down[None, :]
+            assert np.all(e.bandwidth[dead & off] == 0.0)
+    assert saw_drift
+
+
+def test_sample_trace_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        sample_trace("meteor-strike", paper_environment(), rounds=2)
+
+
+def test_sample_trace_seeded_deterministic():
+    env = paper_environment()
+    a = sample_trace("congestion", env, rounds=4, seed=9)
+    b = sample_trace("congestion", env, rounds=4, seed=9)
+    for ea, eb in zip(a.events, b.events):
+        np.testing.assert_array_equal(ea.bw_scale, eb.bw_scale)
+
+
+# ---------------------------------------------------------------------------
+# migration cost term
+# ---------------------------------------------------------------------------
+
+def test_migration_cost_zero_when_unmoved(rng):
+    env = sample_environment()
+    dag = zoo.alexnet(pin_server=0, deadline=6.0)
+    prob = SimProblem.build(dag, env)
+    pp = pad_problem(prob, max_p=16)
+    x = rng.integers(0, env.num_servers, size=(3, 16)).astype(np.int32)
+    assert np.all(np.asarray(migration_cost(pp, x, x[0]))[0] == 0.0)
+    assert migration_cost_np(prob, x[0, :dag.num_layers],
+                             x[0, :dag.num_layers]) == 0.0
+
+
+def test_migration_cost_matches_np_oracle(rng):
+    env = sample_environment()
+    dag = zoo.alexnet(pin_server=0, deadline=6.0)
+    prob = SimProblem.build(dag, env)
+    p = dag.num_layers
+    pp = pad_problem(prob, max_p=16)
+    for _ in range(5):
+        old = rng.integers(0, env.num_servers, size=16).astype(np.int32)
+        new = rng.integers(0, env.num_servers, size=16).astype(np.int32)
+        old[p:] = new[p:] = 0            # padded genes never move
+        got = float(np.asarray(migration_cost(pp, new[None, :], old))[0])
+        want = migration_cost_np(prob, old[:p], new[:p])
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_warm_fitness_penalizes_moves():
+    """A warm solve with a huge migration weight keeps the incumbent; the
+    same solve with weight 0 is free to move (and the cold key is then
+    bit-identical to a cold solve)."""
+    env = paper_environment()
+    dag = zoo.alexnet(pin_server=0)
+    h, _ = heft_makespan(dag, env)
+    dag = dag.with_deadline(np.array([1.5 * h]))
+    cold = run_pso_ga_batch([(dag, env)], FAST, seed=0)[0]
+    # a deliberately bad-but-feasible incumbent: the cold optimum with
+    # its most expensive offloaded layer forced elsewhere would do, but
+    # the home-pinned all-device plan is simplest (infeasible at tight
+    # deadlines is fine too: the candidate then always wins).
+    inc = np.asarray(cold.best_x, np.int32)
+    free = run_pso_ga_batch([(dag, env)], FAST, seed=1,
+                            incumbent=[inc], migration_weight=0.0)[0]
+    heavy = run_pso_ga_batch([(dag, env)], FAST, seed=1,
+                             incumbent=[inc], migration_weight=1e6)[0]
+    # weight 0: the warm key reduces to the cold key of its best genes
+    prob = SimProblem.build(dag, env)
+    replay = simulate_np(prob, free.best_x, faithful=FAST.faithful_sim)
+    np.testing.assert_allclose(free.best_fitness,
+                               np.float32(replay.total_cost), rtol=1e-6)
+    # overwhelming weight: nothing beats staying put
+    assert np.array_equal(heavy.best_x, inc)
+
+
+# ---------------------------------------------------------------------------
+# incumbent swarm seeding
+# ---------------------------------------------------------------------------
+
+def test_init_swarm_incumbent_mode():
+    env = paper_environment()
+    dag = zoo.googlenet(pin_server=0, deadline=10.0)
+    prob = SimProblem.build(dag, env)
+    import jax
+    key = jax.random.PRNGKey(0)
+    inc = np.full(dag.num_layers, 11, np.int32)
+    inc[0] = 0                                   # honor the pin
+    X = np.asarray(init_swarm(key, prob, FAST, incumbent=inc))
+    n_elite = FAST.warm_elite
+    n_neigh = int(round(FAST.warm_fraction * FAST.pop_size))
+    # elite clones are exact
+    assert np.all(X[:n_elite] == inc[None, :])
+    # neighborhood rows differ from the incumbent in only a few genes
+    frac = (X[n_elite:n_elite + n_neigh] != inc[None, :]).mean(axis=1)
+    assert np.all(frac <= 3 * FAST.warm_mutation + 0.05)
+    # the random tail is NOT incumbent-dominated (diversity preserved)
+    tail = X[n_elite + n_neigh:]
+    assert (tail != inc[None, :]).mean() > 0.3
+    # pins hold everywhere
+    assert np.all(X[:, 0] == 0)
+    # rescue mode: the tail re-gains the cold anchors, single-server
+    # placements ordered by descending power (strongest escape first)
+    Xr = np.asarray(init_swarm(key, prob, FAST, incumbent=inc,
+                               rescue=True))
+    t0 = n_elite + n_neigh
+    by_power = np.argsort(-env.power, kind="stable")
+    assert np.all(Xr[t0][1:] == 0)               # all-home anchor
+    assert np.all(Xr[t0 + 1][1:] == by_power[0])
+    assert np.all(Xr[t0 + 2][1:] == by_power[1])
+    # elites/neighborhood identical in both modes
+    np.testing.assert_array_equal(Xr[:t0], X[:t0])
+    # cold init is bit-identical to the pre-warm-start behaviour
+    a = np.asarray(init_swarm(key, prob, FAST))
+    b = np.asarray(init_swarm(key, prob, FAST, incumbent=None))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the replan loop: zero-drift parity + runner-cache reuse (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_zero_drift_replan_bit_exact_and_cache_hit(fleet):
+    """ISSUE-4 acceptance: with a zero-drift trace, one replan round
+    reproduces the cold solve bit-for-bit (same genes, same fitness) AND
+    hits the compiled fleet runner — no jit retrace — per the PR-1 cache
+    counters."""
+    env, dags = fleet
+    cfg = ReplanConfig(pso=FAST)
+    trace = zero_drift_trace(env, rounds=2)
+
+    # cold solve first: pays the (at most one) compile for this config
+    probs0 = [SimProblem.build(d, trace.env_at(0)) for d in dags]
+    cold = run_pso_ga_batch(probs0, cfg.pso, seed=0)
+    before = runner_cache_stats()
+
+    report = replan_fleet(dags, trace, cfg, seed=0, initial=cold)
+    after = runner_cache_stats()
+
+    # bit-exact: the replan kept every incumbent gene and key
+    (log,) = report.rounds
+    assert not log.replanned.any()
+    for i, r in enumerate(cold):
+        np.testing.assert_array_equal(report.plans[i], r.best_x)
+        np.testing.assert_allclose(log.incumbent_key[i], r.best_fitness,
+                                   rtol=0, atol=0)
+    # cache hit, no retrace: the warm round reused the compiled runner
+    assert after["traces"] == before["traces"]
+    assert after["hits"] > before["hits"]
+    assert after["misses"] == before["misses"]
+
+
+def test_drift_replan_improves_on_stale_plan(fleet):
+    """Under real drift the replanner must do at least as well as
+    carrying the stale incumbent, and every accepted plan must strictly
+    beat its incumbent's key under the drifted environment."""
+    env, dags = fleet
+    cfg = ReplanConfig(pso=FAST, migration_weight=0.1)
+    trace = sample_trace("congestion", env, rounds=4, seed=5,
+                         severity=0.8)
+    report = replan_fleet(dags, trace, cfg, seed=0)
+    assert len(report.rounds) == 3
+    for log in report.rounds:
+        accepted = np.nonzero(log.replanned)[0]
+        assert np.all(log.candidate_key[accepted]
+                      < log.incumbent_key[accepted])
+        kept = np.nonzero(~log.replanned & log.feasible)[0]
+        np.testing.assert_allclose(log.cost[kept],
+                                   log.incumbent_key[kept], rtol=1e-6)
+        # infeasible kept plans report inf cost (no pretend-$ numbers)
+        kept_bad = np.nonzero(~log.replanned & ~log.feasible)[0]
+        assert np.all(np.isinf(log.cost[kept_bad]))
+    # final plans replay to the reported last-round cost
+    last = report.rounds[-1]
+    env_last = trace.env_at(trace.num_rounds - 1)
+    for i, d in enumerate(dags):
+        prob = SimProblem.build(d, env_last)
+        r = simulate_np(prob, report.plans[i],
+                        faithful=cfg.pso.faithful_sim)
+        if last.feasible[i]:
+            np.testing.assert_allclose(last.cost[i], float(r.total_cost),
+                                       rtol=1e-5)
+
+
+def test_node_loss_forces_migration_off_dead_server(fleet):
+    """Churning out the server an incumbent uses makes the stale plan
+    link-infeasible; the replanner must move off it and restore
+    feasibility (the node-loss drift family's whole point)."""
+    env, dags = fleet
+    cfg = ReplanConfig(pso=FAST, migration_weight=0.1)
+    # force a cold plan that uses SOME rented server (tight deadline), then
+    # kill exactly that server in round 1.
+    probs0 = [SimProblem.build(d, env) for d in dags]
+    cold = run_pso_ga_batch(probs0, cfg.pso, seed=0)
+    used = [s for r in cold for s in np.unique(r.best_x)
+            if env.tier[s] != DEVICE]
+    if not used:
+        pytest.skip("cold plans stayed on devices; nothing to kill")
+    victim = int(used[0])
+    import dataclasses as dc
+    trace = zero_drift_trace(env, rounds=2)
+    down = np.zeros(env.num_servers, bool)
+    down[victim] = True
+    ev = dc.replace(trace.events[1], down=down,
+                    label=f"node-loss[s{victim}]")
+    trace = dc.replace(trace, events=(trace.events[0], ev))
+    report = replan_fleet(dags, trace, cfg, seed=0, initial=cold)
+    (log,) = report.rounds
+    for i, r in enumerate(cold):
+        if victim in r.best_x:
+            assert victim not in report.plans[i]
+            assert log.replanned[i]
+        assert log.feasible[i]
+
+
+def test_incumbent_keys_match_replay(fleet):
+    env, dags = fleet
+    probs = [SimProblem.build(d, env) for d in dags]
+    incs = [np.zeros(d.num_layers, np.int32) + d.pinned[0] for d in dags]
+    keys = incumbent_keys(probs, incs, FAST)
+    for pr, inc, k in zip(probs, incs, keys):
+        r = simulate_np(pr, inc, faithful=FAST.faithful_sim)
+        if bool(r.feasible):
+            np.testing.assert_allclose(k, np.float32(r.total_cost),
+                                       rtol=1e-6)
+
+
+def test_run_pso_ga_batch_incumbent_validation(fleet):
+    env, dags = fleet
+    probs = [SimProblem.build(d, env) for d in dags]
+    with pytest.raises(ValueError):
+        run_pso_ga_batch(probs, FAST, incumbent=[np.zeros(3, np.int32)])
+    with pytest.raises(ValueError):
+        run_pso_ga_batch(
+            probs, FAST,
+            incumbent=[np.zeros(3, np.int32)] * (len(probs) + 1))
