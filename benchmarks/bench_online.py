@@ -33,7 +33,7 @@ from repro.core import (PSOGAConfig, ReplanConfig, TRACE_KINDS,
 from repro.core.online import migration_cost_np
 from repro.core.simulator import SimProblem
 
-from .common import print_csv
+from .common import bench_metadata, print_csv
 
 #: warm rounds should stall out fast; cold solves get the full budget
 ONLINE_CFG = PSOGAConfig(pop_size=32, max_iters=200, stall_iters=30)
@@ -155,7 +155,11 @@ def main() -> None:
     ap.add_argument("--json", default="BENCH_online.json",
                     help="machine-readable results ('' to disable)")
     args = ap.parse_args()
-    kinds = TRACE_KINDS if "all" in args.kinds else args.kinds
+    # load-surge drifts the WORKLOAD, not the environment — without a
+    # TrafficConfig this bench's replan rounds would be no-ops; the
+    # traffic engine's own benchmark (bench_traffic) covers that axis.
+    kinds = [k for k in TRACE_KINDS if k != "load-surge"] \
+        if "all" in args.kinds else args.kinds
     cfg = ReplanConfig(pso=ONLINE_CFG,
                        migration_weight=args.migration_weight)
 
@@ -179,6 +183,7 @@ def main() -> None:
     if args.json:
         payload = {
             "bench": "bench_online",
+            "meta": bench_metadata(seeds=[args.seed]),
             "device": jax.devices()[0].platform,
             "n_problems": args.n,
             "rounds": args.rounds,

@@ -28,7 +28,7 @@ from repro.core import (PSOGAConfig, heft_makespan, paper_environment,
 from repro.core.pso_ga import _SwarmState, _make_step, init_swarm
 from repro.core.simulator import SimProblem
 
-from .common import print_csv
+from .common import bench_metadata, print_csv
 
 #: moderate budget so the N=64 fleet stays CPU-friendly
 FLEET_CFG = PSOGAConfig(pop_size=32, max_iters=80, stall_iters=25)
@@ -140,6 +140,7 @@ def main() -> None:
     if args.json:
         payload = {
             "bench": "bench_pso",
+            "meta": bench_metadata(seeds=[0]),
             "backend": args.backend,
             "pop": args.pop,
             "device": jax.devices()[0].platform,

@@ -10,8 +10,11 @@ Two protocols:
 from __future__ import annotations
 
 import dataclasses
+import platform
+import subprocess
 import time
-from typing import Callable, Dict, List
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -114,3 +117,32 @@ def print_csv(rows: List[Dict], cols: List[str]) -> None:
     for r in rows:
         print(",".join(f"{r[c]:.6g}" if isinstance(r[c], float)
                        else str(r[c]) for c in cols))
+
+
+def bench_metadata(seeds: Optional[Sequence[int]] = None) -> Dict:
+    """Reproducibility stamp for every ``BENCH_*.json`` payload: library
+    versions, platform, the repo's git sha (dirty-marked), and the
+    protocol seeds the run used — enough to re-run the exact cell a
+    number came from months later."""
+    import jax
+
+    try:
+        repo = Path(__file__).resolve().parent.parent
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=repo,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=repo,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        git_sha = (sha + ("-dirty" if dirty else "")) if sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        git_sha = "unknown"
+    return {
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "device": jax.devices()[0].platform,
+        "git_sha": git_sha,
+        "seeds": list(map(int, seeds)) if seeds is not None else [],
+    }

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import argparse
 
-from .common import ALGOS, PAPER, QUICK, RATIOS, print_csv
+from .common import PAPER, QUICK, print_csv
 from .fig7 import NETS, run
 
 

@@ -11,11 +11,8 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
 from repro.configs import SHAPES, get, names
-from repro.core import (PSOGAConfig, arch_to_dag, heft_makespan,
-                        plan_offload, plan_offload_batch, stage_cut_cost,
+from repro.core import (PSOGAConfig, plan_offload, plan_offload_batch,
                         tpu_fleet_environment, uniform_stages)
 from repro.core.simulator import SimProblem, simulate_np
 

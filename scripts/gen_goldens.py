@@ -19,7 +19,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import (PSOGAConfig, heft_makespan, paper_environment,
-                        run_pso_ga, zoo)
+                        run_pso_ga, sample_arrivals, zoo)
 
 OUT = Path(__file__).resolve().parent.parent / "tests" / "golden_costs.json"
 
@@ -27,6 +27,15 @@ OUT = Path(__file__).resolve().parent.parent / "tests" / "golden_costs.json"
 GOLDEN = dict(pop_size=16, max_iters=30, stall_iters=12)
 SEED = 42
 DEADLINE_RATIO = 2.0
+#: queue-aware goldens (DESIGN.md §10): 2 nets × 2 arrival scenarios,
+#: fixed seeds — catches traffic-fitness drift the same way the plan
+#: goldens catch plan-fitness drift.
+TRAFFIC_NETS = ("alexnet", "googlenet")
+TRAFFIC_SCENARIOS = ("bursty", "flash-crowd")
+TRAFFIC_ARR = dict(rate=0.4, horizon=20.0, max_requests=5, n_seeds=2)
+#: generous budget so golden keys are feasible $ values (a tight anchor:
+#: rtol on ~1e-2 is far more sensitive than on the 1e4 infeasible offset)
+TRAFFIC_MISS_BUDGET = 0.5
 
 
 def generate() -> dict:
@@ -56,6 +65,28 @@ def generate() -> dict:
                 }
                 print(f"{key}: cost={res.best_cost:.8g} "
                       f"iters={res.iterations}")
+    out["_traffic_config"] = {**GOLDEN, "seed": SEED,
+                              "deadline_ratio": DEADLINE_RATIO,
+                              "arrivals": TRAFFIC_ARR,
+                              "miss_budget": TRAFFIC_MISS_BUDGET,
+                              "env": "paper_environment"}
+    for net in TRAFFIC_NETS:
+        base = zoo.build(net, pin_server=0)
+        h, _ = heft_makespan(base, env)
+        dag = base.with_deadline(np.array([DEADLINE_RATIO * h]))
+        for kind in TRAFFIC_SCENARIOS:
+            arr = sample_arrivals(kind, 1, seed=SEED, **TRAFFIC_ARR).t
+            cfg = PSOGAConfig(**GOLDEN, miss_budget=TRAFFIC_MISS_BUDGET)
+            res = run_pso_ga(dag, env, cfg, seed=SEED, arrivals=arr)
+            key = f"{net}|traffic={kind}"
+            out[key] = {
+                "best_fitness": float(res.best_fitness),
+                "best_cost": float(res.best_cost),
+                "feasible": bool(res.feasible),
+                "iterations": int(res.iterations),
+            }
+            print(f"{key}: key={res.best_fitness:.8g} "
+                  f"iters={res.iterations}")
     return out
 
 

@@ -14,6 +14,9 @@ Public surface:
                                               (DESIGN.md §4)
   * online / EnvTrace / replan_fleet        — online re-planning for
                                               drifting fleets (DESIGN.md §9)
+  * traffic / sample_arrivals / traffic_replay — request-stream workload
+                                              engine and contention-aware
+                                              planning (DESIGN.md §10)
 """
 from .dag import LayerDAG, merge_dags, preprocess, topological_order
 from .environment import (CLOUD, DEVICE, EDGE, Environment,
@@ -25,11 +28,15 @@ from .simulator import (PaddedProblem, SimProblem, SimResult,
                         build_simulator, pad_problem, simulate_np,
                         simulate_padded, simulate_swarm)
 from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga, swarm_step
-from .batch import (pack_problems, run_pso_ga_batch, runner_cache_stats,
-                    reset_runner_cache_stats)
+from .batch import (pack_arrivals, pack_problems, run_pso_ga_batch,
+                    runner_cache_stats, reset_runner_cache_stats)
 from .online import (DriftEvent, EnvTrace, OnlineReport, ReplanConfig,
                      RoundLog, TRACE_KINDS, replan_fleet, replan_round,
                      sample_trace, zero_drift_trace)
+from .traffic import (ArrivalTrace, TRAFFIC_KINDS, TrafficConfig,
+                      TrafficResult, sample_arrivals,
+                      simulate_traffic_swarm, traffic_replay,
+                      traffic_stats, zero_contention_arrivals)
 from .baselines import (GAConfig, greedy_offload, heft_makespan, pre_pso,
                         run_ga, run_pso_linear)
 from .partition import Stage, contiguous_stages, stage_cut_cost, \
@@ -47,11 +54,14 @@ __all__ = [
     "SimProblem", "SimResult", "build_simulator", "simulate_np",
     "PaddedProblem", "pad_problem", "simulate_padded", "simulate_swarm",
     "PSOGAConfig", "PSOGAResult", "run_pso_ga", "swarm_step",
-    "pack_problems", "run_pso_ga_batch", "runner_cache_stats",
-    "reset_runner_cache_stats",
+    "pack_arrivals", "pack_problems", "run_pso_ga_batch",
+    "runner_cache_stats", "reset_runner_cache_stats",
     "DriftEvent", "EnvTrace", "OnlineReport", "ReplanConfig", "RoundLog",
     "TRACE_KINDS", "replan_fleet", "replan_round", "sample_trace",
     "zero_drift_trace",
+    "ArrivalTrace", "TRAFFIC_KINDS", "TrafficConfig", "TrafficResult",
+    "sample_arrivals", "simulate_traffic_swarm", "traffic_replay",
+    "traffic_stats", "zero_contention_arrivals",
     "GAConfig", "greedy_offload", "heft_makespan", "pre_pso", "run_ga",
     "run_pso_linear", "zoo",
     "Stage", "contiguous_stages", "stage_cut_cost", "uniform_stages",

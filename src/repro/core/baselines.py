@@ -16,7 +16,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ import numpy as np
 from .dag import LayerDAG, preprocess, topological_order
 from .environment import Environment
 from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
-from .pso_ga import PSOGAConfig, PSOGAResult, _SwarmState, _make_step, \
+from .pso_ga import PSOGAConfig, PSOGAResult, _SwarmState, \
     init_swarm, run_pso_ga
 from .simulator import SimProblem, build_simulator, pad_problem, simulate_np
 
@@ -128,14 +128,23 @@ class GAConfig:
     elite: int = 2
     faithful_sim: bool = False        # match PSOGAConfig (paper-consistent)
     fitness_backend: str = "scan"     # scan | pallas | auto (DESIGN.md §8)
+    miss_budget: float = 0.05         # p95 miss budget under traffic
+    #   (DESIGN.md §10; consulted when run_ga gets ``arrivals``)
 
 
 def run_ga(dag: LayerDAG, env: Environment, cfg: GAConfig = GAConfig(),
-           seed: int = 0) -> PSOGAResult:
+           seed: int = 0,
+           arrivals: Optional[np.ndarray] = None) -> PSOGAResult:
+    """Paper's modified GA; ``arrivals`` switches its fitness to the
+    queue-aware traffic key (DESIGN.md §10) so the baseline competes
+    with PSO-GA under the same request stream."""
     prob = SimProblem.build(dag, env)
     sim = build_simulator(prob, faithful=cfg.faithful_sim)
     fit = make_swarm_fitness(pad_problem(prob), cfg.faithful_sim,
-                             cfg.fitness_backend)
+                             cfg.fitness_backend,
+                             arrivals=None if arrivals is None
+                             else jnp.asarray(arrivals),
+                             miss_budget=cfg.miss_budget)
     pinned = jnp.asarray(prob.pinned)
     p, s, P = prob.num_layers, prob.num_servers, cfg.pop_size
 

@@ -43,8 +43,8 @@ from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
                      swarm_step)
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
 
-__all__ = ["pack_problems", "run_pso_ga_batch", "bucket_size",
-           "runner_cache_info", "runner_cache_stats",
+__all__ = ["pack_problems", "pack_arrivals", "run_pso_ga_batch",
+           "bucket_size", "runner_cache_info", "runner_cache_stats",
            "reset_runner_cache_stats"]
 
 ProblemLike = Union[SimProblem, Tuple[LayerDAG, Environment]]
@@ -126,8 +126,8 @@ _RUNNER_CACHE: Dict[tuple, Callable] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
 
 
-def runner_cache_info() -> Tuple[PSOGAConfig, ...]:
-    """Configs currently holding a compiled fleet runner."""
+def runner_cache_info() -> Tuple[tuple, ...]:
+    """(config, traffic?) keys currently holding a compiled fleet runner."""
     return tuple(_RUNNER_CACHE)
 
 
@@ -147,12 +147,15 @@ def _done(state: _SwarmState, cfg: PSOGAConfig) -> jnp.ndarray:
     return (state.it >= cfg.max_iters) | (state.stall >= cfg.stall_iters)
 
 
-def _fleet_runner(cfg: PSOGAConfig) -> Callable:
-    """Jitted ``(ppb, keys, X0b, incb, migb) -> final _SwarmState``.
+def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
+    """Jitted ``(ppb, keys, X0b, incb, migb[, arrb]) -> final _SwarmState``.
 
-    One cache entry per ``cfg`` (the config is baked into the traced
-    loop); jit's own cache handles shape specialization underneath, and
-    the power-of-two buckets of ``pack_problems`` keep the number of
+    One cache entry per ``(cfg, traffic?)`` (the config is baked into
+    the traced loop; the traffic flag switches the runner's signature —
+    with it, per-problem Monte-Carlo arrivals ``arrb (N, M, max_apps,
+    R)`` ride along as one more traced argument, DESIGN.md §10); jit's
+    own cache handles shape specialization underneath, and the
+    power-of-two buckets of ``pack_problems`` keep the number of
     distinct ``(max_p, max_S)`` shapes it sees small. Distinct fleet
     sizes N still trace separately — batch at stable sizes if that
     matters.
@@ -160,31 +163,35 @@ def _fleet_runner(cfg: PSOGAConfig) -> Callable:
     Cold and warm (re-planning) solves share this ONE program: the
     incumbent genes ``incb (N, max_p)`` and migration weights ``migb
     (N,)`` are ordinary traced arrays, and a zero weight multiplies the
-    migration term away bit-exactly (DESIGN.md §9). Drift only changes
-    array *values*, so every re-planning round after the first reuses
-    the compiled runner — ``runner_cache_stats()["traces"]`` counts the
-    actual re-traces.
+    migration term away bit-exactly (DESIGN.md §9). Drift — of the
+    environment OR of the arrival stream — only changes array *values*,
+    so every re-planning round after the first reuses the compiled
+    runner; ``runner_cache_stats()["traces"]`` counts the actual
+    re-traces.
     """
-    cached = _RUNNER_CACHE.get(cfg)
+    cache_key = (cfg, traffic)
+    cached = _RUNNER_CACHE.get(cache_key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
         return cached
     _CACHE_STATS["misses"] += 1
 
-    vstep = jax.vmap(lambda pp, st, inc, mw: swarm_step(
-        pp, st, cfg, incumbent=inc, mig_weight=mw))
+    vstep = jax.vmap(lambda pp, st, inc, mw, arr: swarm_step(
+        pp, st, cfg, incumbent=inc, mig_weight=mw, arrivals=arr))
     # one swarm-fitness per problem, vmapped over the fleet: the scan
     # backend batches the two-phase simulate_padded; the pallas backend's
     # grid picks up the problem axis as an outer grid dimension.
-    vfit = jax.vmap(lambda pp, X, inc, mw: make_swarm_fitness(
+    vfit = jax.vmap(lambda pp, X, inc, mw, arr: make_swarm_fitness(
         pp, cfg.faithful_sim, cfg.fitness_backend,
-        incumbent=inc, mig_weight=mw)(X))
+        incumbent=inc, mig_weight=mw, arrivals=arr,
+        miss_budget=cfg.miss_budget)(X))
 
     def run(ppb: PaddedProblem, keys: jnp.ndarray, X0b: jnp.ndarray,
-            incb: jnp.ndarray, migb: jnp.ndarray) -> _SwarmState:
+            incb: jnp.ndarray, migb: jnp.ndarray,
+            arrb: Optional[jnp.ndarray] = None) -> _SwarmState:
         _CACHE_STATS["traces"] += 1        # python side effect: trace-time only
         n = X0b.shape[0]
-        f0 = vfit(ppb, X0b, incb, migb)                        # (N, P)
+        f0 = vfit(ppb, X0b, incb, migb, arrb)                  # (N, P)
         i0 = jnp.argmin(f0, axis=1)                            # (N,)
         gbest_x = jnp.take_along_axis(
             X0b, i0[:, None, None], axis=1)[:, 0, :]           # (N, max_p)
@@ -198,7 +205,7 @@ def _fleet_runner(cfg: PSOGAConfig) -> Callable:
             return jnp.any(~_done(st, cfg))
 
         def body(st: _SwarmState) -> _SwarmState:
-            new = vstep(ppb, st, incb, migb)
+            new = vstep(ppb, st, incb, migb, arrb)
             frozen = _done(st, cfg)                            # (N,)
             return jax.tree.map(
                 lambda nw, old: jnp.where(
@@ -208,8 +215,39 @@ def _fleet_runner(cfg: PSOGAConfig) -> Callable:
         return jax.lax.while_loop(cond, body, state)
 
     jitted = jax.jit(run)
-    _RUNNER_CACHE[cfg] = jitted
+    _RUNNER_CACHE[cache_key] = jitted
     return jitted
+
+
+def pack_arrivals(arrivals: Sequence[np.ndarray],
+                  max_apps: int) -> np.ndarray:
+    """Stack per-problem ``(M, n_apps_i, R)`` Monte-Carlo arrival arrays
+    into one ``(N, M, max_apps, R)`` traced input, padding the app axis
+    with +inf (a padded app never receives a request — the same masked
+    no-op discipline as padded layers, DESIGN.md §10). Every problem
+    must share the seed count M and the request cap R (one compiled
+    runner serves the fleet)."""
+    mats = [np.asarray(a, float) for a in arrivals]
+    if not mats:
+        raise ValueError("pack_arrivals needs at least one arrival set")
+    for i, a in enumerate(mats):
+        if a.ndim != 3:
+            raise ValueError(
+                f"arrivals[{i}] has shape {a.shape}; expected a 3-d "
+                f"(M, n_apps, R) Monte-Carlo array")
+    m0, r0 = mats[0].shape[0], mats[0].shape[2]
+    for i, a in enumerate(mats):
+        if a.shape[0] != m0 or a.shape[2] != r0:
+            raise ValueError(
+                f"arrivals[{i}] has shape {a.shape}; expected (M={m0}, "
+                f"n_apps, R={r0}) with M and R shared across the fleet")
+        if a.shape[1] > max_apps:
+            raise ValueError(f"arrivals[{i}] has {a.shape[1]} apps > "
+                             f"packed max_apps {max_apps}")
+    out = np.full((len(mats), m0, max_apps, r0), np.inf)
+    for i, a in enumerate(mats):
+        out[i, :, :a.shape[1], :] = a
+    return out
 
 
 def run_pso_ga_batch(problems: Sequence[ProblemLike],
@@ -220,7 +258,8 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
                      incumbent: Optional[Sequence[np.ndarray]] = None,
                      migration_weight: Union[float,
                                              Sequence[float]] = 0.0,
-                     warm_rescue: Optional[Sequence[bool]] = None):
+                     warm_rescue: Optional[Sequence[bool]] = None,
+                     arrivals: Optional[Sequence[np.ndarray]] = None):
     """Solve N offloading problems with one fleet of swarms.
 
     Args:
@@ -245,18 +284,26 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         re-planner sets it where drift stranded the incumbent
         infeasible, so feasibility recovery starts from the same escape
         hatches a cold solve gets (``init_swarm`` rescue mode).
+      arrivals: per-problem ``(M, n_apps_i, R)`` Monte-Carlo request
+        timestamps (DESIGN.md §10) — switches every problem's fitness
+        to the queue-aware traffic key under ``cfg.miss_budget``. The
+        packed arrays are traced runner inputs, so sweeping the load
+        (or re-planning under a load surge) never retraces.
 
     Returns a list of per-problem ``PSOGAResult`` (and the state if asked).
     ``record_history`` is not supported in fleet mode — use the sequential
     solver to trace a single problem's convergence curve.
-    ``best_fitness`` is the migration-adjusted key when warm;
-    ``best_cost`` is always the raw replayed plan cost.
+    ``best_fitness`` is the migration-adjusted key when warm (the
+    traffic key when ``arrivals`` is given); ``best_cost`` is always
+    the raw zero-load replayed plan cost.
     """
     probs = _as_problems(problems)
     n = len(probs)
     seeds = _normalize_seeds(seed, n)
     if incumbent is not None and len(incumbent) != n:
         raise ValueError(f"{len(incumbent)} incumbents for {n} problems")
+    if arrivals is not None and len(arrivals) != n:
+        raise ValueError(f"{len(arrivals)} arrival sets for {n} problems")
 
     ppb = pack_problems(probs, bucket=bucket)
     max_p = int(ppb.compute.shape[1])
@@ -288,9 +335,13 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
             init_swarm(k_init, pr, cfg, incumbent=inc_i,
                        rescue=rescue_i))
 
-    runner = _fleet_runner(cfg)
+    runner = _fleet_runner(cfg, traffic=arrivals is not None)
+    arrb = None
+    if arrivals is not None:
+        arrb = jnp.asarray(
+            pack_arrivals(arrivals, int(ppb.deadline.shape[1])))
     state = runner(ppb, jnp.asarray(np.stack(keys)), jnp.asarray(X0b),
-                   jnp.asarray(incb), jnp.asarray(migb))
+                   jnp.asarray(incb), jnp.asarray(migb), arrb)
     jax.block_until_ready(state.gbest_f)
 
     # Re-simulate each gbest (same as the sequential epilogue).

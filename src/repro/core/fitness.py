@@ -29,11 +29,27 @@ particles only (Case-3 ordering stays the paper's Eq. 16), and a
 ``mig_weight`` of exactly 0.0 adds exactly 0.0 — the warm key is then
 bit-identical to the cold key, which is what lets the batched runner use
 ONE compiled program for cold and warm solves (DESIGN.md §9).
+
+The traffic engine (DESIGN.md §10) swaps the single-shot replay for the
+queue-aware Monte-Carlo replay when ``arrivals`` is given: the key then
+optimizes the EXPECTED load-adjusted cost subject to a p95
+deadline-miss budget,
+
+    key_traffic(X) = mean_seeds C_total(X | arrivals)
+                       if static-feasible and p95(miss) <= budget
+                   = INFEASIBLE_OFFSET + MISS_PENALTY · p95(miss)
+                       + log1p(mean Σ latencies)   otherwise
+
+— the infeasible branch orders particles primarily by their p95 miss
+rate (the quantity the budget constrains) and secondarily by total
+latency, mirroring the paper's Eq. 16 time ordering, so the swarm
+climbs toward the budget even when it is unattainable.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 
 from .simulator import PaddedProblem, SimResult, simulate_swarm
@@ -41,9 +57,15 @@ from .simulator import PaddedProblem, SimResult, simulate_swarm
 #: Must exceed any attainable C_total; costs in both the paper fleet and the
 #: TPU fleet are well under $1e4 per request batch.
 INFEASIBLE_OFFSET = 1e4
+#: Weight of the p95 miss rate in the traffic-infeasible key: miss is in
+#: [0, 1] and the latency tail is log-compressed to <~21 (log1p of the
+#: MIN_BW-clamped 1e9 s), so 64 lets a few points of miss rate dominate
+#: any latency difference without swamping the offset.
+MISS_PENALTY = 64.0
 
-__all__ = ["INFEASIBLE_OFFSET", "fitness_key", "make_swarm_fitness",
-           "migration_cost", "resolve_fitness_backend"]
+__all__ = ["INFEASIBLE_OFFSET", "MISS_PENALTY", "fitness_key",
+           "make_swarm_fitness", "migration_cost",
+           "resolve_fitness_backend"]
 
 
 def fitness_key(res: SimResult) -> jnp.ndarray:
@@ -84,7 +106,9 @@ def migration_cost(pp: PaddedProblem, X: jnp.ndarray,
 def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
                        backend: str = "scan",
                        incumbent: Optional[jnp.ndarray] = None,
-                       mig_weight: Optional[jnp.ndarray] = None
+                       mig_weight: Optional[jnp.ndarray] = None,
+                       arrivals: Optional[jnp.ndarray] = None,
+                       miss_budget: Optional[float] = None
                        ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Swarm-fitness evaluator ``X (P, max_p) -> keys (P,)`` (DESIGN.md §8).
 
@@ -101,8 +125,39 @@ def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
     migration term of ``migration_cost`` scaled by ``mig_weight``
     (DESIGN.md §9); ``incumbent``/``mig_weight`` may be traced arrays so
     the batched runner re-plans drifting fleets without retracing.
+
+    With ``arrivals`` (``(M, max_apps, R)`` Monte-Carlo request
+    timestamps, +inf padded — also freely traced, so drifting the load
+    never retraces) the single-shot replay is swapped for the
+    queue-aware traffic replay (DESIGN.md §10): the key becomes the
+    seed-mean load-adjusted cost, feasibility becomes "pins/links legal
+    AND p95 deadline-miss rate <= ``miss_budget``", and the infeasible
+    branch orders by miss rate then total latency (see module
+    docstring). The request-axis scan currently has no Pallas twin, so
+    the traffic path always uses the scan engine regardless of
+    ``backend`` (which is still validated).
     """
     backend = resolve_fitness_backend(backend)
+    if arrivals is not None:
+        from .traffic import simulate_traffic_swarm
+        budget = 0.05 if miss_budget is None else miss_budget
+
+        def fit_traffic(X: jnp.ndarray) -> jnp.ndarray:
+            sims = jax.vmap(
+                lambda a: simulate_traffic_swarm(pp, X, a, faithful)
+            )(arrivals)
+            mean_cost = jnp.mean(sims.total_cost, axis=0)          # (P,)
+            p95_miss = jnp.percentile(sims.miss_rate, 95.0, axis=0)
+            ok = sims.static_ok[0] & (p95_miss <= budget)
+            if incumbent is not None:
+                w = 1.0 if mig_weight is None else mig_weight
+                mean_cost = mean_cost + w * migration_cost(pp, X,
+                                                           incumbent)
+            lat = jnp.mean(sims.lat_sum, axis=0)
+            return jnp.where(ok, mean_cost,
+                             INFEASIBLE_OFFSET + MISS_PENALTY * p95_miss
+                             + jnp.log1p(lat))
+        return fit_traffic
     if backend == "scan":
         def raw(X: jnp.ndarray):
             return simulate_swarm(pp, X, faithful)

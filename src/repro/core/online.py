@@ -11,10 +11,13 @@ plans good as the environment changes:
     links). Shapes never change — only array values — so every
     re-planning round after the first reuses the compiled fleet runner
     (``batch.runner_cache_stats()`` proves it).
-  * ``sample_trace`` — generators for four drift families: ``wifi-fade``
+  * ``sample_trace`` — generators for five drift families: ``wifi-fade``
     (device↔edge fade random walk), ``congestion`` (WAN cloud links),
     ``spot-price`` (cloud rental multipliers), ``node-loss`` (an edge or
-    cloud server churns out and recovers).
+    cloud server churns out and recovers), and ``load-surge`` (the
+    environment holds still but the REQUEST STREAM surges: each epoch
+    scales the arrival intensity of the traffic engine, DESIGN.md §10,
+    so replanning reacts to workload drift, not just bandwidth drift).
   * ``replan_round`` / ``replan_fleet`` — the event-driven loop: at each
     drift event the whole fleet is re-solved by ``run_pso_ga_batch``
     **warm-started** from the incumbent plans (``init_swarm`` incumbent
@@ -36,19 +39,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .batch import pack_problems, run_pso_ga_batch
+from .batch import pack_arrivals, pack_problems, run_pso_ga_batch
 from .dag import LayerDAG
 from .environment import CLOUD, DEVICE, EDGE, Environment
 from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
 from .pso_ga import PSOGAConfig, PSOGAResult
 from .simulator import SimProblem
+from .traffic import TrafficConfig
 
 __all__ = ["DriftEvent", "EnvTrace", "ReplanConfig", "RoundLog",
            "OnlineReport", "sample_trace", "zero_drift_trace",
            "replan_round", "replan_fleet", "TRACE_KINDS",
            "incumbent_keys", "migration_cost_np"]
 
-TRACE_KINDS = ("wifi-fade", "congestion", "spot-price", "node-loss")
+TRACE_KINDS = ("wifi-fade", "congestion", "spot-price", "node-loss",
+               "load-surge")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +66,9 @@ class DriftEvent:
     off-diagonal link of the flagged servers (node churn): placements on
     them become link-infeasible, which is how Algorithm 2 already treats
     unreachable servers — no new simulator machinery needed.
+    ``load_scale`` multiplies the arrival intensity of the traffic
+    engine's request stream (DESIGN.md §10) and leaves the environment
+    untouched — workload drift rides the same trace machinery.
     """
     t: float                      # event time (s since trace start)
     label: str                    # human tag, e.g. "wifi-fade[0.41]"
@@ -68,12 +76,14 @@ class DriftEvent:
     power_scale: np.ndarray      # (S,)  on compute power
     price_scale: np.ndarray      # (S,)  on rental $/s
     down: np.ndarray             # (S,)  bool — server churned out
+    load_scale: float = 1.0      # on request arrival rate (traffic)
 
     def is_identity(self) -> bool:
         return (not self.down.any()
                 and np.all(self.bw_scale == 1.0)
                 and np.all(self.power_scale == 1.0)
-                and np.all(self.price_scale == 1.0))
+                and np.all(self.price_scale == 1.0)
+                and self.load_scale == 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +157,11 @@ def sample_trace(kind: str, env: Environment, rounds: int,
                      in [1 − severity/2, 1 + severity].
     ``node-loss``  — one non-device server churns out per drift epoch
                      (links severed), recovering before the next draw.
+    ``load-surge`` — the environment holds still; the request stream's
+                     arrival rate is scaled by a surge factor in
+                     [1, 1 + 7·severity] (traffic drift, DESIGN.md §10 —
+                     consumed by ``replan_fleet`` when its config
+                     carries a ``TrafficConfig``).
 
     Round 0 is always the identity epoch (the cold solve's environment).
     ``severity`` ∈ (0, 1] controls drift amplitude; events are ``period``
@@ -186,6 +201,10 @@ def sample_trace(kind: str, env: Environment, rounds: int,
             price[tier == CLOUD] = spot
             ev = dataclasses.replace(ev, price_scale=price,
                                      label=f"spot-price[{spot:.2f}]")
+        elif kind == "load-surge":
+            surge = float(rng.uniform(1.0, 1.0 + 7.0 * severity))
+            ev = dataclasses.replace(ev, load_scale=surge,
+                                     label=f"load-surge[{surge:.1f}x]")
         else:                                   # node-loss
             cands = np.nonzero(tier != DEVICE)[0]
             victim = int(rng.choice(cands))
@@ -208,6 +227,12 @@ class ReplanConfig:
     pso: PSOGAConfig = PSOGAConfig(pop_size=32, max_iters=150,
                                    stall_iters=30)
     migration_weight: float = 1.0   # $ per Eq.6-MB of moved input dataset
+    #: queue-aware re-planning (DESIGN.md §10): when set, every round
+    #: solves under this request-stream model with the round's arrival
+    #: rate scaled by the drift event's ``load_scale`` — the
+    #: ``load-surge`` family then drives replans with the environment
+    #: bit-still.
+    traffic: Optional[TrafficConfig] = None
 
 
 class RoundLog(NamedTuple):
@@ -254,6 +279,18 @@ def _fleet_keys(ppb, Xb, faithful: bool, backend: str):
             x[None, :])[0])(ppb, Xb)
 
 
+@partial(jax.jit, static_argnames=("faithful", "backend", "miss_budget"))
+def _fleet_keys_traffic(ppb, Xb, arrb, faithful: bool, backend: str,
+                        miss_budget: float):
+    """Traffic twin of ``_fleet_keys``: the incumbent's queue-aware key
+    under the round's arrival draws (DESIGN.md §10). Arrivals are traced
+    values — a load surge never retraces."""
+    return jax.vmap(
+        lambda pp, x, arr: make_swarm_fitness(
+            pp, faithful, backend, arrivals=arr,
+            miss_budget=miss_budget)(x[None, :])[0])(ppb, Xb, arrb)
+
+
 def migration_cost_np(prob: SimProblem, old: np.ndarray,
                       new: np.ndarray) -> float:
     """Numpy twin of ``fitness.migration_cost`` for one assignment pair:
@@ -268,14 +305,25 @@ def migration_cost_np(prob: SimProblem, old: np.ndarray,
 
 def incumbent_keys(probs: Sequence[SimProblem],
                    incumbent: Sequence[np.ndarray],
-                   cfg: PSOGAConfig) -> np.ndarray:
+                   cfg: PSOGAConfig,
+                   arrivals: Optional[Sequence[np.ndarray]] = None
+                   ) -> np.ndarray:
     """Fitness keys of the incumbent plans under ``probs``'s environment
-    (no migration term: keeping the incumbent moves nothing)."""
+    (no migration term: keeping the incumbent moves nothing). With
+    ``arrivals`` (per-problem Monte-Carlo draws) the keys are the
+    queue-aware traffic keys under ``cfg.miss_budget`` (DESIGN.md §10).
+    """
     ppb = pack_problems(probs)
     max_p = int(ppb.compute.shape[1])
     Xb = np.zeros((len(probs), max_p), np.int32)
     for i, (pr, inc) in enumerate(zip(probs, incumbent)):
         Xb[i, :pr.num_layers] = np.asarray(inc, np.int32)
+    if arrivals is not None:
+        arrb = jnp.asarray(pack_arrivals(arrivals,
+                                         int(ppb.deadline.shape[1])))
+        return np.asarray(_fleet_keys_traffic(
+            ppb, jnp.asarray(Xb), arrb, cfg.faithful_sim,
+            cfg.fitness_backend, cfg.miss_budget))
     return np.asarray(_fleet_keys(ppb, jnp.asarray(Xb), cfg.faithful_sim,
                                   cfg.fitness_backend))
 
@@ -285,7 +333,9 @@ def replan_round(probs: Sequence[SimProblem],
                  cfg: ReplanConfig = ReplanConfig(),
                  seed: int = 0,
                  round_no: int = 0,
-                 label: str = "") -> Tuple[List[np.ndarray], RoundLog]:
+                 label: str = "",
+                 arrivals: Optional[Sequence[np.ndarray]] = None
+                 ) -> Tuple[List[np.ndarray], RoundLog]:
     """One drift event: warm re-solve the fleet, accept-if-better.
 
     ``probs`` carry the NEW (drifted) environment. Each problem's swarm
@@ -295,11 +345,19 @@ def replan_round(probs: Sequence[SimProblem],
     event keeps every incumbent bit-for-bit (the warm-start parity
     invariant, tested in tests/test_online.py).
 
+    With ``arrivals`` (per-problem Monte-Carlo draws — the round's
+    request stream, DESIGN.md §10) both sides of the comparison are
+    queue-aware traffic keys: a surge that strands the incumbent over
+    the miss budget triggers a replan exactly like an env drift would,
+    and ``feasible``/``cost`` then report the traffic key's verdict
+    (seed-mean load-adjusted cost).
+
     Returns the surviving per-problem plans and the round's log.
     """
     n = len(probs)
     t0 = time.perf_counter()
-    inc_key = incumbent_keys(probs, incumbent, cfg.pso)
+    inc_key = incumbent_keys(probs, incumbent, cfg.pso,
+                             arrivals=arrivals)
     # an incumbent stranded infeasible by the drift gets the cold tier
     # anchors back in its swarm tail (init_swarm rescue mode): recovery
     # then matches a cold solve's escape hatches, while healthy
@@ -309,7 +367,8 @@ def replan_round(probs: Sequence[SimProblem],
                                    incumbent=incumbent,
                                    migration_weight=cfg.migration_weight,
                                    warm_rescue=rescue,
-                                   return_state=True)
+                                   return_state=True,
+                                   arrivals=arrivals)
     wall = time.perf_counter() - t0
 
     plans: List[np.ndarray] = []
@@ -330,9 +389,17 @@ def replan_round(probs: Sequence[SimProblem],
         if c.best_fitness < inc_key[i]:            # strict improvement
             replanned[i] = True
             plans.append(np.asarray(c.best_x, np.int32))
-            cost[i] = c.best_cost
             mig[i] = migration_cost_np(pr, inc, plans[-1])
-            feas[i] = c.feasible
+            if arrivals is not None:
+                # traffic keys: feasibility and $ come from the key
+                # (strip the migration term back off for the raw cost)
+                feas[i] = c.best_fitness < INFEASIBLE_OFFSET
+                cost[i] = (c.best_fitness
+                           - cfg.migration_weight * mig[i]
+                           if feas[i] else float("inf"))
+            else:
+                cost[i] = c.best_cost
+                feas[i] = c.feasible
             moved[i] = int(np.sum(plans[-1] != inc))
         else:
             plans.append(inc)
@@ -347,6 +414,20 @@ def replan_round(probs: Sequence[SimProblem],
     return plans, log
 
 
+def _round_arrivals(cfg: ReplanConfig, dags: Sequence[LayerDAG],
+                    event: DriftEvent, seed: int
+                    ) -> Optional[List[np.ndarray]]:
+    """Per-problem solver arrival draws for one drift epoch: the base
+    ``TrafficConfig`` rate scaled by the event's ``load_scale``. Shapes
+    are fixed by the config, so every round's arrays feed the SAME
+    compiled runner (DESIGN.md §10)."""
+    if cfg.traffic is None:
+        return None
+    return [cfg.traffic.solver_arrivals(d.num_apps, seed=seed + 31 * i,
+                                        rate_scale=event.load_scale)
+            for i, d in enumerate(dags)]
+
+
 def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
                  cfg: ReplanConfig = ReplanConfig(),
                  seed: int = 0,
@@ -357,12 +438,17 @@ def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
     Round 0 solves cold on ``trace.env_at(0)`` (unless ``initial`` hands
     in admission-time plans, e.g. from ``plan_offload_batch``); every
     later round is a warm ``replan_round`` against that round's drifted
-    environment. All rounds share ONE compiled fleet runner — drift only
-    changes array values (DESIGN.md §9).
+    environment. With ``cfg.traffic`` set, every round also carries a
+    request stream whose rate is scaled by the round's ``load_scale`` —
+    the ``load-surge`` family drifts ONLY that (DESIGN.md §10). All
+    rounds share ONE compiled fleet runner — drift, environmental or
+    workload, only changes array values (DESIGN.md §9).
     """
     if initial is None:
         probs0 = [SimProblem.build(d, trace.env_at(0)) for d in dags]
-        cold = run_pso_ga_batch(probs0, cfg.pso, seed=seed)
+        cold = run_pso_ga_batch(
+            probs0, cfg.pso, seed=seed,
+            arrivals=_round_arrivals(cfg, dags, trace.events[0], seed))
     else:
         if len(initial) != len(dags):
             raise ValueError(f"{len(initial)} initial results for "
@@ -372,8 +458,10 @@ def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
     rounds: List[RoundLog] = []
     for k in range(1, trace.num_rounds):
         probs_k = [SimProblem.build(d, trace.env_at(k)) for d in dags]
-        plans, log = replan_round(probs_k, plans, cfg,
-                                  seed=seed + k, round_no=k,
-                                  label=trace.events[k].label)
+        plans, log = replan_round(
+            probs_k, plans, cfg, seed=seed + k, round_no=k,
+            label=trace.events[k].label,
+            arrivals=_round_arrivals(cfg, dags, trace.events[k],
+                                     seed + 1000 * k))
         rounds.append(log)
     return OnlineReport(cold=cold, rounds=rounds, plans=plans)

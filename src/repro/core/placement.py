@@ -172,6 +172,12 @@ class OffloadPlan:
     stages: List[Stage]
     deadline: float
     heft: float
+    #: the fitness backend the solver ACTUALLY ran ("scan"/"pallas" —
+    #: "auto" is resolved before solving, so reports never lie about it)
+    backend: str = "scan"
+    #: queue-aware evaluation of the plan (``traffic_stats`` dict) when
+    #: planning ran under a request stream (DESIGN.md §10)
+    traffic: Optional[dict] = None
 
     @property
     def cost(self) -> float:
@@ -180,7 +186,16 @@ class OffloadPlan:
     def summary(self) -> str:
         tiers = {0: "cloud", 1: "edge", 2: "device"}
         lines = [f"cost ${self.cost:.4f}  deadline {self.deadline:.3f}s "
-                 f"(HEFT {self.heft:.3f}s)  feasible={self.result.feasible}"]
+                 f"(HEFT {self.heft:.3f}s)  feasible={self.result.feasible}"
+                 f"  backend={self.backend}"]
+        if self.traffic is not None:
+            lines.append(
+                f"  traffic: miss p50/p95/p99 "
+                f"{self.traffic['miss_p50']:.3f}/"
+                f"{self.traffic['miss_p95']:.3f}/"
+                f"{self.traffic['miss_p99']:.3f}  "
+                f"load cost ${self.traffic['cost_mean']:.4f} "
+                f"({self.traffic['requests']} reqs)")
         for st in self.stages:
             t = tiers[int(self.env.tier[st.server])]
             lines.append(
@@ -230,7 +245,8 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
                        seed: int = 0,
                        fitness_backend: Optional[str] = None,
                        warm: Optional[Sequence[np.ndarray]] = None,
-                       migration_weight: float = 1.0
+                       migration_weight: float = 1.0,
+                       traffic: Optional["TrafficConfig"] = None
                        ) -> List[OffloadPlan]:
     """Plan many serving requests with ONE batched PSO-GA fleet.
 
@@ -249,11 +265,32 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
     layer, so the new plans prefer cheap deltas against the ones already
     deployed. Deadlines are still re-derived from HEFT on the CURRENT
     ``env``, so pass the drifted environment when re-planning.
+
+    ``traffic`` (a ``TrafficConfig``, DESIGN.md §10): plan under a
+    request stream instead of a single isolated execution — the solver
+    optimizes expected load-adjusted cost under the config's p95
+    deadline-miss budget, and every returned plan carries its held-out
+    queue-aware evaluation in ``OffloadPlan.traffic``
+    (``traffic_stats`` dict). The resolved fitness backend is stamped
+    into ``OffloadPlan.backend`` either way, so ``"auto"`` is never
+    reported back as "auto".
     """
     from .batch import run_pso_ga_batch      # local: avoid import cycle
+    from .fitness import resolve_fitness_backend
+    from .simulator import SimProblem
+    from .traffic import traffic_replay, traffic_stats
 
     if fitness_backend is not None:
         pso = dataclasses.replace(pso, fitness_backend=fitness_backend)
+    # resolve "auto" ONCE, before solving: the solver then runs exactly
+    # the backend the returned plans report (observability, ISSUE-5).
+    backend = resolve_fitness_backend(pso.fitness_backend)
+    if traffic is not None:
+        # the queue-aware replay has no Pallas twin (DESIGN.md §10):
+        # traffic solves always run the scan engine, so report THAT.
+        backend = "scan"
+        pso = dataclasses.replace(pso, miss_budget=traffic.miss_budget)
+    pso = dataclasses.replace(pso, fitness_backend=backend)
     env = env or tpu_fleet_environment()
     if pin_server is None:
         pin_server = int(env.servers_of_tier(DEVICE)[0])
@@ -265,10 +302,25 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
         dags.append(dag.with_deadline(np.asarray([deadline])))
         hefts.append(float(heft))
         deadlines.append(float(deadline))
+    arrivals = None
+    if traffic is not None:
+        arrivals = [traffic.solver_arrivals(d.num_apps, seed=seed + 31 * i)
+                    for i, d in enumerate(dags)]
     results = run_pso_ga_batch([(d, env) for d in dags], cfg=pso, seed=seed,
                                incumbent=warm,
-                               migration_weight=migration_weight)
+                               migration_weight=migration_weight,
+                               arrivals=arrivals)
+    reports: List[Optional[dict]] = [None] * len(dags)
+    if traffic is not None:
+        for i, (d, r) in enumerate(zip(dags, results)):
+            res = traffic_replay(
+                SimProblem.build(d, env), r.best_x,
+                traffic.eval_arrivals(d.num_apps, seed=seed + 31 * i),
+                faithful=pso.faithful_sim)
+            reports[i] = traffic_stats(res)
     return [OffloadPlan(dag=d, env=env, result=r,
                         stages=contiguous_stages(d, r.best_x),
-                        deadline=dl, heft=h)
-            for d, r, dl, h in zip(dags, results, deadlines, hefts)]
+                        deadline=dl, heft=h, backend=backend,
+                        traffic=rep)
+            for d, r, dl, h, rep in zip(dags, results, deadlines, hefts,
+                                        reports)]

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +70,10 @@ class PSOGAConfig:
     warm_fraction: float = 0.5      # swarm share seeded in the incumbent's
     #   mutated neighborhood (per-gene redraw with prob warm_mutation)
     warm_mutation: float = 0.1      # per-gene neighborhood redraw prob
+    # -- contention-aware fitness (DESIGN.md §10); only consulted when a
+    #    solve is handed Monte-Carlo ``arrivals``: the p95 deadline-miss
+    #    budget the plan must satisfy under the request stream.
+    miss_budget: float = 0.05
 
 
 class PSOGAResult(NamedTuple):
@@ -191,7 +195,8 @@ def init_swarm(key: jax.Array, prob: SimProblem, cfg: PSOGAConfig,
 def swarm_step(pp: PaddedProblem, state: _SwarmState,
                cfg: PSOGAConfig,
                incumbent: Optional[jnp.ndarray] = None,
-               mig_weight: Optional[jnp.ndarray] = None) -> _SwarmState:
+               mig_weight: Optional[jnp.ndarray] = None,
+               arrivals: Optional[jnp.ndarray] = None) -> _SwarmState:
     """One PSO-GA iteration on the padded representation (Eq. 17–23).
 
     Pure in ``(pp, state)`` — ``repro.core.batch`` vmaps it over a fleet of
@@ -203,14 +208,18 @@ def swarm_step(pp: PaddedProblem, state: _SwarmState,
 
     ``incumbent`` / ``mig_weight`` (both traceable arrays) switch the
     fitness to the migration-aware warm key (DESIGN.md §9); a zero
-    ``mig_weight`` reproduces the cold key bit-for-bit.
+    ``mig_weight`` reproduces the cold key bit-for-bit. ``arrivals``
+    (``(M, max_apps, R)``, traceable) switches it to the queue-aware
+    traffic key under ``cfg.miss_budget`` (DESIGN.md §10).
     """
     max_p = pp.pinned.shape[-1]
     p = pp.num_layers                 # true sizes; 0-d, traced under vmap
     s = pp.num_servers
     P = cfg.pop_size
     fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend,
-                             incumbent=incumbent, mig_weight=mig_weight)
+                             incumbent=incumbent, mig_weight=mig_weight,
+                             arrivals=arrivals,
+                             miss_budget=cfg.miss_budget)
 
     key, kmu, kmu_pos, kmu_val, kc1, kx1, kc2, kx2 = jax.random.split(
         state.key, 8)
@@ -268,20 +277,33 @@ def swarm_step(pp: PaddedProblem, state: _SwarmState,
                        it=state.it + 1, stall=stall)
 
 
-def _make_step(prob: SimProblem, cfg: PSOGAConfig):
+def _make_step(prob: SimProblem, cfg: PSOGAConfig,
+               arrivals: Optional[np.ndarray] = None):
     """Unbatched (zero-padding) step + swarm-fitness for one problem."""
     pp = pad_problem(prob)
-    fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend)
-    return partial(swarm_step, pp, cfg=cfg), fit
+    arr = None if arrivals is None else jnp.asarray(arrivals)
+    fit = make_swarm_fitness(pp, cfg.faithful_sim, cfg.fitness_backend,
+                             arrivals=arr, miss_budget=cfg.miss_budget)
+    return partial(swarm_step, pp, cfg=cfg, arrivals=arr), fit
 
 
 def run_pso_ga(dag: LayerDAG, env: Environment,
                cfg: PSOGAConfig = PSOGAConfig(),
                seed: int = 0,
-               record_history: bool = False) -> PSOGAResult:
-    """Run PSO-GA to convergence. Returns the best assignment found."""
+               record_history: bool = False,
+               arrivals: Optional[np.ndarray] = None) -> PSOGAResult:
+    """Run PSO-GA to convergence. Returns the best assignment found.
+
+    ``arrivals`` (``(M, n_apps, R)`` Monte-Carlo request timestamps,
+    DESIGN.md §10) switches the fitness to the queue-aware traffic key:
+    ``best_fitness`` is then the traffic key (seed-mean load-adjusted
+    cost when the p95 miss budget is met); ``best_cost`` / ``feasible``
+    still report the zero-load replay of the winning plan so results
+    stay comparable across modes — use ``traffic.traffic_replay`` for
+    the plan's load metrics.
+    """
     prob = SimProblem.build(dag, env)
-    step, fit = _make_step(prob, cfg)
+    step, fit = _make_step(prob, cfg, arrivals=arrivals)
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
     X0 = init_swarm(k_init, prob, cfg)

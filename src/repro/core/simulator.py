@@ -427,30 +427,29 @@ def simulate_padded(pp: PaddedProblem, x: jnp.ndarray,
                      makespan=jnp.max(end, initial=0.0))
 
 
-def simulate_swarm(pp: PaddedProblem, X: jnp.ndarray,
-                   faithful: bool = True
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Algorithm 2 for a whole swarm at once: ``X (P, max_p)`` int32 →
-    per-particle ``(total_cost, feasible, Σ T_i^comp)``.
+class _SwarmPhase1(NamedTuple):
+    """Carry-independent per-layer quantities, swarm-shaped — phase 1
+    of DESIGN.md §8 with the particle axis explicit. Shared between
+    ``simulate_swarm`` and the traffic engine's queue-aware replay
+    (``repro.core.traffic``, DESIGN.md §10): the per-edge transmission
+    cost ``tc`` stays un-reduced so the traffic pass can charge it once
+    per valid request copy (the single-shot path just sums it)."""
+    valid: jnp.ndarray        # (max_p,) shared — real (non-padded) step
+    jsafe: jnp.ndarray        # (max_p,) shared
+    srv: jnp.ndarray          # (P, max_p)
+    exe: jnp.ndarray          # (P, max_p)
+    max_trans: jnp.ndarray    # (P, max_p)
+    out_t: jnp.ndarray        # (P, max_p)
+    psafe: jnp.ndarray        # (max_p, max_in) shared
+    pmask: jnp.ndarray        # (max_p, max_in) shared
+    tt: jnp.ndarray           # (P, max_p, max_in) per-edge transfer s
+    tc: jnp.ndarray           # (P, max_p, max_in) per-edge $ (masked 0)
+    link_bad: jnp.ndarray     # (P,)
 
-    This is the ``"scan"`` fitness backend's hot path (DESIGN.md §8) and
-    the jnp twin of the Pallas replay kernel: where
-    ``vmap(simulate_padded)`` would batch every per-particle dynamic
-    gather and recompute the x-independent DAG structure P times, here
-    the particle axis is explicit — step indices (layer id, parent ids)
-    are *shared* scalars, so per-step reads are column slices, the only
-    per-particle indexing is the ``(P, S)`` server one-hot select, and
-    phase 1 runs once for the whole swarm. ``t_on`` is recovered
-    post-scan by a masked min over steps (order-independent, bit-exact).
-    Returns the same summary triple as ``kernels.schedule_sim`` so
-    ``fitness.make_swarm_fitness`` treats both backends uniformly.
-    """
-    X = jnp.asarray(X).astype(jnp.int32)
-    P, max_p = X.shape
-    max_S = pp.power.shape[0]
-    max_apps = pp.deadline.shape[0]
 
-    # ---- phase 1, swarm-wide: everything carry-independent ----
+def _swarm_phase1(pp: PaddedProblem, X: jnp.ndarray) -> _SwarmPhase1:
+    """Phase 1, swarm-wide: everything carry-independent, computed once
+    for the whole ``(P, max_p)`` swarm with shared step indices."""
     order = pp.order
     valid = order >= 0                                 # (max_p,) shared
     jsafe = jnp.where(valid, order, 0)
@@ -465,8 +464,7 @@ def simulate_swarm(pp: PaddedProblem, X: jnp.ndarray,
     tt = mb * pp.inv_bw[psrv, srv_b]                   # (P, max_p, max_in)
     pm = pmask[None, :, :]
     max_trans = jnp.max(jnp.where(pm, tt, 0.0), axis=2, initial=0.0)
-    trans_cost = jnp.sum(jnp.where(pm, pp.tran_cost[psrv, srv_b] * mb, 0.0),
-                         axis=(1, 2))
+    tc = jnp.where(pm, pp.tran_cost[psrv, srv_b] * mb, 0.0)
     link_bad = jnp.any(pm & ~pp.link_ok[psrv, srv_b] & (psrv != srv_b),
                        axis=(1, 2))
     kids = pp.child_idx[jsafe]
@@ -478,11 +476,44 @@ def simulate_swarm(pp: PaddedProblem, X: jnp.ndarray,
                               0.0), axis=2)
     link_bad = link_bad | jnp.any(
         kmask & ~pp.link_ok[srv_b, ksrv] & (ksrv != srv_b), axis=(1, 2))
+    return _SwarmPhase1(valid=valid, jsafe=jsafe, srv=srv, exe=exe,
+                        max_trans=max_trans, out_t=out_t, psafe=psafe,
+                        pmask=pmask, tt=tt, tc=tc, link_bad=link_bad)
+
+
+def simulate_swarm(pp: PaddedProblem, X: jnp.ndarray,
+                   faithful: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Algorithm 2 for a whole swarm at once: ``X (P, max_p)`` int32 →
+    per-particle ``(total_cost, feasible, Σ T_i^comp)``.
+
+    This is the ``"scan"`` fitness backend's hot path (DESIGN.md §8) and
+    the jnp twin of the Pallas replay kernel: where
+    ``vmap(simulate_padded)`` would batch every per-particle dynamic
+    gather and recompute the x-independent DAG structure P times, here
+    the particle axis is explicit — step indices (layer id, parent ids)
+    are *shared* scalars, so per-step reads are column slices, the only
+    per-particle indexing is the ``(P, S)`` server one-hot select, and
+    phase 1 (``_swarm_phase1``, shared with the traffic engine) runs
+    once for the whole swarm. ``t_on`` is recovered post-scan by a
+    masked min over steps (order-independent, bit-exact). Returns the
+    same summary triple as ``kernels.schedule_sim`` so
+    ``fitness.make_swarm_fitness`` treats both backends uniformly.
+    """
+    X = jnp.asarray(X).astype(jnp.int32)
+    P, max_p = X.shape
+    max_S = pp.power.shape[0]
+    max_apps = pp.deadline.shape[0]
+
+    ph = _swarm_phase1(pp, X)
+    valid, jsafe, srv = ph.valid, ph.jsafe, ph.srv
+    trans_cost = jnp.sum(ph.tc, axis=(1, 2))
+    link_bad = ph.link_bad
 
     # ---- phase 2: scan over steps, particle axis inside each op ----
     iota_S = jnp.arange(max_S)
-    xs = (valid, jsafe, srv.T, exe.T, max_trans.T, out_t.T,
-          psafe, pmask, jnp.swapaxes(tt, 0, 1))
+    xs = (valid, jsafe, srv.T, ph.exe.T, ph.max_trans.T, ph.out_t.T,
+          ph.psafe, ph.pmask, jnp.swapaxes(ph.tt, 0, 1))
 
     def step(carry, inp):
         valid_t, j_t, srv_t, exe_t, mt_t, ot_t, psafe_t, pmask_t, tt_t = inp

@@ -1,0 +1,502 @@
+"""Request-stream workload engine: score offloading plans under
+concurrent load (DESIGN.md §10).
+
+The paper's cost model (Eq. 4-6) prices ONE isolated execution of a
+DNN's layers — a plan that looks cheap at zero load can blow its
+deadline once requests queue on a shared edge server (JointDNN and the
+Xu et al. survey in PAPERS.md both flag workload intensity as the gap
+between single-shot partitioning and deployable offloading). This
+module adds the missing workload layer in three pieces:
+
+  * **Arrival traces** — ``ArrivalTrace`` + ``sample_arrivals``:
+    per-app request timestamps over a horizon for four scenario
+    families (``poisson``, ``diurnal``, ``bursty`` MMPP,
+    ``flash-crowd``). Shapes are FIXED at ``(n_seeds, n_apps,
+    max_requests)`` with +inf padding for never-arriving slots, so the
+    arrays feed straight into jitted programs as traced values —
+    drifting the load never retraces (same discipline as the online
+    engine's EnvTrace, DESIGN.md §9).
+  * **Queue-aware replay** — ``simulate_traffic_swarm``: R request
+    copies of the schedule replayed against shared per-server FCFS
+    queues. The merged event order (requests in arrival order, layers
+    in topo order within a request) is computed as one ``lexsort``;
+    the replay itself is the same minimal-carry scan as
+    ``simulate_padded`` (lease/end carry, post-scan ``t_on``,
+    DESIGN.md §8) with two deltas: a layer additionally gates on its
+    request's arrival time, and the ``end`` buffer carries one slot
+    per (request, layer). A zero-contention trace (1 request/app at
+    t=0) reproduces the single-shot simulator bit-for-bit.
+  * **Contention metrics** — per-request completion latencies,
+    deadline-miss rate, and the load-adjusted Eq. 8 cost of the whole
+    horizon (rental windows now span queued work). ``traffic_replay``
+    vmaps the engine over Monte-Carlo arrival seeds for tail
+    estimates (p50/p95/p99 via ``traffic_stats``).
+
+Queueing discipline (documented choice): each server serves work in
+request-arrival order — all layers of an earlier-arriving request
+precede every layer of a later one on the merged timeline, with
+head-of-line blocking (a server idles while its next-in-order layer
+waits on a transfer, it does not reorder). This keeps the event order
+static given the arrivals, which is what makes the whole replay one
+``lax.scan`` with shapes independent of the arrival values; tests pin
+it against an independent discrete-event reference
+(``tests/test_traffic.py``).
+
+``fitness.make_swarm_fitness(arrivals=...)`` turns the replay into the
+contention-aware fitness term (expected cost subject to a p95
+deadline-miss budget) that PSO-GA, the batched fleet runner, and the
+GA baseline optimize — see DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, List, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .simulator import (PaddedProblem, SimProblem, _swarm_phase1,
+                        pad_problem)
+
+__all__ = ["TRAFFIC_KINDS", "ArrivalTrace", "TrafficConfig",
+           "sample_arrivals", "TrafficSim", "TrafficResult",
+           "simulate_traffic_swarm", "traffic_replay", "traffic_stats",
+           "zero_contention_arrivals"]
+
+TRAFFIC_KINDS = ("poisson", "diurnal", "bursty", "flash-crowd")
+
+
+# ---------------------------------------------------------------------------
+# arrival traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    """Per-app request timestamps over ``[0, horizon)``.
+
+    ``t`` is ``(n_seeds, n_apps, max_requests)`` float64, ascending per
+    app, padded with +inf — a slot of +inf means "no such request", and
+    the replay engine treats it as a masked no-op, so every seed and
+    every load level shares ONE array shape (jit-stable by
+    construction). Requests beyond ``max_requests`` in a draw are
+    dropped (the cap is part of the workload model, like a front-door
+    admission limit).
+    """
+    kind: str
+    rate: float                   # mean requests/s per app
+    horizon: float                # seconds
+    t: np.ndarray                 # (n_seeds, n_apps, max_requests)
+
+    @property
+    def n_seeds(self) -> int:
+        return int(self.t.shape[0])
+
+    @property
+    def n_apps(self) -> int:
+        return int(self.t.shape[1])
+
+    @property
+    def max_requests(self) -> int:
+        return int(self.t.shape[2])
+
+    def counts(self) -> np.ndarray:
+        """(n_seeds, n_apps) number of real requests per app."""
+        return np.isfinite(self.t).sum(axis=2)
+
+
+def _draw_poisson(rng: np.random.Generator, rate: float,
+                  horizon: float) -> List[float]:
+    out: List[float] = []
+    if rate <= 0.0:
+        return out
+    t = float(rng.exponential(1.0 / rate))
+    while t < horizon:
+        out.append(t)
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
+def _draw_thinned(rng: np.random.Generator, lam: Callable[[float], float],
+                  lam_max: float, horizon: float) -> List[float]:
+    """Inhomogeneous Poisson via Lewis-Shedler thinning."""
+    out: List[float] = []
+    if lam_max <= 0.0:
+        return out
+    t = float(rng.exponential(1.0 / lam_max))
+    while t < horizon:
+        if rng.uniform() * lam_max <= lam(t):
+            out.append(t)
+        t += float(rng.exponential(1.0 / lam_max))
+    return out
+
+
+def _mmpp_intervals(rng: np.random.Generator, horizon: float
+                    ) -> List[tuple]:
+    """Two-state Markov-modulated intervals (start, end, high?) shared
+    by every app of the seed — bursts are correlated across apps, which
+    is exactly what makes them hard on a shared server."""
+    out = []
+    t, high = 0.0, False
+    while t < horizon:
+        dwell = float(rng.exponential(horizon / (8.0 if high else 4.0)))
+        out.append((t, min(t + dwell, horizon), high))
+        t += dwell
+        high = not high
+    return out
+
+
+def sample_arrivals(kind: str, n_apps: int, rate: float = 0.5,
+                    horizon: float = 30.0, max_requests: int = 8,
+                    n_seeds: int = 1, seed: int = 0) -> ArrivalTrace:
+    """Generate a fixed-shape arrival trace for one scenario family.
+
+    ``poisson``     — homogeneous rate ``rate``, independent per app.
+    ``diurnal``     — sinusoidal intensity ``rate·(1 + 0.9·sin)`` with
+                      the peak mid-horizon (a compressed day).
+    ``bursty``      — 2-state MMPP: λ_low = 0.3·rate, λ_high = 2.4·rate,
+                      dwell means horizon/4 and horizon/8; the state
+                      path is SHARED across apps (correlated bursts).
+    ``flash-crowd`` — 0.5·rate baseline plus a ×4·rate crowd window of
+                      0.15·horizon at a random onset, shared across
+                      apps (everyone arrives at once).
+
+    Mean intensity is ≈ ``rate`` requests/s/app for every family, so an
+    intensity sweep compares like with like. Seeded and deterministic:
+    seed index ``s`` draws from ``default_rng([seed, s])``.
+    """
+    if kind not in TRAFFIC_KINDS:
+        raise ValueError(f"unknown traffic kind {kind!r} "
+                         f"(expected one of {TRAFFIC_KINDS})")
+    t = np.full((n_seeds, n_apps, max_requests), np.inf)
+    for s in range(n_seeds):
+        rng = np.random.default_rng([seed, s])
+        if kind == "bursty":
+            ivals = _mmpp_intervals(rng, horizon)
+
+            def lam(x: float) -> float:
+                for lo, hi, high in ivals:
+                    if lo <= x < hi:
+                        return (2.4 if high else 0.3) * rate
+                return 0.3 * rate
+            lam_max = 2.4 * rate
+        elif kind == "flash-crowd":
+            t0 = float(rng.uniform(0.2, 0.6)) * horizon
+            w = 0.15 * horizon
+
+            def lam(x: float) -> float:
+                return 0.5 * rate + (4.0 * rate if t0 <= x < t0 + w
+                                     else 0.0)
+            lam_max = 4.5 * rate
+        elif kind == "diurnal":
+            def lam(x: float) -> float:
+                return rate * (1.0 + 0.9 * np.sin(
+                    2.0 * np.pi * x / horizon - np.pi / 2.0))
+            lam_max = 1.9 * rate
+        else:
+            lam, lam_max = None, rate
+        for a in range(n_apps):
+            if kind == "poisson":
+                times = _draw_poisson(rng, rate, horizon)
+            else:
+                times = _draw_thinned(rng, lam, lam_max, horizon)
+            times = times[:max_requests]
+            t[s, a, :len(times)] = times
+    return ArrivalTrace(kind=kind, rate=rate, horizon=horizon, t=t)
+
+
+def zero_contention_arrivals(n_apps: int, n_seeds: int = 1) -> np.ndarray:
+    """(n_seeds, n_apps, 1) — one request per app at t = 0: the replay
+    then reproduces the single-shot simulator bit-for-bit (tested)."""
+    return np.zeros((n_seeds, n_apps, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """One knob bundle for every traffic consumer (solver fitness, the
+    online re-planner, ``serve --plan --traffic`` and the benchmark).
+
+    ``mc_solver`` arrival seeds flow into the contention-aware fitness
+    (small: every PSO-GA iteration replays all of them); ``mc_eval``
+    seeds are the reporting/evaluation set (larger, drawn from a
+    disjoint seed stream so plans are never scored on the arrivals
+    they were optimized against). ``miss_budget`` is the p95
+    deadline-miss budget the solver must satisfy (DESIGN.md §10).
+    """
+    kind: str = "poisson"
+    rate: float = 0.5
+    horizon: float = 30.0
+    max_requests: int = 8
+    mc_solver: int = 3
+    mc_eval: int = 16
+    miss_budget: float = 0.05
+
+    def solver_arrivals(self, n_apps: int, seed: int = 0,
+                        rate_scale: float = 1.0) -> np.ndarray:
+        """(mc_solver, n_apps, max_requests) solver-side arrival draws."""
+        return sample_arrivals(
+            self.kind, n_apps, rate=self.rate * rate_scale,
+            horizon=self.horizon, max_requests=self.max_requests,
+            n_seeds=self.mc_solver, seed=seed).t
+
+    def eval_arrivals(self, n_apps: int, seed: int = 0,
+                      rate_scale: float = 1.0) -> np.ndarray:
+        """(mc_eval, n_apps, max_requests) held-out evaluation draws."""
+        return sample_arrivals(
+            self.kind, n_apps, rate=self.rate * rate_scale,
+            horizon=self.horizon, max_requests=self.max_requests,
+            n_seeds=self.mc_eval, seed=seed + 104729).t
+
+
+# ---------------------------------------------------------------------------
+# queue-aware replay: merged-order minimal-carry scan (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+class TrafficSim(NamedTuple):
+    """One arrival draw replayed for a whole swarm. Leading axis P."""
+    end: jnp.ndarray          # (P, R, max_p) per-(request, layer) end time
+    latency: jnp.ndarray      # (P, max_apps, R) completion − arrival
+    miss: jnp.ndarray         # (P, max_apps, R) bool deadline miss
+    req_valid: jnp.ndarray    # (max_apps, R) bool — real request slot
+    miss_rate: jnp.ndarray    # (P,) missed / valid requests
+    comp_cost: jnp.ndarray    # (P,) $ rental over the whole horizon
+    trans_cost: jnp.ndarray   # (P,) $ transmission, all request copies
+    total_cost: jnp.ndarray   # (P,) load-adjusted Eq. 8
+    lat_sum: jnp.ndarray      # (P,) Σ valid latencies (Eq. 16 analogue)
+    static_ok: jnp.ndarray    # (P,) bool — pins honored, links legal
+
+
+def _merged_order(pp: PaddedProblem, arr: jnp.ndarray):
+    """Static merged event order over R request copies of the schedule.
+
+    Sort key (stable): request arrival time, then request slot, then
+    topo position. All steps of an earlier-arriving request precede
+    every step of a later one (whole-request FCFS priority; same-app
+    arrival ties serve in slot order, cross-app ties interleave by
+    topo position), and a request's own steps stay in topo order — so
+    every step's parents precede it and the scan carry is causally
+    consistent for ANY arrival values. +inf (padded) request slots sort
+    last and are
+    masked invalid, as are padded-layer steps wherever the sort lands
+    them (interleaved masked no-ops are exact identities on every
+    reduction — adding 0.0 / min-ing +inf — so padding stays invisible,
+    the DESIGN.md §4 discipline).
+    """
+    max_p = pp.order.shape[0]
+    R = arr.shape[-1]
+    valid = pp.order >= 0
+    jsafe = jnp.where(valid, pp.order, 0)
+    app = pp.app_id[jsafe]                             # (max_p,)
+    rep_t = jnp.tile(jnp.arange(max_p), R)             # (T,)
+    rep_r = jnp.repeat(jnp.arange(R), max_p)           # (T,)
+    arr_flat = arr[app[rep_t], rep_r]
+    perm = jnp.lexsort((rep_t, rep_r, arr_flat))
+    t_m = rep_t[perm]
+    r_m = rep_r[perm]
+    arr_m = arr_flat[perm]
+    valid_m = valid[t_m] & jnp.isfinite(arr_m)
+    return t_m, r_m, arr_m, valid_m
+
+
+def simulate_traffic_swarm(pp: PaddedProblem, X: jnp.ndarray,
+                           arr: jnp.ndarray,
+                           faithful: bool = True) -> TrafficSim:
+    """Replay R request copies of every particle's schedule against
+    shared per-server FCFS queues — one arrival draw ``arr (max_apps,
+    R)``, the whole swarm ``X (P, max_p)`` at once.
+
+    Same two-phase structure as ``simulate_swarm`` (DESIGN.md §8):
+    phase 1 runs once per layer (request copies share the plan, so
+    per-layer exe/transfer quantities are computed once and gathered
+    per merged step); phase 2 is a minimal-carry ``lax.scan`` over the
+    ``R·max_p`` merged steps whose carry is ``(lease (P,S), end (P,
+    R·max_p))`` — ``(lease,)`` alone in faithful mode — with the
+    arrival time as an extra start gate:
+
+        faithful:  start = max(lease[s], a_r) + maxTrans
+                   lease[s] = max(lease[s], a_r) + exe + transfer_out
+        corrected: start = max(lease[s], a_r, max_p(end[r,p] + trans_p))
+                   lease[s] = start + exe + transfer_out
+
+    At R = 1 with arrival 0 both reduce bit-exactly to the single-shot
+    recurrences (``max(lease, 0) = lease``), which is the
+    zero-contention acceptance invariant. ``t_on`` is recovered
+    post-scan (order-independent min), rental cost covers the whole
+    horizon window per server, and transmission cost is charged once
+    per valid request copy. vmap over arrival seeds for Monte-Carlo
+    tails, and over a fleet axis in ``batch._fleet_runner``.
+    """
+    X = jnp.asarray(X).astype(jnp.int32)
+    arr = jnp.asarray(arr)
+    P, max_p = X.shape
+    max_S = pp.power.shape[0]
+    max_apps = pp.deadline.shape[0]
+    R = arr.shape[-1]
+
+    ph = _swarm_phase1(pp, X)
+    t_m, r_m, arr_m, valid_m = _merged_order(pp, arr)
+
+    j_m = ph.jsafe[t_m]                                # (T,) shared
+    slot_m = r_m * max_p + j_m                         # (T,) end-buffer slot
+    eidx_m = r_m[:, None] * max_p + ph.psafe[t_m]      # (T, max_in) shared
+    pmask_m = ph.pmask[t_m]                            # (T, max_in) shared
+    srv_m = jnp.take(ph.srv, t_m, axis=1)              # (P, T)
+    exe_m = jnp.take(ph.exe, t_m, axis=1)
+    mt_m = jnp.take(ph.max_trans, t_m, axis=1)
+    ot_m = jnp.take(ph.out_t, t_m, axis=1)
+    tt_m = jnp.take(ph.tt, t_m, axis=1)                # (P, T, max_in)
+
+    iota_S = jnp.arange(max_S)
+    xs = (valid_m, slot_m, arr_m, srv_m.T, exe_m.T, mt_m.T, ot_m.T,
+          eidx_m, pmask_m, jnp.swapaxes(tt_m, 0, 1))
+
+    def step(carry, inp):
+        (valid_t, slot_t, arr_t, srv_t, exe_t, mt_t, ot_t,
+         eidx_t, pmask_t, tt_t) = inp
+        if faithful:
+            lease, = carry
+        else:
+            lease, end = carry
+        srv_oh = (srv_t[:, None] == iota_S[None, :]) & valid_t   # (P, S)
+        lease_srv = jnp.take_along_axis(lease, srv_t[:, None], axis=1)[:, 0]
+        if faithful:
+            base = jnp.maximum(lease_srv, arr_t)
+            start = base + mt_t
+            new_lease = base + exe_t + ot_t
+        else:
+            ep = jnp.take(end, eidx_t, axis=1)         # (P, max_in)
+            gate = jnp.max(jnp.where(pmask_t[None, :], ep + tt_t, 0.0),
+                           axis=1, initial=0.0)
+            gate = jnp.maximum(gate, arr_t)
+            start = jnp.maximum(lease_srv, gate)
+            new_lease = start + exe_t + ot_t
+        t_end = start + exe_t
+        lease = jnp.where(srv_oh, new_lease[:, None], lease)
+        if faithful:
+            return (lease,), (start, t_end)
+        old = jax.lax.dynamic_slice(end, (0, slot_t), (P, 1))
+        end = jax.lax.dynamic_update_slice(
+            end, jnp.where(valid_t, t_end[:, None], old), (0, slot_t))
+        return (lease, end), (start, t_end)
+
+    init = (jnp.zeros((P, max_S)),) if faithful \
+        else (jnp.zeros((P, max_S)), jnp.zeros((P, R * max_p)))
+    carry, (start_seq, t_end_seq) = jax.lax.scan(step, init, xs)
+    lease = carry[0]
+    if faithful:
+        slot_idx = jnp.where(valid_m, slot_m, R * max_p)
+        end = jnp.zeros((P, R * max_p)).at[:, slot_idx].set(
+            t_end_seq.T, mode="drop")
+    else:
+        end = carry[1]
+
+    start_all = start_seq.T                            # (P, T)
+    rows = jnp.arange(P)[:, None]
+    srv_scatter = jnp.where(valid_m[None, :], srv_m, max_S)
+    t_on = jnp.full((P, max_S), jnp.inf).at[rows, srv_scatter].min(
+        jnp.where(valid_m[None, :], start_all, jnp.inf), mode="drop")
+    used = ~jnp.isinf(t_on)
+    t_on_safe = jnp.where(used, t_on, 0.0)
+    comp_cost = jnp.sum(jnp.where(used, pp.cost_per_sec[None, :]
+                                  * (lease - t_on_safe), 0.0), axis=1)
+    tc_m = jnp.take(ph.tc, t_m, axis=1)                # (P, T, max_in)
+    trans_cost = jnp.sum(jnp.where(valid_m[None, :, None], tc_m, 0.0),
+                         axis=(1, 2))
+
+    # per-request completion: max end over the app's layers per copy
+    end_rj = end.reshape(P, R, max_p)
+    app_oh = pp.app_id[None, :] == jnp.arange(max_apps)[:, None]
+    appc = jnp.max(jnp.where(app_oh[None, None, :, :],
+                             end_rj[:, :, None, :], -jnp.inf),
+                   axis=3)                             # (P, R, max_apps)
+    appc = jnp.swapaxes(appc, 1, 2)                    # (P, max_apps, R)
+    app_real = jnp.arange(max_apps) < pp.num_apps
+    req_valid = jnp.isfinite(arr) & app_real[:, None]  # (max_apps, R)
+    latency = jnp.where(req_valid[None], appc - arr[None], 0.0)
+    miss = req_valid[None] & (latency > pp.deadline[None, :, None])
+    n_req = jnp.maximum(jnp.sum(req_valid), 1)
+    miss_rate = jnp.sum(miss, axis=(1, 2)) / n_req
+    lat_sum = jnp.sum(latency, axis=(1, 2))
+    pin_ok = jnp.all((pp.pinned[None, :] < 0) | (X == pp.pinned[None, :]),
+                     axis=1)
+    return TrafficSim(end=end_rj, latency=latency, miss=miss,
+                      req_valid=req_valid, miss_rate=miss_rate,
+                      comp_cost=comp_cost, trans_cost=trans_cost,
+                      total_cost=comp_cost + trans_cost, lat_sum=lat_sum,
+                      static_ok=pin_ok & ~ph.link_bad)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo evaluation of ONE plan
+# ---------------------------------------------------------------------------
+
+
+class TrafficResult(NamedTuple):
+    """Monte-Carlo replay of one plan. Leading axis = arrival seed."""
+    latency: np.ndarray       # (M, max_apps, R)
+    miss: np.ndarray          # (M, max_apps, R) bool
+    req_valid: np.ndarray     # (M, max_apps, R) bool
+    miss_rate: np.ndarray     # (M,)
+    total_cost: np.ndarray    # (M,)
+    feasible: bool            # static: pins honored, links legal
+
+
+@partial(jax.jit, static_argnames=("faithful",))
+def _replay_mc(pp: PaddedProblem, X1: jnp.ndarray, arr_mc: jnp.ndarray,
+               faithful: bool) -> TrafficSim:
+    return jax.vmap(
+        lambda a: simulate_traffic_swarm(pp, X1, a, faithful))(arr_mc)
+
+
+def traffic_replay(prob: Union[SimProblem, PaddedProblem], x: np.ndarray,
+                   arrivals: np.ndarray,
+                   faithful: bool = True) -> TrafficResult:
+    """Replay one plan against Monte-Carlo arrival draws.
+
+    ``arrivals``: ``(M, n_apps, R)`` (or ``(n_apps, R)`` for one draw)
+    timestamps, +inf padded — e.g. ``ArrivalTrace.t`` or
+    ``TrafficConfig.eval_arrivals``. Returns per-seed/per-request
+    latencies, deadline misses, and load-adjusted costs; feed the
+    result to ``traffic_stats`` for p50/p95/p99 tails.
+    """
+    pp = prob if isinstance(prob, PaddedProblem) else pad_problem(prob)
+    max_p = int(pp.compute.shape[0])
+    max_apps = int(pp.deadline.shape[0])
+    x = np.asarray(x, np.int32)
+    X1 = np.zeros((1, max_p), np.int32)
+    X1[0, :x.shape[0]] = x
+    arr = np.asarray(arrivals, float)
+    if arr.ndim == 2:
+        arr = arr[None]
+    if arr.shape[1] < max_apps:                 # pad apps with +inf slots
+        pad = np.full((arr.shape[0], max_apps - arr.shape[1],
+                       arr.shape[2]), np.inf)
+        arr = np.concatenate([arr, pad], axis=1)
+    sims = _replay_mc(pp, jnp.asarray(X1), jnp.asarray(arr), faithful)
+    return TrafficResult(
+        latency=np.asarray(sims.latency)[:, 0],
+        miss=np.asarray(sims.miss)[:, 0],
+        req_valid=np.asarray(sims.req_valid),
+        miss_rate=np.asarray(sims.miss_rate)[:, 0],
+        total_cost=np.asarray(sims.total_cost)[:, 0],
+        feasible=bool(np.asarray(sims.static_ok)[0, 0]))
+
+
+def traffic_stats(res: TrafficResult) -> dict:
+    """Tail summary of a Monte-Carlo replay (numbers for reports)."""
+    mr = np.asarray(res.miss_rate, float)
+    out = {
+        "miss_mean": float(mr.mean()),
+        "miss_p50": float(np.percentile(mr, 50)),
+        "miss_p95": float(np.percentile(mr, 95)),
+        "miss_p99": float(np.percentile(mr, 99)),
+        "cost_mean": float(np.asarray(res.total_cost).mean()),
+        "requests": int(res.req_valid.sum()),
+        "feasible": bool(res.feasible),
+    }
+    lat = res.latency[res.req_valid]
+    out["latency_p95"] = float(np.percentile(lat, 95)) if lat.size else 0.0
+    return out

@@ -15,7 +15,7 @@ Every DNN's input layer is pinned to its originating end-device server.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -19,7 +19,7 @@ Two sources: ``synthetic`` (Zipf-ish token draws, always available) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

@@ -26,7 +26,6 @@ no MXU; the TARGET is TPU v5e — see DESIGN.md §3).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

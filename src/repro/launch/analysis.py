@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 __all__ = ["HW", "collective_bytes", "CollectiveStats", "roofline_terms",
            "parse_hlo_collectives"]

@@ -28,7 +28,7 @@ from ..configs import SHAPES, get
 from ..configs.base import ModelConfig, ShapeSpec
 from ..runtime import elastic_mesh
 from .mesh import data_axes_of
-from .steps import make_decode_objects, make_prefill_objects, named
+from .steps import make_decode_objects, make_prefill_objects
 
 __all__ = ["Server", "main"]
 
@@ -106,6 +106,8 @@ class Server:
 
 
 def main() -> None:
+    from ..core import TRAFFIC_KINDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -121,28 +123,51 @@ def main() -> None:
     ap.add_argument("--replan", default=None, metavar="SCENARIO",
                     help="after --plan, drive the placements through a "
                          "drift trace (wifi-fade | congestion | "
-                         "spot-price | node-loss) and re-plan warm at "
-                         "each event (DESIGN.md §9)")
+                         "spot-price | node-loss | load-surge) and "
+                         "re-plan warm at each event (DESIGN.md §9)")
     ap.add_argument("--replan-rounds", type=int, default=4,
                     help="drift events in the --replan trace")
+    ap.add_argument("--traffic", default=None, metavar="SCENARIO",
+                    choices=TRAFFIC_KINDS,
+                    help="plan under a request-stream workload of this "
+                         "arrival family instead of a single isolated "
+                         "execution (DESIGN.md §10); the report then "
+                         "shows each plan's held-out p95 deadline-miss "
+                         "rate and load-adjusted cost")
+    ap.add_argument("--traffic-rate", type=float, default=0.5,
+                    help="mean request arrivals/s per app for --traffic")
     args = ap.parse_args()
 
     cfg = get(args.arch)
     if args.replan and not args.plan:
         ap.error("--replan requires --plan")
+    if args.traffic and not args.plan:
+        ap.error("--traffic requires --plan")
+    if args.replan == "load-surge" and not args.traffic:
+        ap.error("--replan load-surge drifts the request stream, which "
+                 "only exists with --traffic SCENARIO (DESIGN.md §10)")
     if args.plan:
         # one batched PSO-GA fleet plans every serving shape at once
         # (DESIGN.md §4) instead of re-compiling the solver per shape.
-        from ..core import (PSOGAConfig, plan_offload_batch,
-                            tpu_fleet_environment)
+        from ..core import (PSOGAConfig, TrafficConfig,
+                            plan_offload_batch, tpu_fleet_environment)
         fleet_env = tpu_fleet_environment()
         shapes = [s for s in SHAPES if s.kind != "train"]
         pso_cfg = PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40)
+        traffic_cfg = None
+        if args.traffic:
+            # queue-aware planning: score every placement under the
+            # request stream it will actually serve (DESIGN.md §10)
+            traffic_cfg = TrafficConfig(kind=args.traffic,
+                                        rate=args.traffic_rate)
         plans = plan_offload_batch(
             [(cfg, s, 1.5) for s in shapes], env=fleet_env,
-            pso=pso_cfg, fitness_backend=args.fitness_backend)
+            pso=pso_cfg, fitness_backend=args.fitness_backend,
+            traffic=traffic_cfg)
         for shape, plan in zip(shapes, plans):
-            print(f"[serve] PSO-GA fleet placement for {shape.name}:")
+            tag = f" under {args.traffic} traffic" if args.traffic else ""
+            print(f"[serve] PSO-GA fleet placement for {shape.name}"
+                  f"{tag} (backend={plan.backend}):")
             print(plan.summary())
         if args.replan:
             # warm re-planning across a drifting fleet: each event
@@ -153,14 +178,22 @@ def main() -> None:
             from ..core import ReplanConfig, replan_fleet, sample_trace
             trace = sample_trace(args.replan, fleet_env,
                                  rounds=args.replan_rounds, seed=0)
-            # keep the cold solve's fitness backend: a different config
+            # keep the cold solve's EXACT config (the resolved backend
+            # and, under --traffic, its miss budget): a different config
             # would force a second fleet-runner compile mid-replan and
             # silently override the user's --fitness-backend choice
             replan_pso = _dc.replace(pso_cfg,
-                                     fitness_backend=args.fitness_backend)
+                                     fitness_backend=plans[0].backend)
+            if traffic_cfg is not None:
+                replan_pso = _dc.replace(
+                    replan_pso, miss_budget=traffic_cfg.miss_budget)
+            # with --traffic, replan rounds keep scoring under the same
+            # request stream (a load-surge trace then scales its rate,
+            # DESIGN.md §10) — without this, round 1 would silently
+            # replace the traffic-aware plans with zero-load plans.
             report = replan_fleet(
                 [p.dag for p in plans], trace,
-                ReplanConfig(pso=replan_pso),
+                ReplanConfig(pso=replan_pso, traffic=traffic_cfg),
                 initial=[p.result for p in plans])
             for log in report.rounds:
                 n_re = int(log.replanned.sum())

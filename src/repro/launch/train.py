@@ -19,13 +19,11 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs import get
 from ..configs.base import ModelConfig, ShapeSpec
 from ..data import DataConfig, make_stream
-from ..models import build_model
 from ..optim import AdamWConfig, OptState, adamw_init
 from ..optim.compression import (CompressionState, compress_error_feedback,
                                  init_compression)

@@ -19,7 +19,7 @@ Memory/computation design (TPU-first, validated on CPU):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

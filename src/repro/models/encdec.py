@@ -14,7 +14,7 @@ Whisper encoder emits 1500 frames per 30 s window).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

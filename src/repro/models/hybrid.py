@@ -11,7 +11,7 @@ n_layers counts the mamba blocks (81 = 13 groups of 6 + 3 tail).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,14 +17,14 @@ sliding-window); pure full-attention archs skip it.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeSpec
-from .encdec import CROSS_FRAMES, EncDecLM
+from .encdec import EncDecLM
 from .hybrid import MambaLM, Zamba2LM
 from .transformer import TransformerLM
 

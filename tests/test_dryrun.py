@@ -8,7 +8,7 @@ import sys
 
 import pytest
 
-from repro.launch.analysis import (HW, collective_bytes,
+from repro.launch.analysis import (collective_bytes,
                                    parse_hlo_collectives, roofline_terms)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

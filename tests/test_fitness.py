@@ -1,6 +1,5 @@
 """The 3-case fitness key (paper Eq. 14-16) as a single scalar order."""
 import jax.numpy as jnp
-import numpy as np
 from hypo_compat import given, st
 
 from repro.core import INFEASIBLE_OFFSET, fitness_key

@@ -17,11 +17,14 @@ import numpy as np
 import pytest
 
 from repro.core import (PSOGAConfig, heft_makespan, paper_environment,
-                        run_pso_ga, zoo)
+                        run_pso_ga, sample_arrivals, zoo)
 
 GOLDENS = json.loads(
     (Path(__file__).parent / "golden_costs.json").read_text())
 _CFG = GOLDENS["_config"]
+_TCFG = GOLDENS["_traffic_config"]
+TRAFFIC_NETS = ("alexnet", "googlenet")
+TRAFFIC_SCENARIOS = ("bursty", "flash-crowd")
 
 
 @pytest.fixture(scope="module")
@@ -60,12 +63,40 @@ def test_golden_cost(net, faithful, backend, golden_env, golden_dags):
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize("kind", TRAFFIC_SCENARIOS)
+@pytest.mark.parametrize("net", TRAFFIC_NETS)
+def test_golden_traffic_key(net, kind, golden_env, golden_dags):
+    """Queue-aware goldens (DESIGN.md §10): seeded traffic-fitness solves
+    pinned end-to-end, so contention-scoring drift is caught the same
+    way plan-fitness drift is (both the feasible mean-load-cost branch
+    and the miss-penalty infeasible branch are anchored)."""
+    want = GOLDENS[f"{net}|traffic={kind}"]
+    arr = sample_arrivals(kind, 1, seed=_TCFG["seed"],
+                          **_TCFG["arrivals"]).t
+    cfg = PSOGAConfig(pop_size=_TCFG["pop_size"],
+                      max_iters=_TCFG["max_iters"],
+                      stall_iters=_TCFG["stall_iters"],
+                      miss_budget=_TCFG["miss_budget"])
+    res = run_pso_ga(golden_dags[net], golden_env, cfg,
+                     seed=_TCFG["seed"], arrivals=arr)
+    assert res.feasible == want["feasible"]
+    np.testing.assert_allclose(res.best_fitness, want["best_fitness"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(res.best_cost, want["best_cost"],
+                               rtol=1e-5)
+
+
 def test_goldens_cover_full_matrix():
-    """The stored file must span nets × fidelity × backends — a silently
-    shrunken matrix would quietly stop guarding part of the surface."""
-    keys = [k for k in GOLDENS if k != "_config"]
-    assert len(keys) == len(zoo.NAMES) * 2 * 2
+    """The stored file must span nets × fidelity × backends plus the
+    traffic nets × scenarios — a silently shrunken matrix would quietly
+    stop guarding part of the surface."""
+    keys = [k for k in GOLDENS if not k.startswith("_")]
+    assert len(keys) == len(zoo.NAMES) * 2 * 2 \
+        + len(TRAFFIC_NETS) * len(TRAFFIC_SCENARIOS)
     for net in zoo.NAMES:
         for faithful in (False, True):
             for backend in ("scan", "pallas"):
                 assert f"{net}|faithful={faithful}|{backend}" in GOLDENS
+    for net in TRAFFIC_NETS:
+        for kind in TRAFFIC_SCENARIOS:
+            assert f"{net}|traffic={kind}" in GOLDENS

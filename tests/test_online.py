@@ -4,8 +4,6 @@ accept-if-better replan loop — and the two ISSUE-4 acceptance
 invariants: a zero-drift replan keeps the cold solve bit-for-bit, and
 every round after the first hits the compiled fleet runner (no retrace),
 asserted via the ``batch.runner_cache_stats`` counters."""
-import dataclasses
-
 import numpy as np
 import pytest
 
@@ -93,6 +91,80 @@ def test_sample_trace_families(kind):
 def test_sample_trace_rejects_unknown_kind():
     with pytest.raises(ValueError):
         sample_trace("meteor-strike", paper_environment(), rounds=2)
+
+
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_trace_shapes_never_change_across_rounds(kind):
+    """The compiled-runner reuse invariant's precondition (DESIGN.md §9):
+    every round's environment AND every event's arrays keep the round-0
+    shapes — drift changes values only."""
+    env = paper_environment()
+    trace = sample_trace(kind, env, rounds=6, seed=11)
+    e0 = trace.env_at(0)
+    for k in range(trace.num_rounds):
+        ev = trace.events[k]
+        assert ev.bw_scale.shape == (env.num_servers, env.num_servers)
+        assert ev.power_scale.shape == (env.num_servers,)
+        assert ev.price_scale.shape == (env.num_servers,)
+        assert ev.down.shape == (env.num_servers,)
+        e = trace.env_at(k)
+        for field in ("power", "cost_per_sec", "tier", "bandwidth",
+                      "tran_cost"):
+            assert getattr(e, field).shape == getattr(e0, field).shape
+
+
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_identity_events_keep_env_bit_equal(kind):
+    """Wherever an event reports is_identity(), env_at(k) must be the
+    base environment BIT-equal — a replan round then keeps incumbents
+    byte-for-byte (the zero-drift parity invariant's other half)."""
+    env = paper_environment()
+    trace = sample_trace(kind, env, rounds=5, seed=4)
+    for k in range(trace.num_rounds):
+        if not trace.events[k].is_identity():
+            continue
+        e = trace.env_at(k)
+        np.testing.assert_array_equal(e.bandwidth, env.bandwidth)
+        np.testing.assert_array_equal(e.power, env.power)
+        np.testing.assert_array_equal(e.cost_per_sec, env.cost_per_sec)
+        np.testing.assert_array_equal(e.tran_cost, env.tran_cost)
+    assert trace.events[0].is_identity()       # round 0 always identity
+
+
+def test_node_loss_never_strands_pinned_home_servers():
+    """Node churn may never kill a DEVICE-tier server: pinned input
+    layers live there, and severing the pinned server's own links would
+    make EVERY placement of that app permanently link-infeasible. Links
+    that don't touch the victim must stay bit-equal."""
+    env = paper_environment()
+    device = np.asarray(env.tier) == DEVICE
+    for seed in range(5):
+        trace = sample_trace("node-loss", env, rounds=5, seed=seed)
+        for k in range(1, trace.num_rounds):
+            ev = trace.events[k]
+            assert not ev.down[device].any()
+            e = trace.env_at(k)
+            alive = ~(ev.down[:, None] | ev.down[None, :])
+            np.testing.assert_array_equal(e.bandwidth[alive],
+                                          env.bandwidth[alive])
+
+
+def test_load_surge_drifts_workload_not_environment():
+    """load-surge epochs scale ONLY the arrival intensity: the
+    environment stays bit-equal while load_scale drifts >= 1."""
+    env = paper_environment()
+    trace = sample_trace("load-surge", env, rounds=5, seed=3)
+    saw_surge = False
+    for k in range(trace.num_rounds):
+        ev = trace.events[k]
+        e = trace.env_at(k)
+        np.testing.assert_array_equal(e.bandwidth, env.bandwidth)
+        np.testing.assert_array_equal(e.power, env.power)
+        np.testing.assert_array_equal(e.cost_per_sec, env.cost_per_sec)
+        assert ev.load_scale >= 1.0
+        saw_surge |= ev.load_scale > 1.0
+    assert saw_surge
+    assert trace.events[0].load_scale == 1.0
 
 
 def test_sample_trace_seeded_deterministic():
@@ -297,6 +369,29 @@ def test_node_loss_forces_migration_off_dead_server(fleet):
             assert victim not in report.plans[i]
             assert log.replanned[i]
         assert log.feasible[i]
+
+
+def test_load_surge_replan_reacts_to_workload_drift(fleet):
+    """A load-surge trace leaves the environment bit-still, yet the
+    traffic-aware replanner still re-plans (or provably keeps a plan
+    that already beats every candidate) — workload drift alone drives
+    the loop (DESIGN.md §10)."""
+    from repro.core import TrafficConfig
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=3, seed=0,
+                         severity=1.0)
+    cfg = ReplanConfig(
+        pso=FAST, migration_weight=0.1,
+        traffic=TrafficConfig(kind="bursty", rate=0.3, horizon=20.0,
+                              max_requests=4, mc_solver=2, mc_eval=4))
+    report = replan_fleet(dags, trace, cfg, seed=0)
+    assert len(report.rounds) == 2
+    for log in report.rounds:
+        # accepted candidates strictly beat the incumbent's traffic key
+        acc = np.nonzero(log.replanned)[0]
+        assert np.all(log.candidate_key[acc] < log.incumbent_key[acc])
+        # traffic-feasible plans report finite load-adjusted cost
+        assert np.all(np.isfinite(log.cost[log.feasible]))
 
 
 def test_incumbent_keys_match_replay(fleet):

@@ -4,7 +4,7 @@ import pytest
 
 from repro.configs import SHAPES, get, names
 from repro.core import (PSOGAConfig, arch_to_dag, block_flops,
-                        contiguous_stages, plan_offload, stage_cut_cost,
+                        plan_offload, stage_cut_cost,
                         tpu_fleet_environment, uniform_stages)
 from repro.core.dag import topological_order
 

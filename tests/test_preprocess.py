@@ -3,7 +3,7 @@ import numpy as np
 from hypo_compat import given, st
 
 from repro.core import merge_dags, preprocess, zoo
-from repro.core.dag import LayerDAG, topological_order
+from repro.core.dag import topological_order
 from tests.test_simulator import random_dag
 
 

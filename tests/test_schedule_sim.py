@@ -13,7 +13,7 @@ from test_simulator import random_dag, random_env
 from repro.core import (PSOGAConfig, SimProblem, pad_problem, run_pso_ga,
                         simulate_np, simulate_padded)
 from repro.core.simulator import simulate_swarm
-from repro.core.fitness import (INFEASIBLE_OFFSET, fitness_key,
+from repro.core.fitness import (INFEASIBLE_OFFSET,
                                 make_swarm_fitness, resolve_fitness_backend)
 from repro.kernels.ref import schedule_replay_ref
 from repro.kernels.schedule_sim import schedule_replay_folded

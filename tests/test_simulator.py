@@ -6,7 +6,7 @@ from hypo_compat import given, st
 
 from repro.core import (Environment, SimProblem, build_simulator,
                         sample_environment, simulate_np)
-from repro.core.dag import LayerDAG, topological_order
+from repro.core.dag import LayerDAG
 
 # ---------------------------------------------------------------------------
 # random problem generators

@@ -1,6 +1,5 @@
 """optim / data / checkpoint / runtime unit + property tests."""
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp

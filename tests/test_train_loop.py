@@ -1,7 +1,6 @@
 """End-to-end trainer: loss goes down, checkpoint-restart is bit-exact,
 grad compression trains, straggler counter wires through."""
 import numpy as np
-import pytest
 
 from repro.configs import get
 from repro.configs.base import ShapeSpec
