@@ -15,6 +15,13 @@ load-adjusted cost, and solver wall-clock. Acceptance bar (ISSUE-5):
 the traffic-aware plan's p95 miss rate must be STRICTLY below the
 zero-load plan's on the bursty and flash-crowd families. Every run
 writes machine-readable ``BENCH_traffic.json``.
+
+A backend microbench (ISSUE-6) also times the traffic-replay fitness
+itself — the default merged-order scan, its compacted-prefix variant
+(``compact=True``, the kernel's scan twin), and the fused Pallas
+event-walk kernel (``kernels.traffic_sim``; interpret mode lowers it
+to plain XLA on CPU, native Pallas on TPU) — in swarm fitness
+evaluations/s, stamped into the ``backends`` section of the JSON.
 """
 from __future__ import annotations
 
@@ -94,6 +101,87 @@ def run_cell(kind: str, rate: float, cfg: PSOGAConfig, ratio: float,
     return rows
 
 
+def bench_backends(ratio: float, seed: int, P: int = 64, reps: int = 20):
+    """Traffic-fitness replay throughput per backend, per zoo net.
+
+    One "iter" is a full swarm evaluation: P particles × the solver's
+    Monte-Carlo seeds, through the per-seed ``(total, miss, lat_sum)``
+    summary that dominates ``make_swarm_fitness``'s traffic key. The
+    headline ``speedup`` column is the fused Pallas event-walk kernel
+    over the default scan backend — the kernel never materializes the
+    scan's per-step ``(T, …)`` gathers or ``(P, T)`` one-hot selects,
+    which is what makes contention fitness track the zero-load path
+    even in interpret mode (lowered to XLA) on CPU; ``scan_compact``
+    (the kernel's scan twin, ``compact=True``) is reported for
+    completeness — it wins only when +inf padding dominates the merged
+    step sequence.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import sample_arrivals
+    from repro.core.simulator import pad_problem
+    from repro.core.traffic import simulate_traffic_swarm
+    from repro.kernels.traffic_sim import traffic_replay_folded
+
+    env = paper_environment()
+    rows = []
+    for net in NETS:
+        dag = zoo.build(net, pin_server=0)
+        h, _ = heft_makespan(dag, env)
+        dag = dag.with_deadline(np.array([ratio * h]))
+        prob = SimProblem.build(dag, env)
+        pp = pad_problem(prob)
+        arr = jnp.asarray(sample_arrivals(
+            "bursty", 1, rate=0.5, horizon=30.0, max_requests=8,
+            n_seeds=3, seed=seed).t)
+        rng = np.random.default_rng(seed)
+        X = jnp.asarray(rng.integers(
+            0, prob.num_servers, size=(P, prob.num_layers)), jnp.int32)
+
+        def scan_stats(X, compact):
+            def one(a):
+                s = simulate_traffic_swarm(pp, X, a, True, compact=compact)
+                return s.total_cost, s.miss_rate, s.lat_sum
+            return jax.vmap(one)(arr)
+
+        def kernel_stats(X):
+            def one(a):
+                t, m, l, _, _ = traffic_replay_folded(
+                    pp.order, pp.compute, pp.parent_idx, pp.parent_mb,
+                    pp.child_idx, pp.child_mb, pp.app_id, pp.deadline,
+                    pp.pinned, pp.power, pp.cost_per_sec, pp.inv_bw,
+                    pp.tran_cost, pp.link_ok, pp.num_apps, X, a,
+                    faithful=True, interpret=True)
+                return t, m, l
+            return jax.vmap(one)(arr)
+
+        arms = {
+            "scan": jax.jit(functools.partial(scan_stats, compact=False)),
+            "scan_compact": jax.jit(functools.partial(scan_stats,
+                                                      compact=True)),
+            "pallas": jax.jit(kernel_stats),
+        }
+        row = {"net": net, "P": P, "mc": int(arr.shape[0]), "reps": reps}
+        for arm, fn in arms.items():
+            jax.block_until_ready(fn(X))            # compile outside timer
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(reps):
+                out = fn(X)
+            jax.block_until_ready(out)
+            row[f"{arm}_iters_s"] = reps / (time.perf_counter() - t0)
+        row["speedup"] = row["pallas_iters_s"] / row["scan_iters_s"]
+        print(f"# backends {net}: scan {row['scan_iters_s']:.1f}/s, "
+              f"scan_compact {row['scan_compact_iters_s']:.1f}/s, "
+              f"pallas-interpret {row['pallas_iters_s']:.1f}/s "
+              f"({row['speedup']:.2f}x over scan)", flush=True)
+        rows.append(row)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kinds", nargs="*", default=["all"],
@@ -105,10 +193,18 @@ def main() -> None:
     ap.add_argument("--mc-eval", type=int, default=16,
                     help="held-out Monte-Carlo arrival seeds per cell")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend-reps", type=int, default=20,
+                    help="timed fitness evaluations per backend arm "
+                         "(0 skips the backend microbench)")
     ap.add_argument("--json", default="BENCH_traffic.json",
                     help="machine-readable results ('' to disable)")
     args = ap.parse_args()
     kinds = TRAFFIC_KINDS if "all" in args.kinds else args.kinds
+
+    backend_rows = []
+    if args.backend_reps > 0:
+        backend_rows = bench_backends(args.ratio, args.seed,
+                                      reps=args.backend_reps)
 
     all_rows, summaries = [], []
     for kind in kinds:
@@ -163,6 +259,14 @@ def main() -> None:
             "rows": all_rows,
             "scenarios": summaries,
         }
+        if backend_rows:
+            payload["backends"] = {
+                "headline": "pallas event-walk kernel (interpret mode "
+                            "-> XLA on this CPU host; native on TPU) "
+                            "vs the default merged-order scan backend",
+                "rows": backend_rows,
+                "best_speedup": max(r["speedup"] for r in backend_rows),
+            }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")

@@ -76,17 +76,41 @@ def generate() -> dict:
         dag = base.with_deadline(np.array([DEADLINE_RATIO * h]))
         for kind in TRAFFIC_SCENARIOS:
             arr = sample_arrivals(kind, 1, seed=SEED, **TRAFFIC_ARR).t
-            cfg = PSOGAConfig(**GOLDEN, miss_budget=TRAFFIC_MISS_BUDGET)
-            res = run_pso_ga(dag, env, cfg, seed=SEED, arrivals=arr)
-            key = f"{net}|traffic={kind}"
-            out[key] = {
-                "best_fitness": float(res.best_fitness),
-                "best_cost": float(res.best_cost),
-                "feasible": bool(res.feasible),
-                "iterations": int(res.iterations),
-            }
-            print(f"{key}: key={res.best_fitness:.8g} "
-                  f"iters={res.iterations}")
+            for backend in ("scan", "pallas"):
+                cfg = PSOGAConfig(**GOLDEN,
+                                  miss_budget=TRAFFIC_MISS_BUDGET,
+                                  fitness_backend=backend)
+                res = run_pso_ga(dag, env, cfg, seed=SEED, arrivals=arr)
+                # scan keys keep their pre-kernel spelling (no |scan
+                # suffix) so the stored history stays byte-comparable
+                key = f"{net}|traffic={kind}" if backend == "scan" \
+                    else f"{net}|traffic={kind}|pallas"
+                out[key] = {
+                    "best_fitness": float(res.best_fitness),
+                    "best_cost": float(res.best_cost),
+                    "feasible": bool(res.feasible),
+                    "iterations": int(res.iterations),
+                }
+                print(f"{key}: key={res.best_fitness:.8g} "
+                      f"iters={res.iterations}")
+    # infeasible-branch anchor for the kernel path: an unattainable
+    # deadline + zero miss budget force the MISS_PENALTY key (Eq. 16
+    # analogue) — pinning it catches drift in the penalty arithmetic
+    # that the feasible goldens never exercise.
+    base = zoo.build("alexnet", pin_server=0)
+    h, _ = heft_makespan(base, env)
+    dag = base.with_deadline(np.array([0.5 * h]))
+    arr = sample_arrivals("flash-crowd", 1, seed=SEED, **TRAFFIC_ARR).t
+    cfg = PSOGAConfig(**GOLDEN, miss_budget=0.0, fitness_backend="pallas")
+    res = run_pso_ga(dag, env, cfg, seed=SEED, arrivals=arr)
+    key = "alexnet|traffic=flash-crowd|pallas|infeasible"
+    out[key] = {
+        "best_fitness": float(res.best_fitness),
+        "best_cost": float(res.best_cost),
+        "feasible": bool(res.feasible),
+        "iterations": int(res.iterations),
+    }
+    print(f"{key}: key={res.best_fitness:.8g} iters={res.iterations}")
     return out
 
 

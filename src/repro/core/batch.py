@@ -30,6 +30,7 @@ similar shapes skip retracing entirely.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -38,7 +39,7 @@ import numpy as np
 
 from .dag import LayerDAG
 from .environment import Environment
-from .fitness import make_swarm_fitness
+from .fitness import make_swarm_fitness, resolve_fitness_backend
 from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
                      swarm_step)
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
@@ -168,7 +169,15 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
     so every re-planning round after the first reuses the compiled
     runner; ``runner_cache_stats()["traces"]`` counts the actual
     re-traces.
+
+    The backend string is normalized BEFORE the cache key: ``"auto"``
+    and whatever it resolves to on this host share one entry (and one
+    compiled program), so flipping only the spelling of the backend
+    never retraces — pinned by
+    ``tests/test_traffic_kernel.py::test_runner_cache_backend_normalized``.
     """
+    cfg = dataclasses.replace(
+        cfg, fitness_backend=resolve_fitness_backend(cfg.fitness_backend))
     cache_key = (cfg, traffic)
     cached = _RUNNER_CACHE.get(cache_key)
     if cached is not None:

@@ -133,27 +133,47 @@ def make_swarm_fitness(pp: PaddedProblem, faithful: bool = True,
     seed-mean load-adjusted cost, feasibility becomes "pins/links legal
     AND p95 deadline-miss rate <= ``miss_budget``", and the infeasible
     branch orders by miss rate then total latency (see module
-    docstring). The request-axis scan currently has no Pallas twin, so
-    the traffic path always uses the scan engine regardless of
-    ``backend`` (which is still validated).
+    docstring). The backend choice covers this path identically:
+    ``"scan"`` replays via ``traffic.simulate_traffic_swarm``'s
+    merged-order scan, ``"pallas"`` via the fused
+    ``kernels.traffic_sim`` event-walk kernel — both reduce to the same
+    ``(total, miss_rate, lat_sum, static_ok)`` per-seed summary.
     """
     backend = resolve_fitness_backend(backend)
     if arrivals is not None:
-        from .traffic import simulate_traffic_swarm
         budget = 0.05 if miss_budget is None else miss_budget
+        if backend == "scan":
+            from .traffic import simulate_traffic_swarm
+
+            def seed_stats(X, a):
+                sims = simulate_traffic_swarm(pp, X, a, faithful)
+                return (sims.total_cost, sims.miss_rate, sims.lat_sum,
+                        sims.static_ok)
+        else:
+            from ..kernels.ops import interpret_default
+            from ..kernels.traffic_sim import traffic_replay_folded
+
+            def seed_stats(X, a):
+                total, miss_rate, lat_sum, static_ok, _ = \
+                    traffic_replay_folded(
+                        pp.order, pp.compute, pp.parent_idx, pp.parent_mb,
+                        pp.child_idx, pp.child_mb, pp.app_id, pp.deadline,
+                        pp.pinned, pp.power, pp.cost_per_sec, pp.inv_bw,
+                        pp.tran_cost, pp.link_ok, pp.num_apps, X, a,
+                        faithful=faithful, interpret=interpret_default())
+                return total, miss_rate, lat_sum, static_ok
 
         def fit_traffic(X: jnp.ndarray) -> jnp.ndarray:
-            sims = jax.vmap(
-                lambda a: simulate_traffic_swarm(pp, X, a, faithful)
-            )(arrivals)
-            mean_cost = jnp.mean(sims.total_cost, axis=0)          # (P,)
-            p95_miss = jnp.percentile(sims.miss_rate, 95.0, axis=0)
-            ok = sims.static_ok[0] & (p95_miss <= budget)
+            total, miss_rate, lat_sum, static_ok = jax.vmap(
+                lambda a: seed_stats(X, a))(arrivals)
+            mean_cost = jnp.mean(total, axis=0)                    # (P,)
+            p95_miss = jnp.percentile(miss_rate, 95.0, axis=0)
+            ok = static_ok[0] & (p95_miss <= budget)
             if incumbent is not None:
                 w = 1.0 if mig_weight is None else mig_weight
                 mean_cost = mean_cost + w * migration_cost(pp, X,
                                                            incumbent)
-            lat = jnp.mean(sims.lat_sum, axis=0)
+            lat = jnp.mean(lat_sum, axis=0)
             return jnp.where(ok, mean_cost,
                              INFEASIBLE_OFFSET + MISS_PENALTY * p95_miss
                              + jnp.log1p(lat))

@@ -286,9 +286,6 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
     # the backend the returned plans report (observability, ISSUE-5).
     backend = resolve_fitness_backend(pso.fitness_backend)
     if traffic is not None:
-        # the queue-aware replay has no Pallas twin (DESIGN.md §10):
-        # traffic solves always run the scan engine, so report THAT.
-        backend = "scan"
         pso = dataclasses.replace(pso, miss_budget=traffic.miss_budget)
     pso = dataclasses.replace(pso, fitness_backend=backend)
     env = env or tpu_fleet_environment()

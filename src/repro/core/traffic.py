@@ -278,12 +278,20 @@ def _merged_order(pp: PaddedProblem, arr: jnp.ndarray):
     arrival ties serve in slot order, cross-app ties interleave by
     topo position), and a request's own steps stay in topo order — so
     every step's parents precede it and the scan carry is causally
-    consistent for ANY arrival values. +inf (padded) request slots sort
-    last and are
-    masked invalid, as are padded-layer steps wherever the sort lands
-    them (interleaved masked no-ops are exact identities on every
-    reduction — adding 0.0 / min-ing +inf — so padding stays invisible,
-    the DESIGN.md §4 discipline).
+    consistent for ANY arrival values.
+
+    Padding is COMPACTED to the tail: padded-layer steps take the sort
+    key +inf (instead of their app's arrival), joining +inf (padded)
+    request slots past every real step, so the valid steps form a
+    contiguous prefix of length ``n_valid``. The compacted prefix walk
+    (``compact=True`` replay, and the Pallas kernel's ``fori_loop``
+    bound) then skips the padding entirely instead of executing it as
+    masked no-ops. Compaction is order-preserving: valid steps keep
+    their exact keys and the ``(slot, topo)`` tie-break is a total
+    order, so their relative order — and hence the lease/end/t_on
+    evolution — is unchanged from the full-``T`` walk (masked no-ops
+    were exact identities: adding 0.0 / min-ing +inf, the DESIGN.md §4
+    discipline).
     """
     max_p = pp.order.shape[0]
     R = arr.shape[-1]
@@ -292,18 +300,20 @@ def _merged_order(pp: PaddedProblem, arr: jnp.ndarray):
     app = pp.app_id[jsafe]                             # (max_p,)
     rep_t = jnp.tile(jnp.arange(max_p), R)             # (T,)
     rep_r = jnp.repeat(jnp.arange(R), max_p)           # (T,)
-    arr_flat = arr[app[rep_t], rep_r]
-    perm = jnp.lexsort((rep_t, rep_r, arr_flat))
+    key = jnp.where(valid[rep_t], arr[app[rep_t], rep_r], jnp.inf)
+    perm = jnp.lexsort((rep_t, rep_r, key))
     t_m = rep_t[perm]
     r_m = rep_r[perm]
-    arr_m = arr_flat[perm]
-    valid_m = valid[t_m] & jnp.isfinite(arr_m)
-    return t_m, r_m, arr_m, valid_m
+    key_m = key[perm]
+    valid_m = jnp.isfinite(key_m)                      # == valid & finite arr
+    n_valid = jnp.sum(valid_m).astype(jnp.int32)
+    return t_m, r_m, key_m, valid_m, n_valid
 
 
 def simulate_traffic_swarm(pp: PaddedProblem, X: jnp.ndarray,
                            arr: jnp.ndarray,
-                           faithful: bool = True) -> TrafficSim:
+                           faithful: bool = True,
+                           compact: bool = False) -> TrafficSim:
     """Replay R request copies of every particle's schedule against
     shared per-server FCFS queues — one arrival draw ``arr (max_apps,
     R)``, the whole swarm ``X (P, max_p)`` at once.
@@ -311,9 +321,7 @@ def simulate_traffic_swarm(pp: PaddedProblem, X: jnp.ndarray,
     Same two-phase structure as ``simulate_swarm`` (DESIGN.md §8):
     phase 1 runs once per layer (request copies share the plan, so
     per-layer exe/transfer quantities are computed once and gathered
-    per merged step); phase 2 is a minimal-carry ``lax.scan`` over the
-    ``R·max_p`` merged steps whose carry is ``(lease (P,S), end (P,
-    R·max_p))`` — ``(lease,)`` alone in faithful mode — with the
+    per merged step); phase 2 replays the merged steps with the
     arrival time as an extra start gate:
 
         faithful:  start = max(lease[s], a_r) + maxTrans
@@ -321,13 +329,31 @@ def simulate_traffic_swarm(pp: PaddedProblem, X: jnp.ndarray,
         corrected: start = max(lease[s], a_r, max_p(end[r,p] + trans_p))
                    lease[s] = start + exe + transfer_out
 
-    At R = 1 with arrival 0 both reduce bit-exactly to the single-shot
-    recurrences (``max(lease, 0) = lease``), which is the
-    zero-contention acceptance invariant. ``t_on`` is recovered
-    post-scan (order-independent min), rental cost covers the whole
-    horizon window per server, and transmission cost is charged once
-    per valid request copy. vmap over arrival seeds for Monte-Carlo
-    tails, and over a fleet axis in ``batch._fleet_runner``.
+    With ``compact=False`` (the default) the walk is the full-``T``
+    minimal-carry ``lax.scan`` in which padded steps execute as masked
+    no-ops; ``compact=True`` instead runs a ``fori_loop`` over just the
+    ``n_valid`` real steps of the compacted merged order
+    (``_merged_order`` sorts every padded step past them), carrying
+    ``(lease, end, t_on)``. The two are step-for-step the same replay
+    (the no-ops are exact carry identities); the compact walk is the
+    scan twin of the Pallas kernel's event loop
+    (``kernels.traffic_sim``, whose ``fori_loop`` bound is the same
+    ``n_valid``) and is kept as its differential-test reference. It is
+    not reliably faster on CPU — a traced-bound ``fori_loop`` of
+    dynamic indexing loses the static-``T`` scan's tight compilation
+    unless +inf padding dominates the step sequence — which is why the
+    fused kernel, not scan compaction, is the fast traffic path
+    (DESIGN.md §10, EXPERIMENTS.md §Traffic). The
+    ``fori_loop`` bound is traced (it depends on the arrivals), so
+    under ``vmap`` — Monte-Carlo seeds, the fleet axis — it runs to the
+    longest lane's prefix with finished lanes frozen by select.
+
+    At R = 1 with arrival 0 both modes reduce bit-exactly to the
+    single-shot recurrences (``max(lease, 0) = lease``), which is the
+    zero-contention acceptance invariant. ``t_on`` is an
+    order-independent min over emitted start times, rental cost covers
+    the whole horizon window per server, and transmission cost is
+    charged once per valid request copy.
     """
     X = jnp.asarray(X).astype(jnp.int32)
     arr = jnp.asarray(arr)
@@ -337,7 +363,7 @@ def simulate_traffic_swarm(pp: PaddedProblem, X: jnp.ndarray,
     R = arr.shape[-1]
 
     ph = _swarm_phase1(pp, X)
-    t_m, r_m, arr_m, valid_m = _merged_order(pp, arr)
+    t_m, r_m, arr_m, valid_m, n_valid = _merged_order(pp, arr)
 
     j_m = ph.jsafe[t_m]                                # (T,) shared
     slot_m = r_m * max_p + j_m                         # (T,) end-buffer slot
@@ -348,56 +374,96 @@ def simulate_traffic_swarm(pp: PaddedProblem, X: jnp.ndarray,
     mt_m = jnp.take(ph.max_trans, t_m, axis=1)
     ot_m = jnp.take(ph.out_t, t_m, axis=1)
     tt_m = jnp.take(ph.tt, t_m, axis=1)                # (P, T, max_in)
+    arr_ms = jnp.where(valid_m, arr_m, 0.0)            # finite everywhere
 
     iota_S = jnp.arange(max_S)
-    xs = (valid_m, slot_m, arr_m, srv_m.T, exe_m.T, mt_m.T, ot_m.T,
-          eidx_m, pmask_m, jnp.swapaxes(tt_m, 0, 1))
+    if compact:
+        col = partial(jax.lax.dynamic_index_in_dim, keepdims=False)
 
-    def step(carry, inp):
-        (valid_t, slot_t, arr_t, srv_t, exe_t, mt_t, ot_t,
-         eidx_t, pmask_t, tt_t) = inp
-        if faithful:
-            lease, = carry
-        else:
-            lease, end = carry
-        srv_oh = (srv_t[:, None] == iota_S[None, :]) & valid_t   # (P, S)
-        lease_srv = jnp.take_along_axis(lease, srv_t[:, None], axis=1)[:, 0]
-        if faithful:
-            base = jnp.maximum(lease_srv, arr_t)
-            start = base + mt_t
-            new_lease = base + exe_t + ot_t
-        else:
-            ep = jnp.take(end, eidx_t, axis=1)         # (P, max_in)
-            gate = jnp.max(jnp.where(pmask_t[None, :], ep + tt_t, 0.0),
-                           axis=1, initial=0.0)
-            gate = jnp.maximum(gate, arr_t)
-            start = jnp.maximum(lease_srv, gate)
-            new_lease = start + exe_t + ot_t
-        t_end = start + exe_t
-        lease = jnp.where(srv_oh, new_lease[:, None], lease)
-        if faithful:
-            return (lease,), (start, t_end)
-        old = jax.lax.dynamic_slice(end, (0, slot_t), (P, 1))
-        end = jax.lax.dynamic_update_slice(
-            end, jnp.where(valid_t, t_end[:, None], old), (0, slot_t))
-        return (lease, end), (start, t_end)
+        def body(t, carry):
+            lease, end, t_on = carry
+            srv_t = col(srv_m, t, axis=1)
+            exe_t = col(exe_m, t, axis=1)
+            ot_t = col(ot_m, t, axis=1)
+            arr_t = arr_ms[t]
+            slot_t = slot_m[t]
+            srv_oh = srv_t[:, None] == iota_S[None, :]           # (P, S)
+            lease_srv = jnp.take_along_axis(lease, srv_t[:, None],
+                                            axis=1)[:, 0]
+            if faithful:
+                base = jnp.maximum(lease_srv, arr_t)
+                start = base + col(mt_m, t, axis=1)
+                new_lease = base + exe_t + ot_t
+            else:
+                ep = jnp.take(end, eidx_m[t], axis=1)  # (P, max_in)
+                gate = jnp.max(jnp.where(pmask_m[t][None, :],
+                                         ep + col(tt_m, t, axis=1), 0.0),
+                               axis=1, initial=0.0)
+                gate = jnp.maximum(gate, arr_t)
+                start = jnp.maximum(lease_srv, gate)
+                new_lease = start + exe_t + ot_t
+            t_end = start + exe_t
+            lease = jnp.where(srv_oh, new_lease[:, None], lease)
+            end = jax.lax.dynamic_update_slice(end, t_end[:, None],
+                                               (0, slot_t))
+            t_on = jnp.minimum(t_on, jnp.where(srv_oh, start[:, None],
+                                               jnp.inf))
+            return lease, end, t_on
 
-    init = (jnp.zeros((P, max_S)),) if faithful \
-        else (jnp.zeros((P, max_S)), jnp.zeros((P, R * max_p)))
-    carry, (start_seq, t_end_seq) = jax.lax.scan(step, init, xs)
-    lease = carry[0]
-    if faithful:
-        slot_idx = jnp.where(valid_m, slot_m, R * max_p)
-        end = jnp.zeros((P, R * max_p)).at[:, slot_idx].set(
-            t_end_seq.T, mode="drop")
+        lease, end, t_on = jax.lax.fori_loop(
+            0, n_valid, body,
+            (jnp.zeros((P, max_S)), jnp.zeros((P, R * max_p)),
+             jnp.full((P, max_S), jnp.inf)))
     else:
-        end = carry[1]
+        xs = (valid_m, slot_m, arr_ms, srv_m.T, exe_m.T, mt_m.T, ot_m.T,
+              eidx_m, pmask_m, jnp.swapaxes(tt_m, 0, 1))
 
-    start_all = start_seq.T                            # (P, T)
-    rows = jnp.arange(P)[:, None]
-    srv_scatter = jnp.where(valid_m[None, :], srv_m, max_S)
-    t_on = jnp.full((P, max_S), jnp.inf).at[rows, srv_scatter].min(
-        jnp.where(valid_m[None, :], start_all, jnp.inf), mode="drop")
+        def step(carry, inp):
+            (valid_t, slot_t, arr_t, srv_t, exe_t, mt_t, ot_t,
+             eidx_t, pmask_t, tt_t) = inp
+            if faithful:
+                lease, = carry
+            else:
+                lease, end = carry
+            srv_oh = (srv_t[:, None] == iota_S[None, :]) & valid_t  # (P, S)
+            lease_srv = jnp.take_along_axis(lease, srv_t[:, None],
+                                            axis=1)[:, 0]
+            if faithful:
+                base = jnp.maximum(lease_srv, arr_t)
+                start = base + mt_t
+                new_lease = base + exe_t + ot_t
+            else:
+                ep = jnp.take(end, eidx_t, axis=1)     # (P, max_in)
+                gate = jnp.max(jnp.where(pmask_t[None, :], ep + tt_t, 0.0),
+                               axis=1, initial=0.0)
+                gate = jnp.maximum(gate, arr_t)
+                start = jnp.maximum(lease_srv, gate)
+                new_lease = start + exe_t + ot_t
+            t_end = start + exe_t
+            lease = jnp.where(srv_oh, new_lease[:, None], lease)
+            if faithful:
+                return (lease,), (start, t_end)
+            old = jax.lax.dynamic_slice(end, (0, slot_t), (P, 1))
+            end = jax.lax.dynamic_update_slice(
+                end, jnp.where(valid_t, t_end[:, None], old), (0, slot_t))
+            return (lease, end), (start, t_end)
+
+        init = (jnp.zeros((P, max_S)),) if faithful \
+            else (jnp.zeros((P, max_S)), jnp.zeros((P, R * max_p)))
+        carry, (start_seq, t_end_seq) = jax.lax.scan(step, init, xs)
+        lease = carry[0]
+        if faithful:
+            slot_idx = jnp.where(valid_m, slot_m, R * max_p)
+            end = jnp.zeros((P, R * max_p)).at[:, slot_idx].set(
+                t_end_seq.T, mode="drop")
+        else:
+            end = carry[1]
+
+        start_all = start_seq.T                        # (P, T)
+        rows = jnp.arange(P)[:, None]
+        srv_scatter = jnp.where(valid_m[None, :], srv_m, max_S)
+        t_on = jnp.full((P, max_S), jnp.inf).at[rows, srv_scatter].min(
+            jnp.where(valid_m[None, :], start_all, jnp.inf), mode="drop")
     used = ~jnp.isinf(t_on)
     t_on_safe = jnp.where(used, t_on, 0.0)
     comp_cost = jnp.sum(jnp.where(used, pp.cost_per_sec[None, :]

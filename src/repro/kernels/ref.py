@@ -15,7 +15,7 @@ import numpy as np
 NEG_INF = -2.0 ** 30
 
 __all__ = ["flash_attention_ref", "ssd_intra_ref", "decode_attention_ref",
-           "schedule_replay_ref", "NEG_INF"]
+           "schedule_replay_ref", "traffic_replay_ref", "NEG_INF"]
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -146,3 +146,126 @@ def schedule_replay_ref(order, compute, parent_idx, parent_mb, child_idx,
                              * (lease - jnp.where(used, t_on, 0.0)), 0.0),
                    axis=1)
     return comp + trans, feas & ~bad, tsum
+
+
+def traffic_replay_ref(order, compute, parent_idx, parent_mb, child_idx,
+                       child_mb, app_id, deadline, pinned, power,
+                       cost_per_sec, inv_bw, tran_cost, link_ok, num_apps,
+                       X, arr, faithful: bool = True
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray, jnp.ndarray]:
+    """Oracle for ``traffic_sim.traffic_replay_folded`` — the merged-order
+    FCFS traffic replay with a plain Python event loop, vectorized over
+    particles.
+
+    Same padded contract as the kernel plus the true app count
+    ``num_apps`` and one arrival draw ``arr (max_apps, R)`` (+inf
+    padded). The merged order is rebuilt independently here: one
+    ``(arrival, request slot, topo position)`` sorted Python list of
+    only the REAL steps, so padding never even appears in the walk.
+    Static feasibility (pins, links) covers ALL valid layers regardless
+    of the arrivals. Returns ``(total_cost, miss_rate, lat_sum,
+    static_ok, latency (P, max_apps, R))``.
+    """
+    order_np = np.asarray(order)
+    parent_idx_np = np.asarray(parent_idx)
+    child_idx_np = np.asarray(child_idx)
+    app_id_np = np.asarray(app_id)
+    arr_np = np.asarray(arr, float)
+    n_apps = int(num_apps)
+    X = jnp.asarray(X, jnp.int32)
+    P, max_p = X.shape
+    S = power.shape[0]
+    max_apps, R = arr_np.shape
+    rows = jnp.arange(P)
+
+    # static pass: pins / links over every valid layer (arrival-free)
+    bad = jnp.zeros(P, bool)
+    for j in order_np:
+        if j < 0:
+            continue
+        srv = X[:, j]
+        for k in range(parent_idx_np.shape[1]):
+            pj = int(parent_idx_np[j, k])
+            if pj >= 0:
+                psrv = X[:, pj]
+                bad = bad | (~link_ok[psrv, srv].astype(bool)
+                             & (psrv != srv))
+        for k in range(child_idx_np.shape[1]):
+            cj = int(child_idx_np[j, k])
+            if cj >= 0:
+                csrv = X[:, cj]
+                bad = bad | (~link_ok[srv, csrv].astype(bool)
+                             & (csrv != srv))
+    pin = jnp.asarray(pinned)[None, :]
+    static_ok = jnp.all((pin < 0) | (X == pin), axis=1) & ~bad
+
+    # merged (arrival, slot, topo) order over the real steps only
+    steps = []
+    for m, j in enumerate(order_np):
+        if j < 0:
+            continue
+        a = int(app_id_np[j])
+        for r in range(R):
+            if a < n_apps and np.isfinite(arr_np[a, r]):
+                steps.append((float(arr_np[a, r]), r, m, int(j)))
+    steps.sort(key=lambda s: (s[0], s[1], s[2]))
+
+    lease = jnp.zeros((P, S))
+    t_on = jnp.full((P, S), jnp.inf)
+    end = jnp.zeros((P, R, max_p))
+    trans = jnp.zeros(P)
+    for a_t, r, _m, j in steps:
+        srv = X[:, j]
+        exe = compute[j] / power[srv]
+        max_tr = jnp.zeros(P)
+        gate = jnp.zeros(P)
+        for k in range(parent_idx_np.shape[1]):
+            pj = int(parent_idx_np[j, k])
+            if pj < 0:
+                continue
+            psrv = X[:, pj]
+            tt = parent_mb[j, k] * inv_bw[psrv, srv]
+            max_tr = jnp.maximum(max_tr, tt)
+            gate = jnp.maximum(gate, end[:, r, pj] + tt)
+            trans = trans + tran_cost[psrv, srv] * parent_mb[j, k]
+        out_t = jnp.zeros(P)
+        for k in range(child_idx_np.shape[1]):
+            cj = int(child_idx_np[j, k])
+            if cj < 0:
+                continue
+            out_t = out_t + child_mb[j, k] * inv_bw[srv, X[:, cj]]
+        lease_srv = lease[rows, srv]
+        if faithful:
+            base = jnp.maximum(lease_srv, a_t)
+            start = base + max_tr
+            new_lease = base + exe + out_t
+        else:
+            start = jnp.maximum(lease_srv, jnp.maximum(gate, a_t))
+            new_lease = start + exe + out_t
+        t_end = start + exe
+        end = end.at[:, r, j].set(t_end)
+        t_on = t_on.at[rows, srv].min(start)
+        lease = lease.at[rows, srv].set(new_lease)
+
+    latency = jnp.zeros((P, max_apps, R))
+    miss_cnt = jnp.zeros(P)
+    n_req = 0
+    for a in range(max_apps):
+        sel = jnp.asarray(app_id_np == a)[None, None, :]
+        for r in range(R):
+            if not (a < n_apps and np.isfinite(arr_np[a, r])):
+                continue
+            n_req += 1
+            appc = jnp.max(jnp.where(sel[:, 0], end[:, r], -jnp.inf),
+                           axis=1)
+            lat = appc - arr_np[a, r]
+            latency = latency.at[:, a, r].set(lat)
+            miss_cnt = miss_cnt + (lat > deadline[a])
+    used = ~jnp.isinf(t_on)
+    comp = jnp.sum(jnp.where(used, cost_per_sec[None, :]
+                             * (lease - jnp.where(used, t_on, 0.0)), 0.0),
+                   axis=1)
+    lat_sum = jnp.sum(latency, axis=(1, 2))
+    return (comp + trans, miss_cnt / max(n_req, 1), lat_sum, static_ok,
+            latency)

@@ -1,0 +1,307 @@
+"""Pallas TPU kernel replaying the merged-order FCFS traffic replay for a
+whole particle tile (DESIGN.md §10).
+
+``core.traffic.simulate_traffic_swarm`` is the hot loop of every
+traffic-aware solve: R request copies of the schedule × the swarm × every
+PSO-GA iteration. Its scan pays per-step dispatch for all ``R·max_p``
+merged steps — including every padded-layer and padded-request no-op.
+This kernel is the queue-aware twin of ``kernels/schedule_sim.py``: the
+merged event walk moves *inside* one ``pallas_call`` so the whole
+``(P, R·max_p)`` replay is a single fused program, and the walk itself
+only covers the ``n_valid`` REAL steps (see below).
+
+  * grid ``(num_particle_tiles,)`` — one grid cell replays ``tile_p``
+    particles; ``jax.vmap`` over Monte-Carlo arrival seeds (and over the
+    fleet axis in ``core.batch._fleet_runner``) adds outer grid
+    dimensions.
+  * VMEM carry per tile: per-server queue tails ``lease (tile_p, S)``,
+    first-use ``t_on (tile_p, S)``, per-(request, layer) end times
+    ``end (tile_p, R·max_p)``, plus a ``(tile_p, 1)`` transmission-cost
+    accumulator strip.
+  * the merged ``(arrival, slot, topo)`` event order is precomputed on
+    the host side of the call with padding COMPACTED to the tail: the
+    sort key is ``arrival`` for real steps and +inf for padded-layer /
+    padded-request steps, so all valid steps form a contiguous prefix
+    and the kernel's ``fori_loop`` runs ``n_valid`` iterations instead
+    of ``R·max_p``. Compaction is order-preserving — valid steps keep
+    their exact keys and the ``(request slot, topo position)``
+    tie-break, so the lease/end/t_on evolution is step-for-step the
+    scan's (masked no-ops were exact identities).
+  * each step applies the arrival start-gate on-chip —
+    ``max(lease[s], a_r)`` in faithful mode, ``max(lease[s], a_r,
+    parent end + transfer)`` in corrected mode — and the epilogue folds
+    the per-(app, request) completion latencies into the deadline-miss
+    rate and Σ-latency reductions the contention fitness key needs.
+
+Static feasibility (pins honored, links legal) is arrival-independent,
+so it is computed OUTSIDE the walk from ALL valid layers — a plan with
+an illegal link is infeasible even for requests that never arrive.
+
+No ``repro.core`` imports here: the kernel layer stays below core
+(DESIGN.md §1); the problem arrives as raw padded arrays and the
+contention key (miss budget, MISS_PENALTY branch) is applied by
+``core.fitness``. Validated in interpret mode against
+``ref.traffic_replay_ref``, the scan engine, and the numpy DES oracle
+(``tests/test_traffic_kernel.py``). This container is CPU-only and TPU
+is the TARGET, but the fusion already pays off here: interpret mode
+lowers to plain XLA and beats the scan backend 1.5–1.8× (EXPERIMENTS.md
+§Traffic) because the kernel never materializes the scan's per-step
+``(T, …)`` gathers or ``(P, T)`` one-hot selects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .schedule_sim import DEFAULT_TILE_P
+
+__all__ = ["traffic_replay_folded"]
+
+
+def _traffic_kernel(srv_ref, exe_ref, mt_ref, ot_ref, tr_ref, tt_ref,
+                    pstep_ref, qm_ref, slotm_ref, slot0_ref, arrm_ref,
+                    nv_ref, app_id_ref, deadline_ref, rv_ref, arr2_ref,
+                    cost_ref,
+                    total_ref, miss_ref, lat_ref, latency_ref,
+                    lease_s, t_on_s, end_s, acc_s, *,
+                    tile_p: int, max_p: int, max_in: int, max_S: int,
+                    max_apps: int, R: int, faithful: bool):
+    SRV = srv_ref[:]                               # (T, max_p) int32
+    EXE = exe_ref[:]                               # (T, max_p) f32
+    MT = mt_ref[:]
+    OT = ot_ref[:]
+    TR = tr_ref[:]
+    TT = tt_ref[:]                                 # (T, max_p, max_in)
+    col_S = jax.lax.broadcasted_iota(jnp.int32, (tile_p, max_S), 1)
+
+    lease_s[:] = jnp.zeros((tile_p, max_S), jnp.float32)
+    t_on_s[:] = jnp.full((tile_p, max_S), jnp.inf, jnp.float32)
+    end_s[:] = jnp.zeros((tile_p, R * max_p), jnp.float32)
+    acc_s[:] = jnp.zeros((tile_p, 1), jnp.float32)  # [trans_cost]
+
+    def body(t, _):
+        q = qm_ref[t]                              # topo position, scalar
+        slot = slotm_ref[t]                        # r·max_p + layer id
+        slot0 = slot0_ref[t]                       # r·max_p
+        a_t = arrm_ref[t]                          # request arrival time
+        srv = jax.lax.dynamic_slice(SRV, (0, q), (tile_p, 1))[:, 0]
+        srv_ohf = (col_S == srv[:, None]).astype(jnp.float32)
+        lease = lease_s[:]
+        lease_srv = jnp.sum(lease * srv_ohf, axis=1)
+        exe = jax.lax.dynamic_slice(EXE, (0, q), (tile_p, 1))[:, 0]
+        ot = jax.lax.dynamic_slice(OT, (0, q), (tile_p, 1))[:, 0]
+        tr = jax.lax.dynamic_slice(TR, (0, q), (tile_p, 1))[:, 0]
+        if faithful:
+            mt = jax.lax.dynamic_slice(MT, (0, q), (tile_p, 1))[:, 0]
+            base = jnp.maximum(lease_srv, a_t)
+            start = base + mt
+            new_lease = base + exe + ot
+        else:
+            end = end_s[:]
+            gate = jnp.zeros((tile_p,), jnp.float32)
+            for k in range(max_in):                # DAG structure: scalars
+                pj = pstep_ref[q, k]
+                pmask = pj >= 0
+                pslot = slot0 + jnp.maximum(pj, 0)
+                ep = jax.lax.dynamic_slice(end, (0, pslot),
+                                           (tile_p, 1))[:, 0]
+                ttk = jax.lax.dynamic_slice(TT, (0, q, k),
+                                            (tile_p, 1, 1))[:, 0, 0]
+                gate = jnp.maximum(gate, jnp.where(pmask, ep + ttk, 0.0))
+            gate = jnp.maximum(gate, a_t)
+            start = jnp.maximum(lease_srv, gate)
+            new_lease = start + exe + ot
+        t_end = start + exe
+        lease_s[:] = jnp.where(srv_ohf > 0, new_lease[:, None], lease)
+        t_on_s[:] = jnp.minimum(
+            t_on_s[:], jnp.where(srv_ohf > 0, start[:, None], jnp.inf))
+        end_s[:, pl.ds(slot, 1)] = t_end[:, None]
+        acc_s[:] = acc_s[:] + tr[:, None]
+        return 0
+
+    # only the compacted valid prefix is walked — padded-layer and
+    # +inf-request steps sort past n_valid and are never touched.
+    jax.lax.fori_loop(0, nv_ref[0], body, 0)
+
+    end = end_s[:]
+    lease = lease_s[:]
+    t_on = t_on_s[:]
+    app_id = app_id_ref[:]                         # (max_p,)
+    rv = rv_ref[:]                                 # (max_apps·R,) 1 = real
+    arr2 = arr2_ref[:]                             # arrivals, 0 if padded
+    miss_cnt = jnp.zeros((tile_p,), jnp.float32)
+    lat_sum = jnp.zeros((tile_p,), jnp.float32)
+    for a in range(max_apps):                      # small static loops
+        sel = (app_id == a)[None, :]
+        for r in range(R):
+            seg = end[:, r * max_p:(r + 1) * max_p]
+            appc = jnp.max(jnp.where(sel, seg, -jnp.inf), axis=1)
+            real = rv[a * R + r] > 0
+            latv = jnp.where(real, appc - arr2[a * R + r], 0.0)
+            latency_ref[:, a * R + r] = latv
+            miss_cnt += jnp.where(real & (latv > deadline_ref[a]), 1.0, 0.0)
+            lat_sum += latv
+    n_req = jnp.maximum(jnp.sum(rv), 1.0)
+    used = ~jnp.isinf(t_on)
+    t_on_safe = jnp.where(used, t_on, 0.0)
+    comp = jnp.sum(jnp.where(used, cost_ref[:][None, :]
+                             * (lease - t_on_safe), 0.0), axis=1)
+    total_ref[:] = comp + acc_s[:][:, 0]
+    miss_ref[:] = miss_cnt / n_req
+    lat_ref[:] = lat_sum
+
+
+def traffic_replay_folded(
+        order: jnp.ndarray, compute: jnp.ndarray, parent_idx: jnp.ndarray,
+        parent_mb: jnp.ndarray, child_idx: jnp.ndarray,
+        child_mb: jnp.ndarray, app_id: jnp.ndarray, deadline: jnp.ndarray,
+        pinned: jnp.ndarray, power: jnp.ndarray, cost_per_sec: jnp.ndarray,
+        inv_bw: jnp.ndarray, tran_cost: jnp.ndarray, link_ok: jnp.ndarray,
+        num_apps: jnp.ndarray, X: jnp.ndarray, arr: jnp.ndarray, *,
+        faithful: bool = True, tile_p: int = DEFAULT_TILE_P,
+        interpret: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
+    """Queue-aware FCFS replay of one arrival draw for every particle.
+
+    Args use the padded-problem layout of ``core.simulator.PaddedProblem``
+    plus its true app count ``num_apps`` (a 0-d int32, traced per problem
+    under the fleet vmap); ``X`` is ``(P, max_p)`` int32 assignments and
+    ``arr`` is ``(max_apps, R)`` per-app request timestamps, +inf padded.
+    Returns per-particle ``(total_cost (P,), miss_rate (P,), lat_sum
+    (P,), static_ok (P,) bool, latency (P, max_apps, R))`` — the summary
+    ``core.fitness.make_swarm_fitness(arrivals=...)`` folds into the
+    contention key, with the full latency grid kept for request-level
+    differential testing.
+    """
+    X = jnp.asarray(X).astype(jnp.int32)
+    arr = jnp.asarray(arr).astype(jnp.float32)
+    P, max_p = X.shape
+    max_S = power.shape[0]
+    max_in = parent_idx.shape[1]
+    max_apps = deadline.shape[0]
+    R = arr.shape[-1]
+    T = R * max_p
+
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    order = i32(order)
+    app_ids = i32(app_id)
+    inv_bw_f = f32(inv_bw)
+    link_b = jnp.asarray(link_ok).astype(bool)
+
+    # ---- phase 1: carry-independent per-(particle, layer) quantities —
+    # the kernel-layer twin of ``core.simulator._swarm_phase1`` ----
+    valid = order >= 0
+    jsafe = jnp.where(valid, order, 0)
+    srv = jnp.take(X, jsafe, axis=1)                       # (P, max_p)
+    exe = f32(compute)[jsafe][None, :] / f32(power)[srv]
+    pars = i32(parent_idx)[jsafe]                          # (max_p, max_in)
+    pmask = (pars >= 0) & valid[:, None]
+    psafe = jnp.where(pmask, pars, 0)
+    psrv = jnp.take(X, psafe, axis=1)                      # (P, max_p, max_in)
+    srv_b = srv[:, :, None]
+    mb = f32(parent_mb)[jsafe][None, :, :]
+    tt = mb * inv_bw_f[psrv, srv_b]
+    pm = pmask[None, :, :]
+    max_trans = jnp.max(jnp.where(pm, tt, 0.0), axis=2, initial=0.0)
+    tr_step = jnp.sum(jnp.where(pm, f32(tran_cost)[psrv, srv_b] * mb, 0.0),
+                      axis=2)                              # (P, max_p)
+    link_bad = jnp.any(pm & ~link_b[psrv, srv_b] & (psrv != srv_b),
+                       axis=(1, 2))
+    kids = i32(child_idx)[jsafe]
+    kmask = ((kids >= 0) & valid[:, None])[None, :, :]
+    ksrv = jnp.take(X, jnp.where(kmask[0], kids, 0), axis=1)
+    out_t = jnp.sum(jnp.where(kmask, f32(child_mb)[jsafe][None]
+                              * inv_bw_f[srv_b, ksrv], 0.0), axis=2)
+    link_bad = link_bad | jnp.any(
+        kmask & ~link_b[srv_b, ksrv] & (ksrv != srv_b), axis=(1, 2))
+    pin = i32(pinned)[None, :]
+    # arrival-independent: covers ALL valid layers, walked or not
+    static_ok = jnp.all((pin < 0) | (X == pin), axis=1) & ~link_bad
+
+    # ---- merged (arrival, slot, topo) order, padding compacted ----
+    # padded-layer steps take key +inf, joining +inf-request steps at
+    # the tail; valid steps keep their exact keys so the stable
+    # (arrival, request slot, topo position) order among them is
+    # unchanged — the walk covers exactly the first n_valid entries.
+    app = app_ids[jsafe]
+    rep_t = jnp.tile(jnp.arange(max_p), R)
+    rep_r = jnp.repeat(jnp.arange(R), max_p)
+    key = jnp.where(valid[rep_t], arr[app[rep_t], rep_r], jnp.inf)
+    perm = jnp.lexsort((rep_t, rep_r, key))
+    q_m = rep_t[perm].astype(jnp.int32)                    # (T,)
+    r_m = rep_r[perm]
+    key_m = key[perm]
+    valid_m = jnp.isfinite(key_m)
+    nv = jnp.sum(valid_m).astype(jnp.int32)[None]          # (1,)
+    slot_m = (r_m * max_p + jsafe[q_m]).astype(jnp.int32)
+    slot0_m = (r_m * max_p).astype(jnp.int32)
+    arr_m = jnp.where(valid_m, key_m, 0.0).astype(jnp.float32)
+    pstep = jnp.where(pmask, psafe, -1).astype(jnp.int32)  # (max_p, max_in)
+
+    app_real = jnp.arange(max_apps) < num_apps
+    req_valid = jnp.isfinite(arr) & app_real[:, None]      # (max_apps, R)
+    rv = req_valid.astype(jnp.float32).reshape(-1)
+    arr2 = jnp.where(req_valid, arr, 0.0).reshape(-1)
+
+    tile_p = min(tile_p, max(P, 1))
+    n_tiles = pl.cdiv(P, tile_p)
+    p_pad = n_tiles * tile_p
+    if p_pad != P:                                 # pad with copies of row 0
+        pad = lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (p_pad - P,) + a.shape[1:])], axis=0)
+        srv, exe, max_trans, out_t, tr_step, tt = map(
+            pad, (srv, exe, max_trans, out_t, tr_step, tt))
+
+    kernel = functools.partial(
+        _traffic_kernel, tile_p=tile_p, max_p=max_p, max_in=max_in,
+        max_S=max_S, max_apps=max_apps, R=R, faithful=faithful)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    total, miss_rate, lat_sum, latency = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_p, max_p), lambda i: (i, 0)),         # srv
+            pl.BlockSpec((tile_p, max_p), lambda i: (i, 0)),         # exe
+            pl.BlockSpec((tile_p, max_p), lambda i: (i, 0)),         # mt
+            pl.BlockSpec((tile_p, max_p), lambda i: (i, 0)),         # ot
+            pl.BlockSpec((tile_p, max_p), lambda i: (i, 0)),         # tr
+            pl.BlockSpec((tile_p, max_p, max_in), lambda i: (i, 0, 0)),
+            full((max_p, max_in)),                                   # pstep
+            full((T,)),                                              # q_m
+            full((T,)),                                              # slot_m
+            full((T,)),                                              # slot0_m
+            full((T,)),                                              # arr_m
+            full((1,)),                                              # nv
+            full((max_p,)),                                          # app_id
+            full((max_apps,)),                                       # deadline
+            full((max_apps * R,)),                                   # rv
+            full((max_apps * R,)),                                   # arr2
+            full((max_S,)),                                          # cost
+        ],
+        out_specs=[pl.BlockSpec((tile_p,), lambda i: (i,))] * 3
+        + [pl.BlockSpec((tile_p, max_apps * R), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((p_pad, max_apps * R), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_p, max_S), jnp.float32),                # lease
+            pltpu.VMEM((tile_p, max_S), jnp.float32),                # t_on
+            pltpu.VMEM((tile_p, R * max_p), jnp.float32),            # end
+            pltpu.VMEM((tile_p, 1), jnp.float32),                    # trans
+        ],
+        interpret=interpret,
+    )(i32(srv), f32(exe), f32(max_trans), f32(out_t), f32(tr_step), f32(tt),
+      pstep, q_m, slot_m, slot0_m, arr_m, nv, app_ids, f32(deadline),
+      rv, arr2, f32(cost_per_sec))
+    return (total[:P], miss_rate[:P], lat_sum[:P], static_ok,
+            latency[:P].reshape(P, max_apps, R))

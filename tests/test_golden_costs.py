@@ -63,20 +63,25 @@ def test_golden_cost(net, faithful, backend, golden_env, golden_dags):
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
 @pytest.mark.parametrize("kind", TRAFFIC_SCENARIOS)
 @pytest.mark.parametrize("net", TRAFFIC_NETS)
-def test_golden_traffic_key(net, kind, golden_env, golden_dags):
+def test_golden_traffic_key(net, kind, backend, golden_env, golden_dags):
     """Queue-aware goldens (DESIGN.md §10): seeded traffic-fitness solves
-    pinned end-to-end, so contention-scoring drift is caught the same
-    way plan-fitness drift is (both the feasible mean-load-cost branch
-    and the miss-penalty infeasible branch are anchored)."""
-    want = GOLDENS[f"{net}|traffic={kind}"]
+    pinned end-to-end for BOTH backends (the pallas column runs the
+    kernels.traffic_sim event walk in interpret mode), so contention-
+    scoring drift is caught the same way plan-fitness drift is (both
+    the feasible mean-load-cost branch and the miss-penalty infeasible
+    branch are anchored)."""
+    suffix = "" if backend == "scan" else "|pallas"
+    want = GOLDENS[f"{net}|traffic={kind}{suffix}"]
     arr = sample_arrivals(kind, 1, seed=_TCFG["seed"],
                           **_TCFG["arrivals"]).t
     cfg = PSOGAConfig(pop_size=_TCFG["pop_size"],
                       max_iters=_TCFG["max_iters"],
                       stall_iters=_TCFG["stall_iters"],
-                      miss_budget=_TCFG["miss_budget"])
+                      miss_budget=_TCFG["miss_budget"],
+                      fitness_backend=backend)
     res = run_pso_ga(golden_dags[net], golden_env, cfg,
                      seed=_TCFG["seed"], arrivals=arr)
     assert res.feasible == want["feasible"]
@@ -86,13 +91,38 @@ def test_golden_traffic_key(net, kind, golden_env, golden_dags):
                                rtol=1e-5)
 
 
+def test_golden_traffic_infeasible_anchor(golden_env):
+    """The MISS_PENALTY branch of the kernel path, anchored: a 0.5×HEFT
+    deadline with a zero miss budget is unattainable, so the pinned key
+    must sit above INFEASIBLE_OFFSET — drift in the penalty arithmetic
+    (offset + 64·p95 + log1p latency) is invisible to the feasible
+    goldens and to backend-vs-backend parity."""
+    from repro.core.fitness import INFEASIBLE_OFFSET
+    want = GOLDENS["alexnet|traffic=flash-crowd|pallas|infeasible"]
+    base = zoo.build("alexnet", pin_server=0)
+    h, _ = heft_makespan(base, golden_env)
+    dag = base.with_deadline(np.array([0.5 * h]))
+    arr = sample_arrivals("flash-crowd", 1, seed=_TCFG["seed"],
+                          **_TCFG["arrivals"]).t
+    cfg = PSOGAConfig(pop_size=_TCFG["pop_size"],
+                      max_iters=_TCFG["max_iters"],
+                      stall_iters=_TCFG["stall_iters"],
+                      miss_budget=0.0, fitness_backend="pallas")
+    res = run_pso_ga(dag, golden_env, cfg, seed=_TCFG["seed"],
+                     arrivals=arr)
+    assert not want["feasible"] and not res.feasible
+    assert want["best_fitness"] > INFEASIBLE_OFFSET
+    np.testing.assert_allclose(res.best_fitness, want["best_fitness"],
+                               rtol=1e-5)
+
+
 def test_goldens_cover_full_matrix():
     """The stored file must span nets × fidelity × backends plus the
     traffic nets × scenarios — a silently shrunken matrix would quietly
     stop guarding part of the surface."""
     keys = [k for k in GOLDENS if not k.startswith("_")]
     assert len(keys) == len(zoo.NAMES) * 2 * 2 \
-        + len(TRAFFIC_NETS) * len(TRAFFIC_SCENARIOS)
+        + len(TRAFFIC_NETS) * len(TRAFFIC_SCENARIOS) * 2 + 1
     for net in zoo.NAMES:
         for faithful in (False, True):
             for backend in ("scan", "pallas"):
@@ -100,3 +130,5 @@ def test_goldens_cover_full_matrix():
     for net in TRAFFIC_NETS:
         for kind in TRAFFIC_SCENARIOS:
             assert f"{net}|traffic={kind}" in GOLDENS
+            assert f"{net}|traffic={kind}|pallas" in GOLDENS
+    assert "alexnet|traffic=flash-crowd|pallas|infeasible" in GOLDENS

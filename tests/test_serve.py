@@ -1,4 +1,8 @@
-"""Server integration: batched generate on reduced configs."""
+"""Server integration: batched generate on reduced configs, and the
+--plan --traffic CLI smoke path (backend plumbing end to end)."""
+import dataclasses
+import sys
+
 import numpy as np
 import pytest
 
@@ -29,3 +33,50 @@ def test_generate_greedy_deterministic():
     a = srv.generate(params, batch)["tokens"]
     b = srv.generate(params, batch)["tokens"]
     np.testing.assert_array_equal(a, b)
+
+
+class _StubServer:
+    """Skips the real model build after the plan block (the smoke test
+    only exercises the planning CLI, DESIGN.md §10)."""
+    def __init__(self, *a, **k):
+        pass
+
+    def init_params(self, seed=0):
+        return None
+
+    def generate(self, params, batch):
+        return {"tokens": np.zeros((1, 16), np.int32),
+                "tokens_generated": 0, "prefill_s": 0.0, "decode_s": 0.0,
+                "decode_tok_per_s": 0.0}
+
+
+def test_serve_plan_traffic_backend_smoke(monkeypatch, capsys):
+    """`serve --plan --traffic --fitness-backend pallas` stamps the
+    RESOLVED backend into every emitted plan and the report line. The
+    real batched planner runs (shrunk swarm, first shape only)."""
+    import repro.core as core
+    import repro.launch.serve as serve_mod
+
+    real = core.plan_offload_batch
+    captured = {}
+
+    def spy(items, env, pso, fitness_backend, traffic):
+        pso = dataclasses.replace(pso, pop_size=8, max_iters=4,
+                                  stall_iters=2)
+        plans = real(items[:1], env=env, pso=pso,
+                     fitness_backend=fitness_backend, traffic=traffic)
+        captured["plans"] = plans
+        return plans                    # zip(shapes, plans) truncates
+
+    monkeypatch.setattr(core, "plan_offload_batch", spy)
+    monkeypatch.setattr(serve_mod, "Server", _StubServer)
+    monkeypatch.setattr(sys, "argv",
+                        ["serve", "--arch", "qwen3-0.6b", "--reduced",
+                         "--plan", "--traffic", "poisson",
+                         "--fitness-backend", "pallas"])
+    serve_mod.main()
+    out = capsys.readouterr().out
+    plans = captured["plans"]
+    assert plans and all(p.backend == "pallas" for p in plans)
+    assert "(backend=pallas)" in out
+    assert "poisson traffic" in out

@@ -1,0 +1,368 @@
+"""Pallas traffic-replay kernel (kernels.traffic_sim, DESIGN.md §10):
+differential fuzzing of the four implementations of the merged-order
+FCFS replay — compacted scan, full-T scan, interpret-mode Pallas kernel,
+pure-jnp/numpy ref — against the independent discrete-event oracle from
+test_traffic, request-for-request, both fidelity modes; plus the
+merged-order compaction invariant, the padded-tail regression, and the
+backend plumbing (auto resolution, runner-cache normalization, solver
+parity across backends)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypo_compat import given, st
+from test_simulator import random_dag, random_env
+from test_traffic import traffic_np
+
+from repro.core import (PSOGAConfig, SimProblem, TRAFFIC_KINDS, merge_dags,
+                        run_pso_ga, run_pso_ga_batch, sample_arrivals,
+                        simulate_traffic_swarm, zero_contention_arrivals)
+from repro.core.batch import (pack_arrivals, pack_problems,
+                              reset_runner_cache_stats, runner_cache_stats)
+from repro.core.fitness import make_swarm_fitness
+from repro.core.simulator import pad_problem, simulate_swarm
+from repro.core.traffic import _merged_order
+from repro.kernels.ref import traffic_replay_ref
+from repro.kernels.traffic_sim import traffic_replay_folded
+
+
+def _tfields(pp):
+    """The 15 positional args shared by traffic_replay_folded and
+    traffic_replay_ref (the schedule-replay 14 + the traced num_apps)."""
+    return (pp.order, pp.compute, pp.parent_idx, pp.parent_mb, pp.child_idx,
+            pp.child_mb, pp.app_id, pp.deadline, pp.pinned, pp.power,
+            pp.cost_per_sec, pp.inv_bw, pp.tran_cost, pp.link_ok, pp.num_apps)
+
+
+def _traffic_dag(rng, sizes):
+    """Independent per-app random DAGs merged into one problem — the
+    traffic replay (and its DES oracle) requires app-disjoint dependency
+    components, which random_dag's n_apps labeling does not give."""
+    return merge_dags([random_dag(rng, sz) for sz in sizes])
+
+
+def _problem_and_arrivals(seed):
+    """Random DNN + random fleet + random arrival trace, LOOSELY padded
+    on every axis (layers, servers, apps) so the kernel's padded-tail
+    handling is always in play. Arrival families rotate through all
+    four generators; app rows past num_apps are +inf (padding)."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(2, 7))
+    n_apps = int(rng.integers(1, 4))
+    dag = _traffic_dag(rng, [int(rng.integers(2, 8))
+                             for _ in range(n_apps)])
+    p = dag.compute.shape[0]
+    env = random_env(rng, s)
+    prob = SimProblem.build(dag, env)
+    pp = pad_problem(prob, max_p=p + int(rng.integers(0, 9)),
+                     max_S=s + int(rng.integers(0, 4)),
+                     max_apps=n_apps + int(rng.integers(0, 3)))
+    kind = TRAFFIC_KINDS[seed % len(TRAFFIC_KINDS)]
+    R = int(rng.integers(1, 7))
+    tr = sample_arrivals(kind, n_apps, rate=0.5, horizon=15.0,
+                         max_requests=R, n_seeds=1, seed=seed)
+    t = np.asarray(tr.t[0], np.float64)
+    if not np.isfinite(t).any():
+        t[0, 0] = 0.0           # keep the replay non-trivial
+    max_apps = int(pp.deadline.shape[0])
+    arr = np.full((max_apps, R), np.inf)
+    arr[:n_apps] = t
+    return prob, pp, jnp.asarray(arr), rng
+
+
+def _swarm(rng, prob, pp, P=5):
+    max_p = int(pp.order.shape[0])
+    X = np.zeros((P, max_p), np.int32)
+    X[:, :prob.num_layers] = rng.integers(0, prob.num_servers,
+                                          size=(P, prob.num_layers))
+    return jnp.asarray(X)
+
+
+def _assert_four_way(seed, faithful):
+    """compact scan == full scan == Pallas kernel == ref == DES oracle,
+    on total cost, miss rate, latency-sum, per-request latency, and
+    (oracle aside, which has no padding concept) static feasibility."""
+    prob, pp, arr, rng = _problem_and_arrivals(seed)
+    X = _swarm(rng, prob, pp)
+    sim = simulate_traffic_swarm(pp, X, arr, faithful, compact=True)
+    simf = simulate_traffic_swarm(pp, X, arr, faithful, compact=False)
+    ker = traffic_replay_folded(*_tfields(pp), X, arr, faithful=faithful,
+                                tile_p=4, interpret=True)
+    ref = traffic_replay_ref(*_tfields(pp), X, arr, faithful=faithful)
+
+    # compaction is a pure reindexing of the same walk
+    np.testing.assert_allclose(np.asarray(sim.total_cost),
+                               np.asarray(simf.total_cost), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sim.miss_rate),
+                                  np.asarray(simf.miss_rate))
+    np.testing.assert_array_equal(np.asarray(sim.latency),
+                                  np.asarray(simf.latency))
+    np.testing.assert_array_equal(np.asarray(sim.static_ok),
+                                  np.asarray(simf.static_ok))
+
+    for name, out in (("kernel", ker), ("ref", ref)):
+        total, miss, lat_sum, static_ok, latency = out
+        np.testing.assert_allclose(np.asarray(total),
+                                   np.asarray(sim.total_cost),
+                                   rtol=2e-5, atol=1e-6, err_msg=name)
+        np.testing.assert_allclose(np.asarray(miss),
+                                   np.asarray(sim.miss_rate),
+                                   atol=1e-9, err_msg=name)
+        np.testing.assert_allclose(np.asarray(lat_sum),
+                                   np.asarray(sim.lat_sum),
+                                   rtol=2e-5, atol=1e-4, err_msg=name)
+        np.testing.assert_array_equal(np.asarray(static_ok),
+                                      np.asarray(sim.static_ok),
+                                      err_msg=name)
+        np.testing.assert_allclose(np.asarray(latency),
+                                   np.asarray(sim.latency),
+                                   rtol=2e-5, atol=1e-4, err_msg=name)
+
+    n_apps = prob.num_apps
+    arr_np = np.asarray(arr)[:n_apps]
+    for i in range(X.shape[0]):
+        des = traffic_np(prob, np.asarray(X[i, :prob.num_layers]),
+                         arr_np, faithful)
+        np.testing.assert_allclose(float(ker[0][i]), des["total_cost"],
+                                   rtol=2e-5, atol=1e-5)
+        np.testing.assert_allclose(float(ker[1][i]), des["miss_rate"],
+                                   atol=1e-9)
+        np.testing.assert_allclose(np.asarray(ker[4][i, :n_apps]),
+                                   des["latency"], rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# differential fuzz: seeded sweep + hypothesis + deep CI sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faithful", [True, False])
+@pytest.mark.parametrize("seed", range(6))
+def test_four_way_seeded(seed, faithful):
+    """Deterministic fallback sweep for environments without hypothesis."""
+    _assert_four_way(seed, faithful)
+
+
+@given(seed=st.integers(0, 10_000), faithful=st.booleans())
+def test_four_way_property(seed, faithful):
+    _assert_four_way(seed, faithful)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("faithful", [True, False])
+def test_four_way_deep_sweep(faithful):
+    """Deep fuzz tier (CI runs it; local runs skip with -m "not slow")."""
+    for seed in range(100, 116):
+        _assert_four_way(seed, faithful)
+
+
+# ---------------------------------------------------------------------------
+# degenerate arrival shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faithful", [True, False])
+def test_zero_contention_kernel_matches_single_shot(faithful):
+    """R=1 @ t=0: the kernel's queue-aware replay IS the zero-load
+    replay — total cost matches simulate_swarm on the same swarm."""
+    rng = np.random.default_rng(11)
+    dag = _traffic_dag(rng, [6, 6])
+    env = random_env(rng, 4)
+    prob = SimProblem.build(dag, env)
+    pp = pad_problem(prob)
+    arr = jnp.asarray(zero_contention_arrivals(prob.num_apps)[0])
+    X = _swarm(rng, prob, pp, P=6)
+    total, _, _, _, _ = traffic_replay_folded(
+        *_tfields(pp), X, arr, faithful=faithful, tile_p=4, interpret=True)
+    base_total, _, _ = simulate_swarm(pp, X, faithful)
+    np.testing.assert_allclose(np.asarray(total), np.asarray(base_total),
+                               rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("faithful", [True, False])
+def test_all_inf_app_contributes_nothing(faithful):
+    """An app whose every request slot is +inf (padding, or simply no
+    arrivals in the horizon) adds no steps, no latency, no misses."""
+    rng = np.random.default_rng(17)
+    dag = _traffic_dag(rng, [5, 5])
+    env = random_env(rng, 3)
+    prob = SimProblem.build(dag, env)
+    pp = pad_problem(prob)
+    arr = np.full((prob.num_apps, 3), np.inf)
+    arr[0] = [0.0, 1.5, 4.0]
+    arr = jnp.asarray(arr)
+    X = _swarm(rng, prob, pp, P=4)
+    ker = traffic_replay_folded(*_tfields(pp), X, arr, faithful=faithful,
+                                tile_p=4, interpret=True)
+    sim = simulate_traffic_swarm(pp, X, arr, faithful)
+    np.testing.assert_allclose(np.asarray(ker[0]),
+                               np.asarray(sim.total_cost),
+                               rtol=2e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ker[1]),
+                                  np.asarray(sim.miss_rate))
+    assert np.all(np.asarray(ker[4][:, 1]) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# merged-order compaction invariant
+# ---------------------------------------------------------------------------
+
+def test_merged_order_compaction():
+    """Valid steps form a contiguous prefix of length n_valid, and their
+    relative order is EXACTLY the pre-compaction merged order (the
+    unmasked-key lexsort the full-T scan used)."""
+    prob, pp, arr, _ = _problem_and_arrivals(3)
+    t_m, r_m, key_m, valid_m, n_valid = _merged_order(pp, arr)
+    t_m, r_m = np.asarray(t_m), np.asarray(r_m)
+    valid_m, nv = np.asarray(valid_m), int(n_valid)
+    assert valid_m[:nv].all() and not valid_m[nv:].any()
+    assert np.isfinite(np.asarray(key_m)[:nv]).all()
+
+    # reconstruct the old (uncompacted) order: key is the raw arrival
+    # regardless of layer validity
+    max_p = int(pp.order.shape[0])
+    R = int(arr.shape[-1])
+    valid = np.asarray(pp.order) >= 0
+    jsafe = np.where(valid, np.asarray(pp.order), 0)
+    app = np.asarray(pp.app_id)[jsafe]
+    rep_t = np.tile(np.arange(max_p), R)
+    rep_r = np.repeat(np.arange(R), max_p)
+    key_old = np.asarray(arr)[app[rep_t], rep_r]
+    perm_old = np.lexsort((rep_t, rep_r, key_old))
+    old_valid = [(int(rep_t[i]), int(rep_r[i])) for i in perm_old
+                 if valid[rep_t[i]] and np.isfinite(key_old[i])]
+    new_valid = list(zip(t_m[:nv].tolist(), r_m[:nv].tolist()))
+    assert new_valid == old_valid
+
+
+# ---------------------------------------------------------------------------
+# padded-tail regression (both backends): fitness invariant under
+# arbitrary extra padding on every axis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+@pytest.mark.parametrize("faithful", [True, False])
+def test_traffic_padding_equivalence(faithful, backend):
+    """Regression for the padded-tail bug class: max_p tiles whose tail
+    layers are padding must be no-ops inside the event walk. The traffic
+    key is invariant under extra layer/server/app padding."""
+    rng = np.random.default_rng(23)
+    dag = _traffic_dag(rng, [5, 5])
+    env = random_env(rng, 4)
+    prob = SimProblem.build(dag, env)
+    p, n_apps = prob.num_layers, prob.num_apps
+    tr = sample_arrivals("bursty", n_apps, rate=0.5, horizon=12.0,
+                         max_requests=3, n_seeds=2, seed=5)
+    X = _swarm(rng, prob, pad_problem(prob), P=6)
+    tight = pad_problem(prob)
+    base = np.asarray(make_swarm_fitness(
+        tight, faithful, backend, arrivals=jnp.asarray(tr.t),
+        miss_budget=0.5)(X))
+    for max_p, max_S, max_apps in ((16, 6, 2), (32, 11, 4)):
+        loose = pad_problem(prob, max_p=max_p, max_S=max_S,
+                            max_apps=max_apps)
+        arr = np.full((tr.t.shape[0], max_apps, 3), np.inf)
+        arr[:, :n_apps] = tr.t
+        Xp = jnp.zeros((6, max_p), jnp.int32).at[:, :p].set(X)
+        out = np.asarray(make_swarm_fitness(
+            loose, faithful, backend, arrivals=jnp.asarray(arr),
+            miss_budget=0.5)(Xp))
+        np.testing.assert_allclose(out, base, rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend plumbing: auto resolution, runner-cache normalization, solver
+# parity
+# ---------------------------------------------------------------------------
+
+def test_auto_resolves_to_scan_traffic():
+    """On this CPU-only host "auto" resolves to the scan path — the
+    traffic keys are bit-identical, not merely close."""
+    prob, pp, arr, rng = _problem_and_arrivals(7)
+    X = _swarm(rng, prob, pp)
+    arrivals = arr[None]
+    a = make_swarm_fitness(pp, True, "scan", arrivals=arrivals,
+                           miss_budget=0.5)(X)
+    b = make_swarm_fitness(pp, True, "auto", arrivals=arrivals,
+                           miss_budget=0.5)(X)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_runner_cache_backend_normalized():
+    """_fleet_runner normalizes the backend string before keying its
+    cache: re-solving with "scan" after "auto" (which resolves to scan
+    here) is a pure cache hit — no new trace, no new compile."""
+    rng = np.random.default_rng(31)
+    probs = []
+    arrs = []
+    for k in range(2):
+        dag = _traffic_dag(rng, [4] * (1 + k))
+        env = random_env(rng, 4)
+        probs.append(SimProblem.build(dag, env))
+        arrs.append(np.sort(rng.uniform(0.0, 10.0, size=(2, 1 + k, 3)),
+                            axis=-1))
+    cfg = PSOGAConfig(pop_size=12, max_iters=7, stall_iters=3,
+                      fitness_backend="auto")
+    reset_runner_cache_stats()
+    ra = run_pso_ga_batch(probs, cfg, seed=0, arrivals=arrs)
+    s1 = dict(runner_cache_stats())
+    rb = run_pso_ga_batch(probs,
+                          dataclasses.replace(cfg, fitness_backend="scan"),
+                          seed=0, arrivals=arrs)
+    s2 = dict(runner_cache_stats())
+    assert s2["misses"] == s1["misses"]
+    assert s2["traces"] == s1["traces"]
+    assert s2["hits"] > s1["hits"]
+    for a, b in zip(ra, rb):
+        assert a.best_fitness == b.best_fitness
+        assert np.array_equal(a.best_x, b.best_x)
+
+
+def test_traffic_solver_backend_parity():
+    """Full PSO-GA traffic solves agree across backends (same seed,
+    same iterations, fitness to float32 round-off)."""
+    cfg = PSOGAConfig(pop_size=16, max_iters=24, stall_iters=9)
+    rng = np.random.default_rng(2)
+    dag = _traffic_dag(rng, [4, 4])
+    env = random_env(rng, 4)
+    tr = sample_arrivals("poisson", 2, rate=0.5, horizon=12.0,
+                         max_requests=3, n_seeds=2, seed=3)
+    arr = jnp.asarray(tr.t)
+    a = run_pso_ga(dag, env, cfg, seed=0, arrivals=arr)
+    b = run_pso_ga(dag, env,
+                   dataclasses.replace(cfg, fitness_backend="pallas"),
+                   seed=0, arrivals=arr)
+    assert a.best_fitness == pytest.approx(b.best_fitness, rel=2e-5)
+    assert a.iterations == b.iterations
+
+
+def test_fleet_vmap_kernel_matches_scan():
+    """The kernel composes with the fleet vmap (pack_problems /
+    pack_arrivals) exactly like the scan backend does."""
+    import jax
+    rng = np.random.default_rng(41)
+    probs, arrs = [], []
+    for k in range(2):
+        dag = _traffic_dag(rng, [4 + k] * (1 + k))
+        env = random_env(rng, 3 + k)
+        probs.append(SimProblem.build(dag, env))
+        arrs.append(np.sort(rng.uniform(0.0, 8.0, size=(1 + k, 2)),
+                            axis=-1))
+    packed = pack_problems(probs)
+    max_apps = int(packed.deadline.shape[-1])
+    arr = pack_arrivals([a[None] for a in arrs], max_apps)[:, 0]
+    max_p = int(packed.order.shape[-1])
+    X = jnp.asarray(rng.integers(0, 3, size=(2, 4, max_p)), jnp.int32)
+
+    def kernel_one(pp, x, a):
+        return traffic_replay_folded(*_tfields(pp), x, a, faithful=True,
+                                     tile_p=4, interpret=True)[:4]
+
+    def scan_one(pp, x, a):
+        sim = simulate_traffic_swarm(pp, x, a, True)
+        return sim.total_cost, sim.miss_rate, sim.lat_sum, sim.static_ok
+
+    got = jax.vmap(kernel_one)(packed, X, arr)
+    want = jax.vmap(scan_one)(packed, X, arr)
+    for g, w, name in zip(got, want, ("total", "miss", "lat", "ok")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=1e-6, err_msg=name)
