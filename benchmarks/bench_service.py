@@ -1,0 +1,209 @@
+"""Always-on planning service benchmark (DESIGN.md §11, EXPERIMENTS.md
+§Service): the fault-tolerance story in numbers.
+
+  * time-to-plan   — p50/p99/max wall seconds per service round, clean
+    vs chaos (the SLO the watchdog budgets against)
+  * availability   — fraction of problem-rounds served a valid plan
+    while the chaos harness injects solver crashes, NaN env snapshots,
+    a mid-round node loss, and a simulated stall (bar: >= 99%)
+  * fallback mix   — problem-rounds served per ladder rung
+    (warm / burst / pinned / heft / greedy / reject)
+  * deadline triage — p95 deadline-miss rate of the SAVABLE apps under
+    a shared request stream, admission control on vs off: rejecting
+    apps whose deadline even HEFT cannot meet keeps their requests out
+    of the shared FCFS queues the admitted apps ride (DESIGN.md §10)
+
+Every run writes ``BENCH_service.json`` so the trajectory is tracked
+across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import (ChaosConfig, PSOGAConfig, ReplanConfig,
+                        ServiceConfig, SimProblem, TrafficConfig,
+                        heft_makespan, merge_dags, paper_environment,
+                        run_service, runner_cache_stats, sample_trace,
+                        traffic_replay, zero_drift_trace, zoo)
+
+from .bench_online import _json_safe, make_fleet
+from .common import bench_metadata, print_csv
+
+#: CPU-friendly service solver (the warm rung)
+SERVICE_CFG = PSOGAConfig(pop_size=32, max_iters=120, stall_iters=30)
+
+
+def run_availability_cell(kind: str, n: int, rounds: int, seed: int,
+                          chaos: bool):
+    """One service run, clean or under the full chaos suite."""
+    env = paper_environment()
+    dags = make_fleet(n, env)
+    trace = sample_trace(kind, env, rounds=rounds, seed=seed)
+    ccfg = None
+    if chaos:
+        last = rounds - 1
+        ccfg = ChaosConfig(
+            crash_rounds=(min(2, last),), p_crash=0.1, seed=seed,
+            nan_env_rounds=(min(3, last),),
+            stall_rounds=(min(5, last),), stall_s=20.0,
+            mid_round_down={min(6, last): env.num_servers - 1})
+    cfg = ServiceConfig(replan=ReplanConfig(pso=SERVICE_CFG),
+                        retries=2, treat_stalls_as_failures=True,
+                        straggler_warmup=2, chaos=ccfg)
+    rep = run_service(dags, trace, cfg, seed=seed,
+                      sleeper=lambda s: None)
+    s = rep.summary()
+    row = {
+        "cell": "chaos" if chaos else "clean", "kind": kind,
+        "n_problems": n, "rounds": rounds,
+        "availability": s["availability"],
+        "ttp_p50_s": s["time_to_plan_s"]["p50"],
+        "ttp_p99_s": s["time_to_plan_s"]["p99"],
+        "ttp_max_s": s["time_to_plan_s"]["max"],
+    }
+    for rung, cnt in s["fallback_counts"].items():
+        row[f"rung_{rung}"] = cnt
+    return row, s
+
+
+def _savable_miss_p95(prob, plan, ev, savable, faithful):
+    """p95 (across eval seeds) of the savable apps' deadline-miss rate."""
+    res = traffic_replay(prob, plan, ev, faithful=faithful)
+    n_apps = savable.shape[0]
+    miss = np.asarray(res.miss)[:, :n_apps, :][:, savable, :]
+    valid = np.isfinite(np.asarray(ev, float))[:, savable, :]
+    rates = miss.sum(axis=(1, 2)) / np.maximum(valid.sum(axis=(1, 2)), 1)
+    return float(np.percentile(rates, 95))
+
+
+def run_triage_cell(rounds: int, seed: int):
+    """Admission control on vs off, same fleet, same request stream.
+
+    Each problem merges a savable app (deadline 1.5x HEFT) with a
+    doomed one (deadline 0.3x HEFT completion — unmeetable even by a
+    makespan-minimizing schedule). Without triage the doomed app's
+    requests sit in the shared FCFS queues ahead of savable work."""
+    env = paper_environment()
+    tc = TrafficConfig(rate=1.0, horizon=20.0, max_requests=6,
+                       mc_solver=2, mc_eval=12)
+    dags, savable_masks = [], []
+    for i, (a, b) in enumerate((("alexnet", "googlenet"),
+                                ("googlenet", "alexnet"))):
+        parts = []
+        for j, (net, ratio) in enumerate(((a, 1.5), (b, 0.3))):
+            d = zoo.build(net, pin_server=(2 * i + j) % 10)
+            h, _ = heft_makespan(d, env)
+            parts.append(d.with_deadline(np.array([ratio * h])))
+        dags.append(merge_dags(parts))
+        savable_masks.append(np.array([True, False]))
+    trace = zero_drift_trace(env, rounds=rounds)
+    rcfg = ReplanConfig(pso=SERVICE_CFG, traffic=tc)
+
+    out = {}
+    for arm, margin in (("no_triage", 0.0), ("triage", 1.0)):
+        rep = run_service(dags, trace, ServiceConfig(replan=rcfg,
+                                                     triage_margin=margin),
+                          seed=seed)
+        p95s = []
+        for i, (dag, mask) in enumerate(zip(dags, savable_masks)):
+            prob = SimProblem.build(dag, env)
+            ev = np.asarray(tc.eval_arrivals(dag.num_apps,
+                                             seed=seed + 31 * i), float)
+            if margin > 0.0:
+                # rejected apps never enter the system: mask their
+                # eval arrivals exactly like the service masks the
+                # solver's (DESIGN.md §11)
+                ev = ev.copy()
+                ev[:, ~mask, :] = np.inf
+            p95s.append(_savable_miss_p95(prob, rep.plans[i], ev, mask,
+                                          SERVICE_CFG.faithful_sim))
+        out[arm] = {
+            "savable_miss_p95": float(np.mean(p95s)),
+            "rejected_apps": rep.counters["rejected_apps"],
+            "availability": rep.availability(),
+        }
+    row = {
+        "cell": "triage", "kind": "zero-drift", "n_problems": len(dags),
+        "rounds": rounds,
+        "no_triage_miss_p95": out["no_triage"]["savable_miss_p95"],
+        "triage_miss_p95": out["triage"]["savable_miss_p95"],
+        "rejected_apps": out["triage"]["rejected_apps"],
+    }
+    return row, out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=6,
+                    help="fleet size for the availability cells")
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="drift events per service run")
+    ap.add_argument("--kind", default="node-loss",
+                    help="drift family for the chaos cell")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_service.json",
+                    help="machine-readable results ('' to disable)")
+    args = ap.parse_args()
+
+    rows, details = [], {}
+    clean_row, clean = run_availability_cell(
+        "wifi-fade", args.n, args.rounds, args.seed, chaos=False)
+    rows.append(clean_row)
+    details["clean"] = clean
+    print(f"# clean: availability {clean_row['availability']:.4f}, "
+          f"time-to-plan p50 {clean_row['ttp_p50_s']:.2f}s "
+          f"p99 {clean_row['ttp_p99_s']:.2f}s", flush=True)
+
+    chaos_row, chaos = run_availability_cell(
+        args.kind, args.n, args.rounds, args.seed, chaos=True)
+    rows.append(chaos_row)
+    details["chaos"] = chaos
+    ok = chaos_row["availability"] >= 0.99
+    print(f"# chaos ({args.kind}): availability "
+          f"{chaos_row['availability']:.4f} (bar >= 0.99) "
+          f"-> {'PASS' if ok else 'MISS'}, fallbacks "
+          f"{chaos['fallback_counts']}, counters {chaos['counters']}",
+          flush=True)
+
+    triage_row, triage = run_triage_cell(max(4, args.rounds // 2),
+                                         args.seed)
+    rows.append(triage_row)
+    details["triage"] = triage
+    print(f"# triage: savable-app miss p95 "
+          f"{triage_row['no_triage_miss_p95']:.3f} -> "
+          f"{triage_row['triage_miss_p95']:.3f} with admission control "
+          f"({triage_row['rejected_apps']} app-rounds rejected)",
+          flush=True)
+
+    avail_rows = [clean_row, chaos_row]
+    print_csv(avail_rows, ["cell", "kind", "n_problems", "rounds",
+                           "availability", "ttp_p50_s", "ttp_p99_s",
+                           "ttp_max_s"]
+              + [f"rung_{r}" for r in sorted(
+                  k[5:] for k in clean_row if k.startswith("rung_"))])
+    print_csv([triage_row], ["cell", "kind", "n_problems", "rounds",
+                             "no_triage_miss_p95", "triage_miss_p95",
+                             "rejected_apps"])
+    if args.json:
+        payload = {
+            "bench": "bench_service",
+            "meta": bench_metadata(seeds=[args.seed]),
+            "device": jax.devices()[0].platform,
+            "pso": {"pop_size": SERVICE_CFG.pop_size,
+                    "max_iters": SERVICE_CFG.max_iters,
+                    "stall_iters": SERVICE_CFG.stall_iters},
+            "runner_cache": runner_cache_stats(),
+            "cells": rows,
+            "details": details,
+        }
+        with open(args.json, "w") as f:
+            json.dump(_json_safe(payload), f, indent=2, allow_nan=False)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

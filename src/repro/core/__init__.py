@@ -17,6 +17,9 @@ Public surface:
   * traffic / sample_arrivals / traffic_replay — request-stream workload
                                               engine and contention-aware
                                               planning (DESIGN.md §10)
+  * service / run_service                   — fault-tolerant always-on
+                                              planning service
+                                              (DESIGN.md §11)
 """
 from .dag import LayerDAG, merge_dags, preprocess, topological_order
 from .environment import (CLOUD, DEVICE, EDGE, Environment,
@@ -31,8 +34,10 @@ from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga, swarm_step
 from .batch import (pack_arrivals, pack_problems, run_pso_ga_batch,
                     runner_cache_stats, reset_runner_cache_stats)
 from .online import (DriftEvent, EnvTrace, OnlineReport, ReplanConfig,
-                     RoundLog, TRACE_KINDS, replan_fleet, replan_round,
-                     sample_trace, zero_drift_trace)
+                     RoundLog, TRACE_KINDS, plan_is_valid, replan_fleet,
+                     replan_round, sample_trace, zero_drift_trace)
+from .service import (ChaosConfig, LADDER_RUNGS, ServiceConfig,
+                      ServiceReport, ServiceRoundLog, run_service)
 from .traffic import (ArrivalTrace, TRAFFIC_KINDS, TrafficConfig,
                       TrafficResult, sample_arrivals,
                       simulate_traffic_swarm, traffic_replay,
@@ -57,8 +62,10 @@ __all__ = [
     "pack_arrivals", "pack_problems", "run_pso_ga_batch",
     "runner_cache_stats", "reset_runner_cache_stats",
     "DriftEvent", "EnvTrace", "OnlineReport", "ReplanConfig", "RoundLog",
-    "TRACE_KINDS", "replan_fleet", "replan_round", "sample_trace",
-    "zero_drift_trace",
+    "TRACE_KINDS", "plan_is_valid", "replan_fleet", "replan_round",
+    "sample_trace", "zero_drift_trace",
+    "ChaosConfig", "LADDER_RUNGS", "ServiceConfig", "ServiceReport",
+    "ServiceRoundLog", "run_service",
     "ArrivalTrace", "TRAFFIC_KINDS", "TrafficConfig", "TrafficResult",
     "sample_arrivals", "simulate_traffic_swarm", "traffic_replay",
     "traffic_stats", "zero_contention_arrivals",

@@ -253,6 +253,12 @@ def pack_arrivals(arrivals: Sequence[np.ndarray],
         if a.shape[1] > max_apps:
             raise ValueError(f"arrivals[{i}] has {a.shape[1]} apps > "
                              f"packed max_apps {max_apps}")
+        # +inf is the legal "no more requests" pad; NaN or negative
+        # timestamps are corrupt draws and must not reach the kernel
+        # (where they'd silently poison every merged-order replay).
+        if np.isnan(a).any() or (a < 0.0).any():
+            raise ValueError(f"arrivals[{i}] contains NaN or negative "
+                             f"request times")
     out = np.full((len(mats), m0, max_apps, r0), np.inf)
     for i, a in enumerate(mats):
         out[i, :, :a.shape[1], :] = a
@@ -285,7 +291,11 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         incumbent's neighborhood (``init_swarm`` incumbent mode) and the
         fitness pays ``migration_weight`` × the Eq. 6 input-dataset cost
         for every moved layer. ``None`` is a cold solve — bit-identical
-        to the pre-warm-start solver, via the SAME compiled runner.
+        to the pre-warm-start solver, via the SAME compiled runner. A
+        per-problem entry of ``None`` demotes only that problem to a
+        cold solve (stale-plan guard, DESIGN.md §11): its swarm draws
+        the cold init and its migration weight is zeroed, while the
+        rest of the fleet stays warm.
       migration_weight: scalar or per-problem migration-cost weights
         (ignored without ``incumbent``).
       warm_rescue: per-problem flags (with ``incumbent`` only): seed the
@@ -331,7 +341,7 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         keys.append(np.asarray(key))
         inc_i = None
         rescue_i = False
-        if incumbent is not None:
+        if incumbent is not None and incumbent[i] is not None:
             inc_i = np.asarray(incumbent[i], np.int32)
             if inc_i.shape != (pr.num_layers,):
                 raise ValueError(
@@ -340,6 +350,12 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
             incb[i, :pr.num_layers] = inc_i
             rescue_i = bool(warm_rescue[i]) if warm_rescue is not None \
                 else False
+        elif incumbent is not None:
+            # a demoted problem (stale incumbent, DESIGN.md §11) solves
+            # cold inside the warm fleet: zero migration weight
+            # multiplies the term away bit-exactly, and init_swarm gets
+            # no incumbent — identical to a cold solve of problem i.
+            migb[i] = 0.0
         X0b[i, :, :pr.num_layers] = np.asarray(
             init_swarm(k_init, pr, cfg, incumbent=inc_i,
                        rescue=rescue_i))

@@ -50,7 +50,7 @@ from .traffic import TrafficConfig
 __all__ = ["DriftEvent", "EnvTrace", "ReplanConfig", "RoundLog",
            "OnlineReport", "sample_trace", "zero_drift_trace",
            "replan_round", "replan_fleet", "TRACE_KINDS",
-           "incumbent_keys", "migration_cost_np"]
+           "incumbent_keys", "migration_cost_np", "plan_is_valid"]
 
 TRACE_KINDS = ("wifi-fade", "congestion", "spot-price", "node-loss",
                "load-surge")
@@ -78,6 +78,44 @@ class DriftEvent:
     down: np.ndarray             # (S,)  bool — server churned out
     load_scale: float = 1.0      # on request arrival rate (traffic)
 
+    def __post_init__(self):
+        # malformed drift events must die HERE, not as NaN keys inside a
+        # jitted fitness or a shape error three modules away (the
+        # service's chaos harness feeds snapshots through this gate,
+        # DESIGN.md §11).
+        object.__setattr__(self, "bw_scale",
+                           np.asarray(self.bw_scale, np.float64))
+        object.__setattr__(self, "power_scale",
+                           np.asarray(self.power_scale, np.float64))
+        object.__setattr__(self, "price_scale",
+                           np.asarray(self.price_scale, np.float64))
+        object.__setattr__(self, "down", np.asarray(self.down, bool))
+        s = self.down.shape[0] if self.down.ndim == 1 else -1
+        if s < 1 or self.bw_scale.shape != (s, s) \
+                or self.power_scale.shape != (s,) \
+                or self.price_scale.shape != (s,):
+            raise ValueError(
+                f"malformed drift event {self.label!r}: expected "
+                f"bw_scale (S, S) with power/price/down (S,), got "
+                f"bw={self.bw_scale.shape} power={self.power_scale.shape} "
+                f"price={self.price_scale.shape} down={self.down.shape}")
+        for name in ("bw_scale", "power_scale", "price_scale"):
+            arr = getattr(self, name)
+            if not np.all(np.isfinite(arr)) or np.any(arr < 0.0):
+                raise ValueError(f"drift event {self.label!r}: {name} "
+                                 f"must be finite and >= 0")
+        if not np.isfinite(self.t) or self.t < 0.0:
+            raise ValueError(f"drift event {self.label!r}: t must be a "
+                             f"finite time >= 0, got {self.t!r}")
+        if not np.isfinite(self.load_scale) or self.load_scale <= 0.0:
+            raise ValueError(f"drift event {self.label!r}: load_scale "
+                             f"must be finite and > 0, "
+                             f"got {self.load_scale!r}")
+
+    @property
+    def num_servers(self) -> int:
+        return int(self.down.shape[0])
+
     def is_identity(self) -> bool:
         return (not self.down.any()
                 and np.all(self.bw_scale == 1.0)
@@ -98,6 +136,19 @@ class EnvTrace:
     """
     base: Environment
     events: Tuple[DriftEvent, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        if not self.events:
+            raise ValueError("EnvTrace needs at least one event "
+                             "(round 0 is the admission-time epoch)")
+        s = self.base.num_servers
+        for k, ev in enumerate(self.events):
+            if ev.num_servers != s:
+                raise ValueError(
+                    f"EnvTrace event {k} ({ev.label!r}) is sized for "
+                    f"{ev.num_servers} servers but the base environment "
+                    f"has {s} — shapes must never change across a trace")
 
     @property
     def num_rounds(self) -> int:
@@ -170,6 +221,14 @@ def sample_trace(kind: str, env: Environment, rounds: int,
     if kind not in TRACE_KINDS:
         raise ValueError(f"unknown trace kind {kind!r} "
                          f"(expected one of {TRACE_KINDS})")
+    if int(rounds) < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds!r}")
+    if not np.isfinite(period) or period <= 0.0:
+        raise ValueError(f"period must be a positive finite number of "
+                         f"seconds, got {period!r}")
+    if not np.isfinite(severity) or not 0.0 < severity <= 1.0:
+        raise ValueError(f"severity must be finite in (0, 1], "
+                         f"got {severity!r}")
     rng = np.random.default_rng(seed)
     s = env.num_servers
     tier = np.asarray(env.tier)
@@ -251,6 +310,10 @@ class RoundLog(NamedTuple):
     #   was found (it − stall at exit: the stopping rule then confirms it
     #   for stall_iters more) — the warm-vs-cold convergence metric
     wall_s: float                # replan wall-clock for the round
+    demoted: np.ndarray = None   # (N,) bool — incumbent failed the
+    #   stale-plan guard (plan_is_valid) and was cold-started instead of
+    #   warm-seeded (DESIGN.md §11); its migration is 0 and moved_layers
+    #   counts the full plan
 
 
 @dataclasses.dataclass
@@ -303,6 +366,39 @@ def migration_cost_np(prob: SimProblem, old: np.ndarray,
                                  input_mb * prob.tran_cost[old, new], 0.0)))
 
 
+def plan_is_valid(prob: SimProblem, plan) -> bool:
+    """Static validity of one assignment under ``prob``'s environment.
+
+    True iff ``plan`` is a 1-d integral vector of shape
+    ``(num_layers,)`` whose genes are in ``[0, num_servers)``, honor the
+    pins, and route every real DAG edge over a live link (``link_ok`` or
+    same-server). This is the stale-plan guard's gate (DESIGN.md §11):
+    anything that fails here must not warm-seed a swarm — a stale
+    incumbent after node churn, a NaN-poisoned array, a plan sized for a
+    different fleet. It deliberately does NOT check deadlines or cost —
+    a deadline-stranded incumbent is still a legal warm seed (the rescue
+    path handles it); garbage is not.
+    """
+    x = np.asarray(plan)
+    if x.ndim != 1 or x.shape[0] != prob.num_layers:
+        return False
+    if not np.issubdtype(x.dtype, np.integer):
+        if not np.all(np.isfinite(x)) or not np.all(x == np.floor(x)):
+            return False
+    x = x.astype(np.int64)
+    if np.any(x < 0) or np.any(x >= prob.num_servers):
+        return False
+    if np.any((prob.pinned >= 0) & (x != prob.pinned)):
+        return False
+    # every real parent edge must ride an OK link (same-server is free)
+    pj = np.asarray(prob.parent_idx)
+    real = pj >= 0
+    src = x[np.where(real, pj, 0)]                 # (p, max_in)
+    dst = x[:, None]
+    edge_ok = np.asarray(prob.link_ok)[src, dst] | (src == dst)
+    return bool(np.all(edge_ok | ~real))
+
+
 def incumbent_keys(probs: Sequence[SimProblem],
                    incumbent: Sequence[np.ndarray],
                    cfg: PSOGAConfig,
@@ -312,20 +408,30 @@ def incumbent_keys(probs: Sequence[SimProblem],
     (no migration term: keeping the incumbent moves nothing). With
     ``arrivals`` (per-problem Monte-Carlo draws) the keys are the
     queue-aware traffic keys under ``cfg.miss_budget`` (DESIGN.md §10).
+    A ``None`` entry (a demoted incumbent, DESIGN.md §11) keys as +inf —
+    any candidate strictly beats it.
     """
     ppb = pack_problems(probs)
     max_p = int(ppb.compute.shape[1])
     Xb = np.zeros((len(probs), max_p), np.int32)
+    missing = np.zeros(len(probs), bool)
     for i, (pr, inc) in enumerate(zip(probs, incumbent)):
-        Xb[i, :pr.num_layers] = np.asarray(inc, np.int32)
+        if inc is None:
+            missing[i] = True
+        else:
+            Xb[i, :pr.num_layers] = np.asarray(inc, np.int32)
     if arrivals is not None:
         arrb = jnp.asarray(pack_arrivals(arrivals,
                                          int(ppb.deadline.shape[1])))
-        return np.asarray(_fleet_keys_traffic(
+        keys = np.array(_fleet_keys_traffic(
             ppb, jnp.asarray(Xb), arrb, cfg.faithful_sim,
             cfg.fitness_backend, cfg.miss_budget))
-    return np.asarray(_fleet_keys(ppb, jnp.asarray(Xb), cfg.faithful_sim,
-                                  cfg.fitness_backend))
+    else:
+        keys = np.array(_fleet_keys(ppb, jnp.asarray(Xb),
+                                    cfg.faithful_sim,
+                                    cfg.fitness_backend))
+    keys[missing] = np.inf
+    return keys
 
 
 def replan_round(probs: Sequence[SimProblem],
@@ -356,7 +462,20 @@ def replan_round(probs: Sequence[SimProblem],
     """
     n = len(probs)
     t0 = time.perf_counter()
-    inc_key = incumbent_keys(probs, incumbent, cfg.pso,
+    # stale-plan guard (DESIGN.md §11): an incumbent that fails static
+    # validity under the CURRENT environment — wrong shape, NaN genes,
+    # out-of-range server, broken pin, or an edge over a severed link —
+    # must not warm-seed a swarm. Demote it to a cold solve instead of
+    # rescuing garbage.
+    checked: List[Optional[np.ndarray]] = []
+    demoted = np.zeros(n, bool)
+    for i, (pr, inc) in enumerate(zip(probs, incumbent)):
+        if inc is not None and plan_is_valid(pr, inc):
+            checked.append(np.asarray(inc, np.int32))
+        else:
+            demoted[i] = True
+            checked.append(None)
+    inc_key = incumbent_keys(probs, checked, cfg.pso,
                              arrivals=arrivals)
     # an incumbent stranded infeasible by the drift gets the cold tier
     # anchors back in its swarm tail (init_swarm rescue mode): recovery
@@ -364,7 +483,7 @@ def replan_round(probs: Sequence[SimProblem],
     # incumbents keep the pure (faster-converging) neighborhood seeding.
     rescue = inc_key >= INFEASIBLE_OFFSET
     cand, state = run_pso_ga_batch(probs, cfg.pso, seed=seed,
-                                   incumbent=incumbent,
+                                   incumbent=checked,
                                    migration_weight=cfg.migration_weight,
                                    warm_rescue=rescue,
                                    return_state=True,
@@ -384,12 +503,15 @@ def replan_round(probs: Sequence[SimProblem],
     # confirming it.
     converge = np.maximum(
         iters - np.asarray(state.stall, np.int64), 0)
-    for i, (pr, inc, c) in enumerate(zip(probs, incumbent, cand)):
-        inc = np.asarray(inc, np.int32)
-        if c.best_fitness < inc_key[i]:            # strict improvement
+    for i, (pr, inc, c) in enumerate(zip(probs, checked, cand)):
+        if demoted[i] or c.best_fitness < inc_key[i]:  # strict improvement
             replanned[i] = True
             plans.append(np.asarray(c.best_x, np.int32))
-            mig[i] = migration_cost_np(pr, inc, plans[-1])
+            # a demoted problem pays no migration: the incumbent was
+            # garbage, so the candidate is a fresh deployment, not a
+            # plan delta.
+            mig[i] = 0.0 if demoted[i] \
+                else migration_cost_np(pr, inc, plans[-1])
             if arrivals is not None:
                 # traffic keys: feasibility and $ come from the key
                 # (strip the migration term back off for the raw cost)
@@ -400,7 +522,8 @@ def replan_round(probs: Sequence[SimProblem],
             else:
                 cost[i] = c.best_cost
                 feas[i] = c.feasible
-            moved[i] = int(np.sum(plans[-1] != inc))
+            moved[i] = pr.num_layers if demoted[i] \
+                else int(np.sum(plans[-1] != inc))
         else:
             plans.append(inc)
             # keeping the incumbent: its key IS its raw cost if feasible
@@ -410,7 +533,8 @@ def replan_round(probs: Sequence[SimProblem],
                    incumbent_key=inc_key, candidate_key=cand_key,
                    cost=cost, migration=mig, feasible=feas,
                    moved_layers=moved, iterations=iters,
-                   converge_iters=converge, wall_s=wall)
+                   converge_iters=converge, wall_s=wall,
+                   demoted=demoted)
     return plans, log
 
 

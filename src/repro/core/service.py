@@ -1,0 +1,521 @@
+"""Fault-tolerant always-on planning service (DESIGN.md §11).
+
+``replan_fleet`` (DESIGN.md §9) is a batch loop: hand it a complete
+drift trace, get back every round's plans. A deployed planner doesn't
+get that luxury — it runs *forever*, ingests arrivals as they happen,
+and its failure modes are the interesting part: the solver crashes, an
+environment snapshot arrives NaN-poisoned, a node churns out between
+solve and deploy, a solve stalls past the time-to-plan SLO. This module
+wraps the PR-3/PR-4 machinery in the supervision layer that makes it
+deployable:
+
+  * **service loop** — ``run_service`` drives a fleet through an
+    ``EnvTrace`` one round at a time, warm-starting from the surviving
+    plans exactly like ``replan_fleet``; with every protection disabled
+    its output is bit-identical to the batch loop (the parity invariant,
+    tested in tests/test_service.py).
+  * **streaming rate estimation** — with ``estimate_rates`` the service
+    ignores the trace's ``load_scale`` and instead *observes* one
+    arrival draw per round, slides it into a bounded window
+    (``_RateWindow``), and solves against arrivals resampled at the
+    estimated rate — the planner reacts to the workload it actually
+    sees, not to a generator it was promised.
+  * **solver watchdog** — an ``EwmaEstimator`` of per-iteration solve
+    seconds converts the remaining SLO slack into an iteration budget;
+    a budget below a rung's ``max_iters`` demotes the round down the
+    ladder *before* the solve starts (cheaper than killing it mid-way,
+    and it never retraces: rungs are two FIXED configs, not a per-round
+    ``max_iters``, so the compiled-runner cache stays at two entries).
+  * **graceful-degradation ladder** — warm PSO → short-burst PSO →
+    HEFT → greedy → reject. Every rung's plan must pass ``_plan_ok``
+    (static validity via ``plan_is_valid`` + finite simulated cost)
+    under the environment it will actually run on before promotion;
+    per-rung counts land in ``ServiceReport.fallback_counts``.
+  * **admission control / deadline triage** — ``triage_margin`` rejects
+    apps whose deadline not even a HEFT makespan-minimizing schedule
+    could meet: their arrival slots are masked to +inf so they never
+    poison the shared FCFS queues the admitted apps ride
+    (DESIGN.md §10), instead of dragging every co-scheduled request
+    over its deadline.
+  * **chaos harness** — ``ChaosConfig`` wires ``runtime.fault``'s
+    ``FailureInjector`` and ``runtime.straggler``'s detector into the
+    loop: injected solver crashes (retried with backoff, then circuit-
+    broken), NaN env snapshots (rejected by ``_env_ok``, last-good env
+    substituted), mid-round node loss (plans re-validated against the
+    post-drift environment, invalid ones re-laddered), and solve stalls
+    (flagged by the straggler detector, optionally treated as solver
+    failures). The ``CircuitBreaker`` pins the last-good plans while
+    open and half-open-probes its way back.
+
+Everything is deterministic given the seed: injected failures fire at
+configured rounds, backoff sleeps go through an injectable sleeper, and
+the breaker runs on round numbers, not wall clocks.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (Dict, List, Mapping, NamedTuple, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from ..runtime.fault import (CircuitBreaker, FailureInjector,
+                             SimulatedFailure, retry_with_backoff)
+from ..runtime.straggler import EwmaEstimator, StragglerDetector
+from .baselines import greedy_offload, heft_makespan
+from .batch import run_pso_ga_batch
+from .dag import LayerDAG
+from .environment import Environment
+from .online import (EnvTrace, ReplanConfig, RoundLog, _round_arrivals,
+                     plan_is_valid, replan_round)
+from .pso_ga import PSOGAConfig, PSOGAResult
+from .simulator import SimProblem, simulate_np
+
+__all__ = ["ChaosConfig", "ServiceConfig", "ServiceRoundLog",
+           "ServiceReport", "run_service", "LADDER_RUNGS"]
+
+#: the graceful-degradation ladder, best rung first. ``pinned`` is the
+#: circuit-breaker rung (serve the last-good plan without solving).
+LADDER_RUNGS = ("warm", "burst", "pinned", "heft", "greedy", "reject")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Deterministic fault injection for the service loop.
+
+    ``crash_rounds`` / ``p_crash`` feed a ``FailureInjector`` whose
+    ``maybe_fail`` runs at the top of every solve attempt — a configured
+    round crashes the first attempt and (having fired) lets the retry
+    through, while ``p_crash`` failures are persistent enough to exhaust
+    retries and trip the breaker. ``nan_env_rounds`` poison the round's
+    environment snapshot with NaN bandwidth before validation;
+    ``stall_rounds`` add ``stall_s`` simulated seconds to the measured
+    solve time (nothing actually sleeps); ``mid_round_down`` churns a
+    server out AFTER the round's solve, so the freshly-accepted plans
+    must survive re-validation against an environment they never saw.
+    """
+    crash_rounds: Tuple[int, ...] = ()
+    p_crash: float = 0.0
+    seed: int = 0
+    max_crashes: int = 1_000_000
+    nan_env_rounds: Tuple[int, ...] = ()
+    stall_rounds: Tuple[int, ...] = ()
+    stall_s: float = 30.0
+    mid_round_down: Mapping[int, int] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        if not np.isfinite(self.p_crash) or not 0.0 <= self.p_crash <= 1.0:
+            raise ValueError(f"p_crash must be in [0, 1], "
+                             f"got {self.p_crash!r}")
+        if not np.isfinite(self.stall_s) or self.stall_s < 0.0:
+            raise ValueError(f"stall_s must be finite and >= 0, "
+                             f"got {self.stall_s!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of the always-on planning service (DESIGN.md §11).
+
+    The defaults disable every protection that could change plans —
+    ``slo_s`` infinite (watchdog never cuts), ``triage_margin`` 0
+    (admit everything), ``estimate_rates`` off (the solver sees the
+    trace's own arrivals), no chaos — which is exactly the configuration
+    under which ``run_service`` is bit-identical to ``replan_fleet``.
+    """
+    replan: ReplanConfig = ReplanConfig()
+    #: the short-burst rung's solver. A FIXED config (not a per-round
+    #: ``max_iters``) so the fleet-runner cache holds exactly two
+    #: compiled programs, warm + burst, instead of one per budget.
+    burst: PSOGAConfig = PSOGAConfig(pop_size=16, max_iters=24,
+                                     stall_iters=12)
+    slo_s: float = float("inf")     # per-round time-to-plan SLO (s)
+    triage_margin: float = 0.0      # reject app if margin·HEFT > deadline
+    estimate_rates: bool = False    # solve on observed, not configured, rates
+    window_rounds: int = 4          # sliding observation window (rounds)
+    retries: int = 2                # solve retries before giving up
+    backoff_s: float = 0.0          # base backoff between retries
+    breaker_threshold: int = 2      # consecutive failures to open
+    breaker_cooldown: int = 2       # rounds the breaker stays open
+    treat_stalls_as_failures: bool = False
+    straggler_warmup: int = 2       # detector warmup (first rounds compile)
+    chaos: Optional[ChaosConfig] = None
+
+    def __post_init__(self):
+        if self.slo_s <= 0.0 or np.isnan(self.slo_s):
+            raise ValueError(f"slo_s must be > 0, got {self.slo_s!r}")
+        if not np.isfinite(self.triage_margin) or self.triage_margin < 0.0:
+            raise ValueError(f"triage_margin must be finite and >= 0, "
+                             f"got {self.triage_margin!r}")
+        if self.window_rounds < 1:
+            raise ValueError(f"window_rounds must be >= 1, "
+                             f"got {self.window_rounds!r}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries!r}")
+
+
+class ServiceRoundLog(NamedTuple):
+    """What the service decided for one round, per problem."""
+    round: int
+    label: str
+    rung: Tuple[str, ...]        # ladder rung that served each problem
+    wall_s: float                # measured time-to-plan (incl. injected stall)
+    budget_iters: float          # watchdog's iteration budget (inf = no cap)
+    breaker_state: str           # breaker state when the round started
+    solver_failed: bool          # PSO rung crashed/stalled out this round
+    retries_used: int            # extra solve attempts consumed
+    stale_env: bool              # env snapshot rejected, last-good used
+    stalled: bool                # straggler detector flagged the solve
+    rejected_apps: int           # apps triaged out of the shared queues
+    est_rate: float              # observed-rate estimate (0 when unused)
+    replan: Optional[RoundLog]   # the PSO rung's log (None when skipped)
+
+
+@dataclasses.dataclass
+class ServiceReport:
+    """Output of ``run_service``: per-round logs plus the counters the
+    availability/SLO story is told from (EXPERIMENTS.md §Service)."""
+    cold: List[PSOGAResult]
+    rounds: List[ServiceRoundLog]
+    plans: List[Optional[np.ndarray]]   # final per-problem plans
+    fallback_counts: Dict[str, int]     # problem-rounds served per rung
+    counters: Dict[str, int]
+
+    def availability(self) -> float:
+        """Fraction of problem-rounds served a valid plan (any rung but
+        ``reject``)."""
+        total = sum(len(r.rung) for r in self.rounds)
+        if total == 0:
+            return 1.0
+        served = sum(1 for r in self.rounds for g in r.rung
+                     if g != "reject")
+        return served / total
+
+    def time_to_plan(self) -> Dict[str, float]:
+        walls = np.array([r.wall_s for r in self.rounds], float)
+        if walls.size == 0:
+            return {"p50": 0.0, "p99": 0.0, "max": 0.0}
+        return {"p50": float(np.percentile(walls, 50)),
+                "p99": float(np.percentile(walls, 99)),
+                "max": float(walls.max())}
+
+    def summary(self) -> Dict[str, object]:
+        return {"rounds": len(self.rounds),
+                "availability": self.availability(),
+                "time_to_plan_s": self.time_to_plan(),
+                "fallback_counts": dict(self.fallback_counts),
+                "counters": dict(self.counters)}
+
+
+class _RateWindow:
+    """Sliding window of observed per-round arrival draws: the
+    streaming-ingestion half of the service (DESIGN.md §11). Each round
+    contributes one ``(n_apps, R)`` timestamp array; the rate estimate
+    is finite-count / (rounds · apps · horizon) over the window."""
+
+    def __init__(self, window_rounds: int, horizon: float, n_apps: int):
+        self._obs = collections.deque(maxlen=window_rounds)
+        self._horizon = horizon
+        self._n_apps = n_apps
+
+    def ingest(self, arrivals: np.ndarray) -> None:
+        self._obs.append(int(np.isfinite(arrivals).sum()))
+
+    def rate(self) -> Optional[float]:
+        """Estimated requests/s/app, None before the first observation."""
+        if not self._obs:
+            return None
+        span = len(self._obs) * self._horizon * self._n_apps
+        return sum(self._obs) / span
+
+
+def _env_ok(env: Environment) -> bool:
+    """A usable environment snapshot: finite positive power, no NaN
+    anywhere a cost could flow from (DESIGN.md §11 — a NaN bandwidth
+    becomes a NaN fitness key, and a NaN key freezes PSO's argmin).
+    Bandwidth of +inf is legal (the self-link convention) and 0 is a
+    severed link, so only NaN/negative entries disqualify it."""
+    bw = np.asarray(env.bandwidth, float)
+    return bool(np.all(np.isfinite(env.power)) and np.all(env.power > 0.0)
+                and not np.any(np.isnan(bw)) and np.all(bw >= 0.0)
+                and np.all(np.isfinite(env.cost_per_sec))
+                and np.all(np.isfinite(env.tran_cost)))
+
+
+def _poison_env(env: Environment) -> Environment:
+    """The chaos harness's stale-snapshot fault: NaN bandwidth."""
+    bw = np.asarray(env.bandwidth, float).copy()
+    bw[0, -1] = np.nan
+    return dataclasses.replace(env, bandwidth=bw)
+
+
+def _down_env(env: Environment, server: int) -> Environment:
+    """Sever every off-diagonal link of ``server`` (mid-round churn)."""
+    s = env.num_servers
+    bw = np.asarray(env.bandwidth, float).copy()
+    off = ~np.eye(s, dtype=bool)
+    dead = np.zeros(s, bool)
+    dead[server] = True
+    bw[(dead[:, None] | dead[None, :]) & off] = 0.0
+    return dataclasses.replace(env, bandwidth=bw)
+
+
+def _select_rung(budget_iters: float, warm_iters: int,
+                 burst_iters: int) -> str:
+    """The watchdog's rung choice: the best PSO rung whose iteration
+    count fits the budget, else skip the solver entirely and pin
+    (DESIGN.md §11). Budgets are compared against the rungs' FIXED
+    ``max_iters`` — never a per-round cap, which would retrace the
+    compiled fleet runner."""
+    if budget_iters >= warm_iters:
+        return "warm"
+    if budget_iters >= burst_iters:
+        return "burst"
+    return "pinned"
+
+
+def _plan_ok(prob: SimProblem, plan: Optional[np.ndarray]) -> bool:
+    """The ladder's promotion gate: static validity (shape, genes in
+    range, pins honored, every edge on a live link) plus a finite
+    replayed cost. Deadline misses do NOT fail the gate — a late plan is
+    a triage/fitness concern, not an invalid one."""
+    if plan is None or not plan_is_valid(prob, plan):
+        return False
+    res = simulate_np(prob, np.asarray(plan, np.int64))
+    return bool(np.isfinite(float(res.total_cost))
+                and np.isfinite(float(res.makespan)))
+
+
+def _triage(dags: Sequence[LayerDAG], probs: Sequence[SimProblem],
+            env: Environment, margin: float,
+            arrivals: Optional[List[np.ndarray]]
+            ) -> Tuple[Optional[List[np.ndarray]], int]:
+    """Deadline triage (DESIGN.md §11): an app whose deadline even a
+    HEFT makespan-minimizing schedule cannot meet within ``margin`` is
+    rejected — its arrival slots go to +inf so the shared FCFS queues
+    only carry savable work. Returns (masked arrivals, rejected apps)."""
+    if margin <= 0.0 or arrivals is None:
+        return arrivals, 0
+    rejected = 0
+    masked: List[np.ndarray] = []
+    for dag, prob, arr in zip(dags, probs, arrivals):
+        _, x_h = heft_makespan(dag, env)
+        comp = np.asarray(simulate_np(prob, x_h).app_completion, float)
+        bad = margin * comp > np.asarray(dag.deadline, float)
+        if bad.any():
+            arr = np.asarray(arr, float).copy()
+            arr[:, bad, :] = np.inf
+            rejected += int(bad.sum())
+        masked.append(arr)
+    return masked, rejected
+
+
+def _ladder_tail(dag: LayerDAG, prob: SimProblem, env: Environment,
+                 faithful: bool) -> Tuple[str, Optional[np.ndarray]]:
+    """HEFT → greedy → reject: the solver-free rungs, each validated
+    before promotion (greedy's last-candidate fallback can emit a
+    link-infeasible plan after node churn — the gate catches it)."""
+    _, x_h = heft_makespan(dag, env)
+    if _plan_ok(prob, x_h):
+        return "heft", np.asarray(x_h, np.int32)
+    g = greedy_offload(dag, env, faithful=faithful)
+    x_g = np.asarray(g.best_x, np.int32)
+    if _plan_ok(prob, x_g):
+        return "greedy", x_g
+    return "reject", None
+
+
+def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
+                cfg: ServiceConfig = ServiceConfig(),
+                seed: int = 0,
+                initial: Optional[Sequence[PSOGAResult]] = None,
+                sleeper=None) -> ServiceReport:
+    """Drive a fleet through a drift trace as a long-running service.
+
+    Round 0 solves cold exactly like ``replan_fleet``; every later round
+    runs the fault-tolerant pipeline: validate the env snapshot →
+    estimate arrival rates (or reuse the trace's) → triage unsavable
+    apps → pick a PSO rung within the watchdog's iteration budget →
+    solve with retries under the circuit breaker → apply any mid-round
+    churn → walk every problem down the ladder until a rung's plan
+    passes ``_plan_ok``. Surviving plans are the next round's
+    incumbents; a rejected problem re-enters cold (the stale-plan guard
+    accepts ``None`` incumbents).
+
+    With every protection at its default-off setting the loop IS
+    ``replan_fleet`` step for step — same seeds, same arrivals, same
+    accept-if-better — so plans match bit-for-bit (the parity test).
+    ``sleeper`` is handed to ``retry_with_backoff`` (tests inject a
+    recorder so chaos runs never block).
+    """
+    rcfg = cfg.replan
+    burst_rcfg = dataclasses.replace(rcfg, pso=cfg.burst)
+    injector = None
+    if cfg.chaos is not None and (cfg.chaos.crash_rounds
+                                  or cfg.chaos.p_crash > 0.0):
+        injector = FailureInjector(p_fail=cfg.chaos.p_crash,
+                                   seed=cfg.chaos.seed,
+                                   fail_at=tuple(cfg.chaos.crash_rounds),
+                                   max_failures=cfg.chaos.max_crashes)
+    breaker = CircuitBreaker(threshold=cfg.breaker_threshold,
+                             cooldown=cfg.breaker_cooldown)
+    detector = StragglerDetector(warmup=cfg.straggler_warmup)
+    per_iter = EwmaEstimator()
+    windows: Optional[List[_RateWindow]] = None
+    if cfg.estimate_rates and rcfg.traffic is not None:
+        windows = [_RateWindow(cfg.window_rounds, rcfg.traffic.horizon,
+                               d.num_apps) for d in dags]
+
+    counters = {"retries": 0, "crashes": 0, "stale_env_rounds": 0,
+                "stalls_flagged": 0, "breaker_opened": 0,
+                "watchdog_cuts": 0, "rejected_apps": 0, "demotions": 0}
+    fallback_counts = {r: 0 for r in LADDER_RUNGS}
+
+    # round 0: the cold solve, exactly replan_fleet's (or admission-time
+    # plans handed in, e.g. from plan_offload_batch).
+    env0 = trace.env_at(0)
+    if initial is None:
+        probs0 = [SimProblem.build(d, env0) for d in dags]
+        cold = run_pso_ga_batch(
+            probs0, rcfg.pso, seed=seed,
+            arrivals=_round_arrivals(rcfg, dags, trace.events[0], seed))
+    else:
+        if len(initial) != len(dags):
+            raise ValueError(f"{len(initial)} initial results for "
+                             f"{len(dags)} dags")
+        cold = list(initial)
+    plans: List[Optional[np.ndarray]] = [
+        np.asarray(r.best_x, np.int32) for r in cold]
+    last_good_env = env0
+    rounds: List[ServiceRoundLog] = []
+
+    for k in range(1, trace.num_rounds):
+        ev = trace.events[k]
+        env_k = trace.env_at(k)
+        if cfg.chaos is not None and k in cfg.chaos.nan_env_rounds:
+            env_k = _poison_env(env_k)
+        stale_env = not _env_ok(env_k)
+        if stale_env:
+            counters["stale_env_rounds"] += 1
+            env_k = last_good_env
+        else:
+            last_good_env = env_k
+        probs = [SimProblem.build(d, env_k) for d in dags]
+
+        # arrivals: the trace's own draws, or resampled at the observed
+        # rate (streaming ingestion — the solver never sees load_scale).
+        est_rate = 0.0
+        if windows is not None:
+            tc = rcfg.traffic
+            arrivals = []
+            for i, d in enumerate(dags):
+                obs = tc.solver_arrivals(
+                    d.num_apps, seed=seed + 7919 * k + 31 * i,
+                    rate_scale=ev.load_scale)[0]
+                windows[i].ingest(obs)
+                est = windows[i].rate()
+                est_rate = est if est is not None else tc.rate
+                scale = max(est_rate / tc.rate, 1e-6)
+                arrivals.append(tc.solver_arrivals(
+                    d.num_apps, seed=seed + 1000 * k + 31 * i,
+                    rate_scale=scale))
+        else:
+            arrivals = _round_arrivals(rcfg, dags, ev, seed + 1000 * k)
+        arrivals, rejected = _triage(dags, probs, env_k,
+                                     cfg.triage_margin, arrivals)
+        counters["rejected_apps"] += rejected
+
+        # watchdog: remaining SLO slack → iteration budget → rung.
+        est = per_iter.value
+        budget = float("inf") if est is None or not np.isfinite(cfg.slo_s) \
+            else cfg.slo_s / max(est, 1e-12)
+        rung0 = _select_rung(budget, rcfg.pso.max_iters,
+                             cfg.burst.max_iters)
+        want: Optional[ReplanConfig] = {
+            "warm": rcfg, "burst": burst_rcfg, "pinned": None}[rung0]
+        if rung0 != "warm":
+            counters["watchdog_cuts"] += 1
+        breaker_state = breaker.state
+        if not breaker.allow(k):
+            want, rung0 = None, "pinned"
+
+        solver_failed = False
+        retries_used = 0
+        rlog: Optional[RoundLog] = None
+        new_plans: Optional[List[np.ndarray]] = None
+        t0 = time.perf_counter()
+        if want is not None:
+            def attempt(a: int, _want=want):
+                nonlocal retries_used
+                retries_used = a
+                if injector is not None:
+                    injector.maybe_fail(k)
+                return replan_round(probs, plans, _want, seed=seed + k,
+                                    round_no=k, label=ev.label,
+                                    arrivals=arrivals)
+            try:
+                new_plans, rlog = retry_with_backoff(
+                    attempt, retries=cfg.retries,
+                    backoff_s=cfg.backoff_s, sleeper=sleeper)
+            except SimulatedFailure:
+                solver_failed = True
+                counters["crashes"] += 1
+            counters["retries"] += retries_used
+        wall = time.perf_counter() - t0
+        if cfg.chaos is not None and k in cfg.chaos.stall_rounds:
+            wall += cfg.chaos.stall_s
+        stalled = False
+        if want is not None:
+            stalled = detector.update(wall)
+            if stalled:
+                counters["stalls_flagged"] += 1
+                if cfg.treat_stalls_as_failures:
+                    solver_failed = True
+                    new_plans, rlog = None, None
+        if want is not None and not solver_failed:
+            breaker.record_success()
+            if rlog is not None:
+                it_max = int(np.max(rlog.iterations, initial=1))
+                per_iter.update(wall / max(it_max, 1))
+            counters["demotions"] += int(np.sum(rlog.demoted)) \
+                if rlog is not None else 0
+        elif want is not None:
+            opened = breaker.opened
+            breaker.record_failure(k)
+            counters["breaker_opened"] += breaker.opened - opened
+
+        # mid-round churn: the environment the plans must RUN on.
+        probs_post, env_post = probs, env_k
+        if cfg.chaos is not None and k in cfg.chaos.mid_round_down:
+            env_post = _down_env(env_k, cfg.chaos.mid_round_down[k])
+            probs_post = [SimProblem.build(d, env_post) for d in dags]
+
+        # the ladder: promote each problem's best available plan.
+        rung: List[str] = []
+        for i, (d, pr) in enumerate(zip(dags, probs_post)):
+            if new_plans is not None:
+                cand, r_i = new_plans[i], rung0
+            else:
+                cand, r_i = plans[i], "pinned"
+            if _plan_ok(pr, cand):
+                plans[i] = np.asarray(cand, np.int32)
+            else:
+                r_i, cand = _ladder_tail(d, pr, env_post,
+                                         rcfg.pso.faithful_sim)
+                plans[i] = cand
+            rung.append(r_i)
+            fallback_counts[r_i] += 1
+
+        rounds.append(ServiceRoundLog(
+            round=k, label=ev.label, rung=tuple(rung), wall_s=wall,
+            budget_iters=budget, breaker_state=breaker_state,
+            solver_failed=solver_failed, retries_used=retries_used,
+            stale_env=stale_env, stalled=stalled,
+            rejected_apps=rejected, est_rate=float(est_rate),
+            replan=rlog))
+
+    return ServiceReport(cold=cold, rounds=rounds, plans=plans,
+                         fallback_counts=fallback_counts,
+                         counters=counters)

@@ -68,6 +68,25 @@ __all__ = ["TRAFFIC_KINDS", "ArrivalTrace", "TrafficConfig",
 TRAFFIC_KINDS = ("poisson", "diurnal", "bursty", "flash-crowd")
 
 
+def _require_positive_finite(name: str, value: float) -> float:
+    """Front-door validation (DESIGN.md §11): a NaN or non-positive rate
+    fed to the generators would silently propagate into jitted fitness
+    (NaN keys freeze PSO's argmin; rate 0 makes every replay vacuously
+    feasible) — reject loudly at the boundary instead."""
+    v = float(value)
+    if not np.isfinite(v) or v <= 0.0:
+        raise ValueError(f"{name} must be a positive finite number, "
+                         f"got {value!r}")
+    return v
+
+
+def _require_count(name: str, value: int, minimum: int = 1) -> int:
+    v = int(value)
+    if v < minimum:
+        raise ValueError(f"{name} must be >= {minimum}, got {value!r}")
+    return v
+
+
 # ---------------------------------------------------------------------------
 # arrival traces
 # ---------------------------------------------------------------------------
@@ -170,6 +189,11 @@ def sample_arrivals(kind: str, n_apps: int, rate: float = 0.5,
     if kind not in TRAFFIC_KINDS:
         raise ValueError(f"unknown traffic kind {kind!r} "
                          f"(expected one of {TRAFFIC_KINDS})")
+    rate = _require_positive_finite("rate", rate)
+    horizon = _require_positive_finite("horizon", horizon)
+    n_apps = _require_count("n_apps", n_apps)
+    max_requests = _require_count("max_requests", max_requests)
+    n_seeds = _require_count("n_seeds", n_seeds)
     t = np.full((n_seeds, n_apps, max_requests), np.inf)
     for s in range(n_seeds):
         rng = np.random.default_rng([seed, s])
@@ -232,6 +256,20 @@ class TrafficConfig:
     mc_solver: int = 3
     mc_eval: int = 16
     miss_budget: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in TRAFFIC_KINDS:
+            raise ValueError(f"unknown traffic kind {self.kind!r} "
+                             f"(expected one of {TRAFFIC_KINDS})")
+        _require_positive_finite("rate", self.rate)
+        _require_positive_finite("horizon", self.horizon)
+        _require_count("max_requests", self.max_requests)
+        _require_count("mc_solver", self.mc_solver)
+        _require_count("mc_eval", self.mc_eval)
+        mb = float(self.miss_budget)
+        if not np.isfinite(mb) or not 0.0 <= mb <= 1.0:
+            raise ValueError(f"miss_budget must be in [0, 1], "
+                             f"got {self.miss_budget!r}")
 
     def solver_arrivals(self, n_apps: int, seed: int = 0,
                         rate_scale: float = 1.0) -> np.ndarray:

@@ -127,6 +127,31 @@ def main() -> None:
                          "re-plan warm at each event (DESIGN.md §9)")
     ap.add_argument("--replan-rounds", type=int, default=4,
                     help="drift events in the --replan trace")
+    ap.add_argument("--serve", default=None, metavar="SCENARIO",
+                    dest="serve_scenario",
+                    help="after --plan, run the fault-tolerant always-on "
+                         "planning service over a drift trace of this "
+                         "family (DESIGN.md §11): watchdog, fallback "
+                         "ladder, admission control, circuit breaker. "
+                         "Prints per-round rungs and the availability/"
+                         "SLO summary, then exits (no LM serving).")
+    ap.add_argument("--serve-rounds", type=int, default=6,
+                    help="drift events in the --serve trace")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --serve: inject a deterministic fault "
+                         "script (solver crash, NaN env snapshot, "
+                         "mid-round node loss) to exercise the ladder")
+    ap.add_argument("--slo-s", type=float, default=float("inf"),
+                    help="per-round time-to-plan SLO for the --serve "
+                         "watchdog (seconds)")
+    ap.add_argument("--triage-margin", type=float, default=0.0,
+                    help="with --serve --traffic: reject apps whose "
+                         "deadline < margin x HEFT completion instead "
+                         "of queueing them (0 disables)")
+    ap.add_argument("--estimate-rates", action="store_true",
+                    help="with --serve --traffic: plan on arrival rates "
+                         "estimated from the observed stream instead of "
+                         "the generator's configured rate")
     ap.add_argument("--traffic", default=None, metavar="SCENARIO",
                     choices=TRAFFIC_KINDS,
                     help="plan under a request-stream workload of this "
@@ -146,6 +171,15 @@ def main() -> None:
     if args.replan == "load-surge" and not args.traffic:
         ap.error("--replan load-surge drifts the request stream, which "
                  "only exists with --traffic SCENARIO (DESIGN.md §10)")
+    if args.serve_scenario and not args.plan:
+        ap.error("--serve requires --plan")
+    if args.serve_scenario == "load-surge" and not args.traffic:
+        ap.error("--serve load-surge drifts the request stream, which "
+                 "only exists with --traffic SCENARIO (DESIGN.md §10)")
+    if (args.estimate_rates or args.triage_margin > 0.0) \
+            and not args.traffic:
+        ap.error("--estimate-rates / --triage-margin need --traffic "
+                 "(they act on the request stream, DESIGN.md §11)")
     if args.plan:
         # one batched PSO-GA fleet plans every serving shape at once
         # (DESIGN.md §4) instead of re-compiling the solver per shape.
@@ -202,6 +236,52 @@ def main() -> None:
                       f"fleet cost ${float(np.sum(log.cost)):.4f}, "
                       f"moved layers {log.moved_layers.tolist()}, "
                       f"{log.wall_s * 1e3:.0f}ms")
+        if args.serve_scenario:
+            # the always-on planning service (DESIGN.md §11): same warm
+            # replanning as --replan, wrapped in the watchdog / ladder /
+            # breaker supervision — and the one mode that does NOT fall
+            # through to LM serving (it IS the serving loop).
+            import dataclasses as _dc
+
+            from ..core import (ChaosConfig, ReplanConfig, ServiceConfig,
+                                run_service, sample_trace)
+            trace = sample_trace(args.serve_scenario, fleet_env,
+                                 rounds=args.serve_rounds, seed=0)
+            serve_pso = _dc.replace(pso_cfg,
+                                    fitness_backend=plans[0].backend)
+            if traffic_cfg is not None:
+                serve_pso = _dc.replace(
+                    serve_pso, miss_budget=traffic_cfg.miss_budget)
+            chaos = None
+            if args.chaos:
+                last = max(1, args.serve_rounds - 1)
+                chaos = ChaosConfig(
+                    crash_rounds=(min(2, last),),
+                    nan_env_rounds=(min(3, last),),
+                    mid_round_down={min(4, last): 1})
+            scfg = ServiceConfig(
+                replan=ReplanConfig(pso=serve_pso, traffic=traffic_cfg),
+                slo_s=args.slo_s, triage_margin=args.triage_margin,
+                estimate_rates=args.estimate_rates, chaos=chaos)
+            report = run_service([p.dag for p in plans], trace, scfg,
+                                 seed=0,
+                                 initial=[p.result for p in plans])
+            for r in report.rounds:
+                flags = "".join(
+                    f" [{f}]" for f, on in
+                    (("solver-failed", r.solver_failed),
+                     ("stale-env", r.stale_env),
+                     ("stalled", r.stalled)) if on)
+                print(f"[serve] service round {r.round} ({r.label}): "
+                      f"rungs {list(r.rung)}, breaker {r.breaker_state},"
+                      f" {r.wall_s * 1e3:.0f}ms{flags}")
+            s = report.summary()
+            ttp = s["time_to_plan_s"]
+            print(f"[serve] service: {s['rounds']} rounds, availability "
+                  f"{s['availability']:.4f}, time-to-plan p50 "
+                  f"{ttp['p50'] * 1e3:.0f}ms p99 {ttp['p99'] * 1e3:.0f}ms,"
+                  f" fallbacks {s['fallback_counts']}")
+            return
     if args.reduced:
         cfg = cfg.reduced()
     srv = Server(cfg, args.batch, args.prompt_len, args.max_new,

@@ -1,6 +1,9 @@
 from .elastic import best_mesh_shape, elastic_mesh
-from .fault import FailureInjector, SimulatedFailure, run_with_restarts
-from .straggler import StragglerDetector
+from .fault import (CircuitBreaker, FailureInjector, SimulatedFailure,
+                    retry_with_backoff, run_with_restarts)
+from .straggler import EwmaEstimator, StragglerDetector
 
-__all__ = ["FailureInjector", "SimulatedFailure", "run_with_restarts",
-           "StragglerDetector", "best_mesh_shape", "elastic_mesh"]
+__all__ = ["CircuitBreaker", "FailureInjector", "SimulatedFailure",
+           "retry_with_backoff", "run_with_restarts",
+           "EwmaEstimator", "StragglerDetector",
+           "best_mesh_shape", "elastic_mesh"]

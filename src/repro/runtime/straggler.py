@@ -9,13 +9,54 @@ trainer logs + counts, and the restart/elastic path is exercised by
 tests.
 
 Welford-style EWMA keeps no history; O(1) per step.
+
+``EwmaEstimator`` is the bare smoother without outlier logic — the
+planning service's solver watchdog (DESIGN.md §11) feeds it observed
+per-iteration solve times and divides remaining SLO slack by its value
+to derive the iteration budget of the next solve.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-__all__ = ["StragglerDetector"]
+__all__ = ["StragglerDetector", "EwmaEstimator"]
+
+
+@dataclasses.dataclass
+class EwmaEstimator:
+    """O(1) exponentially-weighted mean of a nonnegative stream.
+
+    ``value`` is None until the first update (callers treat "no estimate
+    yet" as "don't budget"). Non-finite or negative samples are ignored
+    rather than poisoning the estimate — the watchdog may be fed wall
+    times measured around a crashed solve.
+    """
+    alpha: float = 0.3
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
+        self._mean: Optional[float] = None
+        self._n = 0
+
+    @property
+    def value(self) -> Optional[float]:
+        return self._mean
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    def update(self, v: float) -> None:
+        v = float(v)
+        if not (v >= 0.0) or v != v or v == float("inf"):
+            return
+        self._n += 1
+        if self._mean is None:
+            self._mean = v
+        else:
+            self._mean += self.alpha * (v - self._mean)
 
 
 @dataclasses.dataclass

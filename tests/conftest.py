@@ -1,4 +1,5 @@
 import os
+import signal
 
 import numpy as np
 import pytest
@@ -23,3 +24,33 @@ else:
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# per-test watchdog (DESIGN.md §11): a hung solve must fail ITS test, not
+# wedge the whole suite. SIGALRM-based (no external plugin); override per
+# test with @pytest.mark.timeout(seconds), 0 disables. The default leaves
+# generous room for first-test jit compiles.
+# ---------------------------------------------------------------------------
+
+DEFAULT_TEST_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT_S", "900"))
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    seconds = int(marker.args[0]) if marker is not None and marker.args \
+        else DEFAULT_TEST_TIMEOUT_S
+    armed = hasattr(signal, "SIGALRM") and seconds > 0
+    if armed:
+        def on_alarm(signum, frame):
+            raise TimeoutError(
+                f"{item.nodeid} exceeded the {seconds}s test watchdog")
+        previous = signal.signal(signal.SIGALRM, on_alarm)
+        signal.alarm(seconds)
+    try:
+        return (yield)
+    finally:
+        if armed:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, previous)

@@ -80,3 +80,50 @@ def test_serve_plan_traffic_backend_smoke(monkeypatch, capsys):
     assert plans and all(p.backend == "pallas" for p in plans)
     assert "(backend=pallas)" in out
     assert "poisson traffic" in out
+
+
+def test_serve_service_cli_smoke(monkeypatch, capsys):
+    """`serve --plan --serve wifi-fade --chaos` runs the always-on
+    planning service end to end (shrunk swarm, first shape only) and
+    prints per-round rungs plus the availability summary — and never
+    falls through to LM serving."""
+    import repro.core as core
+    import repro.launch.serve as serve_mod
+
+    real_plan = core.plan_offload_batch
+    real_service = core.run_service
+    captured = {}
+
+    def plan_spy(items, env, pso, fitness_backend, traffic):
+        pso = dataclasses.replace(pso, pop_size=8, max_iters=4,
+                                  stall_iters=2)
+        return real_plan(items[:1], env=env, pso=pso,
+                         fitness_backend=fitness_backend, traffic=traffic)
+
+    def service_spy(dags, trace, cfg, seed=0, initial=None, sleeper=None):
+        small = dataclasses.replace(
+            cfg.replan, pso=dataclasses.replace(
+                cfg.replan.pso, pop_size=8, max_iters=4, stall_iters=2))
+        rep = real_service(dags, trace,
+                           dataclasses.replace(cfg, replan=small),
+                           seed=seed, initial=initial, sleeper=sleeper)
+        captured["report"] = rep
+        return rep
+
+    monkeypatch.setattr(core, "plan_offload_batch", plan_spy)
+    monkeypatch.setattr(core, "run_service", service_spy)
+    monkeypatch.setattr(serve_mod, "Server", _StubServer)
+    monkeypatch.setattr(sys, "argv",
+                        ["serve", "--arch", "qwen3-0.6b", "--reduced",
+                         "--plan", "--serve", "wifi-fade",
+                         "--serve-rounds", "3", "--chaos"])
+    serve_mod.main()
+    out = capsys.readouterr().out
+    rep = captured["report"]
+    assert len(rep.cold) == 1            # admission plans handed in as-is
+    assert len(rep.rounds) == 2
+    # --chaos with 3 rounds lands every fault on round 2, deterministic
+    assert rep.counters["stale_env_rounds"] == 1
+    assert rep.counters["retries"] == 1
+    assert "[serve] service round 1" in out
+    assert "availability" in out and "fallbacks" in out

@@ -1,0 +1,473 @@
+"""Fault-tolerant planning service (repro.core.service, DESIGN.md §11):
+the parity invariant (protections off ⇒ bit-identical to replan_fleet),
+the chaos harness (crashes, NaN envs, stalls, mid-round churn), the
+watchdog/ladder/triage paths, the stale-plan guard, and the runtime
+fault primitives the loop is built from."""
+import numpy as np
+import pytest
+
+from repro.core import (ChaosConfig, LADDER_RUNGS, PSOGAConfig,
+                        ReplanConfig, ServiceConfig, ServiceReport,
+                        ServiceRoundLog, SimProblem, TrafficConfig,
+                        heft_makespan, paper_environment, plan_is_valid,
+                        replan_fleet, run_pso_ga_batch, run_service,
+                        sample_trace, zero_drift_trace, zoo)
+from repro.core.batch import reset_runner_cache_stats, runner_cache_stats
+from repro.core.online import replan_round
+from repro.core.service import _RateWindow, _down_env, _select_rung
+from repro.runtime import (CircuitBreaker, EwmaEstimator,
+                           SimulatedFailure, retry_with_backoff)
+
+#: distinct from every other test config so this file's first solve is a
+#: fresh runner-cache entry (the cache-discipline test relies on that)
+FAST = PSOGAConfig(pop_size=20, max_iters=50, stall_iters=18)
+BURST = PSOGAConfig(pop_size=12, max_iters=10, stall_iters=6)
+RCFG = ReplanConfig(pso=FAST)
+TCFG = TrafficConfig(rate=0.4, max_requests=4, mc_solver=2, mc_eval=4)
+RCFG_T = ReplanConfig(pso=FAST, traffic=TCFG)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    env = paper_environment()
+    dags = []
+    for i, net in enumerate(("alexnet", "googlenet")):
+        dag = zoo.build(net, pin_server=i)
+        h, _ = heft_makespan(dag, env)
+        dags.append(dag.with_deadline(np.array([1.5 * h])))
+    return env, dags
+
+
+@pytest.fixture(scope="module")
+def trace4(fleet):
+    env, _ = fleet
+    return sample_trace("wifi-fade", env, rounds=4, seed=3)
+
+
+@pytest.fixture(scope="module")
+def batch_report(fleet, trace4):
+    _, dags = fleet
+    return replan_fleet(dags, trace4, RCFG, seed=7)
+
+
+@pytest.fixture(scope="module")
+def service_report(fleet, trace4):
+    _, dags = fleet
+    return run_service(dags, trace4, ServiceConfig(replan=RCFG), seed=7)
+
+
+# ---------------------------------------------------------------------------
+# runtime primitives: breaker, retry, estimators
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_lifecycle():
+    b = CircuitBreaker(threshold=2, cooldown=2)
+    assert b.state == "closed" and b.allow(1)
+    b.record_failure(1)
+    assert b.state == "closed"            # one failure is not a trip
+    b.record_failure(2)
+    assert b.state == "open" and b.opened == 1
+    assert not b.allow(3) and not b.allow(4)
+    assert b.allow(5)                     # half-open probe round
+    b.record_failure(5)                   # failed probe re-trips
+    assert b.opened == 2 and not b.allow(7)
+    assert b.allow(8)
+    b.record_success()                    # probe succeeded: fully closed
+    assert b.state == "closed" and b.allow(9)
+
+
+def test_circuit_breaker_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="threshold"):
+        CircuitBreaker(threshold=0)
+    with pytest.raises(ValueError, match="cooldown"):
+        CircuitBreaker(cooldown=0)
+
+
+def test_retry_with_backoff_recovers_and_sleeps_exponentially():
+    sleeps, attempts = [], []
+
+    def flaky(a):
+        attempts.append(a)
+        if a < 2:
+            raise SimulatedFailure("boom")
+        return "ok"
+
+    out = retry_with_backoff(flaky, retries=2, backoff_s=0.1,
+                             sleeper=sleeps.append)
+    assert out == "ok"
+    assert attempts == [0, 1, 2]
+    np.testing.assert_allclose(sleeps, [0.1, 0.2])
+
+
+def test_retry_with_backoff_exhausts_then_raises():
+    attempts = []
+
+    def dead(a):
+        attempts.append(a)
+        raise SimulatedFailure("still dead")
+
+    with pytest.raises(SimulatedFailure):
+        retry_with_backoff(dead, retries=1, sleeper=lambda s: None)
+    assert attempts == [0, 1]
+
+
+def test_retry_with_backoff_does_not_catch_other_exceptions():
+    attempts = []
+
+    def broken(a):
+        attempts.append(a)
+        raise ValueError("logic bug, not a fault")
+
+    with pytest.raises(ValueError):
+        retry_with_backoff(broken, retries=5, sleeper=lambda s: None)
+    assert attempts == [0]                # no retry on non-fault errors
+
+
+def test_ewma_estimator():
+    e = EwmaEstimator(alpha=0.3)
+    assert e.value is None
+    e.update(1.0)
+    assert e.value == pytest.approx(1.0)
+    e.update(2.0)
+    assert e.value == pytest.approx(1.3)
+    e.update(float("nan"))
+    e.update(-5.0)
+    e.update(float("inf"))
+    assert e.value == pytest.approx(1.3)  # junk samples ignored
+    assert e.n == 2
+
+
+def test_rate_window():
+    w = _RateWindow(window_rounds=2, horizon=10.0, n_apps=1)
+    assert w.rate() is None
+    w.ingest(np.array([0.1, 0.2, 0.3, 0.4, 0.5]))
+    assert w.rate() == pytest.approx(0.5)          # 5 / (1 * 10 * 1)
+    w.ingest(np.concatenate([np.arange(15.0), [np.inf]]))
+    assert w.rate() == pytest.approx(1.0)          # (5+15) / (2 * 10)
+    w.ingest(np.arange(15.0))
+    assert w.rate() == pytest.approx(1.5)          # window slid: (15+15)/20
+
+
+def test_select_rung():
+    assert _select_rung(float("inf"), 50, 10) == "warm"
+    assert _select_rung(50.0, 50, 10) == "warm"
+    assert _select_rung(49.9, 50, 10) == "burst"
+    assert _select_rung(10.0, 50, 10) == "burst"
+    assert _select_rung(9.9, 50, 10) == "pinned"
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="p_crash"):
+        ChaosConfig(p_crash=1.5)
+    with pytest.raises(ValueError, match="stall_s"):
+        ChaosConfig(stall_s=-1.0)
+    with pytest.raises(ValueError, match="slo_s"):
+        ServiceConfig(slo_s=0.0)
+    with pytest.raises(ValueError, match="triage_margin"):
+        ServiceConfig(triage_margin=-1.0)
+    with pytest.raises(ValueError, match="window_rounds"):
+        ServiceConfig(window_rounds=0)
+    with pytest.raises(ValueError, match="retries"):
+        ServiceConfig(retries=-1)
+
+
+def test_service_report_helpers():
+    def row(rung, wall):
+        return ServiceRoundLog(round=1, label="x", rung=rung, wall_s=wall,
+                               budget_iters=float("inf"),
+                               breaker_state="closed", solver_failed=False,
+                               retries_used=0, stale_env=False,
+                               stalled=False, rejected_apps=0,
+                               est_rate=0.0, replan=None)
+    rep = ServiceReport(cold=[], rounds=[row(("warm", "reject"), 1.0),
+                                         row(("heft", "greedy"), 3.0)],
+                        plans=[], fallback_counts={}, counters={})
+    assert rep.availability() == pytest.approx(0.75)
+    ttp = rep.time_to_plan()
+    assert ttp["p50"] == pytest.approx(2.0)
+    assert ttp["max"] == pytest.approx(3.0)
+    assert rep.summary()["rounds"] == 2
+
+
+# ---------------------------------------------------------------------------
+# stale-plan guard (plan_is_valid + replan_round demotion)
+# ---------------------------------------------------------------------------
+
+def test_plan_is_valid(fleet):
+    env, dags = fleet
+    dag = dags[0]
+    prob = SimProblem.build(dag, env)
+    _, x_h = heft_makespan(dag, env)
+    assert plan_is_valid(prob, x_h)
+    assert plan_is_valid(prob, np.asarray(x_h, float))   # integral floats ok
+    assert not plan_is_valid(prob, None)
+    assert not plan_is_valid(prob, np.asarray(x_h)[:-1])         # shape
+    assert not plan_is_valid(prob, np.full(prob.num_layers, np.nan))
+    assert not plan_is_valid(prob, np.asarray(x_h, float) + 0.5)
+    bad = np.array(x_h, np.int64)
+    bad[1] = prob.num_servers                                    # range
+    assert not plan_is_valid(prob, bad)
+    pin_at = int(np.argmax(np.asarray(prob.pinned) >= 0))
+    bad = np.array(x_h, np.int64)
+    bad[pin_at] = (int(prob.pinned[pin_at]) + 1) % prob.num_servers
+    assert not plan_is_valid(prob, bad)                          # pin
+
+
+def test_plan_is_valid_rejects_severed_links(fleet):
+    env, dags = fleet
+    dag = dags[0]
+    s_last = env.num_servers - 1
+    x = np.where(np.asarray(SimProblem.build(dag, env).pinned) >= 0,
+                 np.asarray(SimProblem.build(dag, env).pinned), 0)
+    x = np.asarray(x, np.int64)
+    x[1] = s_last        # layer 1's parent sits on server 0
+    assert plan_is_valid(SimProblem.build(dag, env), x)
+    down = _down_env(env, s_last)
+    assert not plan_is_valid(SimProblem.build(dag, down), x)
+
+
+def test_replan_round_demotes_garbage_incumbent(fleet):
+    env, dags = fleet
+    probs = [SimProblem.build(d, env) for d in dags]
+    _, x0 = heft_makespan(dags[0], env)
+    garbage = np.full(probs[1].num_layers, np.nan)
+    plans, log = replan_round(probs, [np.asarray(x0, np.int32), garbage],
+                              RCFG, seed=11, round_no=1, label="chaos")
+    assert list(log.demoted) == [False, True]
+    assert log.migration[1] == 0.0       # cold start pays no migration
+    assert log.moved_layers[1] == probs[1].num_layers
+    assert log.replanned[1]
+    for pr, x in zip(probs, plans):
+        assert plan_is_valid(pr, x)
+
+
+def test_demoted_incumbent_is_bit_identical_to_cold(fleet):
+    """A per-entry None incumbent (the guard's demotion) must reproduce
+    the cold solve exactly: migration weight zeroed, no warm seeding."""
+    env, dags = fleet
+    probs = [SimProblem.build(d, env) for d in dags]
+    cold = run_pso_ga_batch(probs, FAST, seed=13)
+    demo = run_pso_ga_batch(probs, FAST, seed=13,
+                            incumbent=[None, None], migration_weight=1.0)
+    for c, d in zip(cold, demo):
+        np.testing.assert_array_equal(c.best_x, d.best_x)
+        assert c.best_cost == d.best_cost
+
+
+# ---------------------------------------------------------------------------
+# the parity invariant: protections off ⇒ replan_fleet, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_service_matches_replan_fleet_bit_for_bit(fleet, trace4,
+                                                  batch_report,
+                                                  service_report):
+    assert len(service_report.rounds) == len(batch_report.rounds)
+    for r, b in zip(service_report.rounds, batch_report.rounds):
+        assert r.rung == ("warm",) * 2
+        assert r.replan is not None
+        np.testing.assert_array_equal(r.replan.cost, b.cost)
+        np.testing.assert_array_equal(r.replan.replanned, b.replanned)
+    for x_s, x_b in zip(service_report.plans, batch_report.plans):
+        np.testing.assert_array_equal(x_s, x_b)
+    assert service_report.availability() == 1.0
+    assert service_report.counters["crashes"] == 0
+    assert service_report.counters["stale_env_rounds"] == 0
+
+
+def test_service_traffic_parity(fleet):
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=3, seed=5)
+    batch = replan_fleet(dags, trace, RCFG_T, seed=7)
+    serv = run_service(dags, trace, ServiceConfig(replan=RCFG_T), seed=7)
+    for r, b in zip(serv.rounds, batch.rounds):
+        np.testing.assert_array_equal(r.replan.cost, b.cost)
+    for x_s, x_b in zip(serv.plans, batch.plans):
+        np.testing.assert_array_equal(x_s, x_b)
+
+
+def test_service_accepts_initial_plans(fleet, trace4, service_report):
+    env, dags = fleet
+    probs0 = [SimProblem.build(d, trace4.env_at(0)) for d in dags]
+    cold = run_pso_ga_batch(probs0, FAST, seed=7)
+    rep = run_service(dags, trace4, ServiceConfig(replan=RCFG), seed=7,
+                      initial=cold)
+    for x_s, x_b in zip(rep.plans, service_report.plans):
+        np.testing.assert_array_equal(x_s, x_b)
+    with pytest.raises(ValueError, match="initial"):
+        run_service(dags, trace4, ServiceConfig(replan=RCFG), seed=7,
+                    initial=cold[:1])
+
+
+def test_service_reuses_compiled_runner(fleet, trace4, service_report):
+    """The cache-discipline half of the watchdog design: a full service
+    run re-traces NOTHING once the (config, traffic) entry exists."""
+    _, dags = fleet
+    reset_runner_cache_stats()
+    run_service(dags, trace4, ServiceConfig(replan=RCFG), seed=7)
+    stats = runner_cache_stats()
+    assert stats["traces"] == 0
+    assert stats["misses"] == 0
+    assert stats["hits"] >= trace4.num_rounds
+
+
+# ---------------------------------------------------------------------------
+# chaos harness
+# ---------------------------------------------------------------------------
+
+def test_chaos_crash_is_retried_transparently(fleet, trace4,
+                                              service_report):
+    _, dags = fleet
+    sleeps = []
+    cfg = ServiceConfig(replan=RCFG, backoff_s=0.05,
+                        chaos=ChaosConfig(crash_rounds=(1,)))
+    rep = run_service(dags, trace4, cfg, seed=7, sleeper=sleeps.append)
+    assert rep.counters["retries"] == 1
+    assert rep.counters["crashes"] == 0      # the retry recovered
+    assert rep.rounds[0].retries_used == 1
+    np.testing.assert_allclose(sleeps, [0.05])
+    # an injected crash before the solve must not perturb the plans
+    for x_c, x_p in zip(rep.plans, service_report.plans):
+        np.testing.assert_array_equal(x_c, x_p)
+
+
+def test_chaos_persistent_crash_trips_breaker_and_pins(fleet):
+    env, dags = fleet
+    trace = zero_drift_trace(env, rounds=6)
+    cfg = ServiceConfig(replan=RCFG, retries=1, breaker_threshold=2,
+                        breaker_cooldown=2,
+                        chaos=ChaosConfig(p_crash=1.0))
+    rep = run_service(dags, trace, cfg, seed=7)
+    # k=1,2 fail and trip; k=3,4 skipped while open; k=5 probe fails
+    assert rep.counters["crashes"] == 3
+    assert rep.counters["breaker_opened"] == 2
+    assert [r.breaker_state for r in rep.rounds] == \
+        ["closed", "closed", "open", "open", "open"]
+    assert all(r.rung == ("pinned",) * 2 for r in rep.rounds)
+    assert rep.fallback_counts["pinned"] == 10
+    # pinned last-good plans keep the service fully available
+    assert rep.availability() == 1.0
+    for pr_dag, x in zip(dags, rep.plans):
+        assert plan_is_valid(SimProblem.build(pr_dag, env), x)
+
+
+def test_chaos_nan_env_falls_back_to_last_good(fleet, trace4):
+    _, dags = fleet
+    cfg = ServiceConfig(replan=RCFG,
+                        chaos=ChaosConfig(nan_env_rounds=(1,)))
+    rep = run_service(dags, trace4, cfg, seed=7)
+    assert rep.counters["stale_env_rounds"] == 1
+    assert rep.rounds[0].stale_env
+    assert not rep.rounds[1].stale_env
+    assert rep.availability() == 1.0
+    for pr_dag, x in zip(dags, rep.plans):
+        assert plan_is_valid(SimProblem.build(pr_dag, trace4.env_at(3)), x)
+
+
+def test_chaos_stall_is_flagged_and_pinned(fleet):
+    env, dags = fleet
+    trace = zero_drift_trace(env, rounds=5)
+    cfg = ServiceConfig(replan=RCFG, straggler_warmup=2,
+                        treat_stalls_as_failures=True,
+                        chaos=ChaosConfig(stall_rounds=(3,), stall_s=50.0))
+    rep = run_service(dags, trace, cfg, seed=7)
+    assert rep.counters["stalls_flagged"] == 1
+    assert rep.rounds[2].stalled and rep.rounds[2].solver_failed
+    assert rep.rounds[2].rung == ("pinned",) * 2
+    assert rep.rounds[2].wall_s > 50.0
+    assert not rep.rounds[3].stalled         # next round solves normally
+    assert rep.rounds[3].rung == ("warm",) * 2
+
+
+def test_chaos_mid_round_node_loss_revalidates(fleet):
+    env, dags = fleet
+    s_last = env.num_servers - 1
+    trace = zero_drift_trace(env, rounds=3)
+    cfg = ServiceConfig(replan=RCFG,
+                        chaos=ChaosConfig(mid_round_down={2: s_last}))
+    rep = run_service(dags, trace, cfg, seed=7)
+    assert rep.availability() == 1.0
+    down = _down_env(env, s_last)
+    for dag, x in zip(dags, rep.plans):
+        assert x is not None
+        # the guarantee: served plans are valid on the env they RUN on
+        assert plan_is_valid(SimProblem.build(dag, down), x)
+    for r in rep.rounds:
+        assert all(g in LADDER_RUNGS for g in r.rung)
+
+
+def test_chaos_compound_suite_stays_available(fleet):
+    """The acceptance gate: every fault class at once, deterministic, no
+    raise, availability >= 99%, every served plan valid and finite."""
+    env, dags = fleet
+    trace = sample_trace("node-loss", env, rounds=8, seed=2)
+    cfg = ServiceConfig(
+        replan=RCFG, retries=2, treat_stalls_as_failures=True,
+        straggler_warmup=2,
+        chaos=ChaosConfig(crash_rounds=(2,), nan_env_rounds=(3,),
+                          stall_rounds=(5,), stall_s=25.0,
+                          mid_round_down={6: env.num_servers - 1}))
+    rep = run_service(dags, trace, cfg, seed=7, sleeper=lambda s: None)
+    assert rep.availability() >= 0.99
+    assert sum(rep.fallback_counts.values()) == 7 * len(dags)
+    assert rep.counters["stale_env_rounds"] == 1
+    assert rep.counters["stalls_flagged"] == 1
+    ttp = rep.time_to_plan()
+    assert np.isfinite(ttp["p99"]) and ttp["p99"] > 0.0
+    # determinism: the same chaos replays to the same plans
+    rep2 = run_service(dags, trace, cfg, seed=7, sleeper=lambda s: None)
+    for x1, x2 in zip(rep.plans, rep2.plans):
+        np.testing.assert_array_equal(x1, x2)
+
+
+# ---------------------------------------------------------------------------
+# watchdog, triage, rate estimation
+# ---------------------------------------------------------------------------
+
+def test_watchdog_cuts_to_pinned_under_tiny_slo(fleet, trace4):
+    _, dags = fleet
+    cfg = ServiceConfig(replan=RCFG, burst=BURST, slo_s=1e-6)
+    rep = run_service(dags, trace4, cfg, seed=7)
+    # round 1 has no per-iteration estimate yet: it must run warm
+    assert rep.rounds[0].rung == ("warm",) * 2
+    assert rep.rounds[0].budget_iters == float("inf")
+    # once the estimate exists, a 1 µs SLO can't fit any PSO rung
+    for r in rep.rounds[1:]:
+        assert r.rung == ("pinned",) * 2
+        assert r.budget_iters < BURST.max_iters
+        assert r.replan is None
+    assert rep.counters["watchdog_cuts"] == len(rep.rounds) - 1
+    assert rep.availability() == 1.0
+
+
+def test_triage_rejects_unsavable_apps(fleet):
+    env, _ = fleet
+    dags = []
+    for i, net in enumerate(("alexnet", "googlenet")):
+        dag = zoo.build(net, pin_server=i)
+        h, _ = heft_makespan(dag, env)
+        # app 0 savable, app 1's deadline is impossible even for HEFT
+        dags.append(dag.with_deadline(
+            np.array([1.5 * h if i == 0 else 1e-4])))
+    trace = zero_drift_trace(env, rounds=3)
+    cfg = ServiceConfig(replan=RCFG_T, triage_margin=1.0)
+    rep = run_service(dags, trace, cfg, seed=7)
+    assert all(r.rejected_apps == 1 for r in rep.rounds)
+    assert rep.counters["rejected_apps"] == 2
+    # triage masks arrivals; the plans themselves still get served
+    assert rep.availability() == 1.0
+    no_triage = run_service(dags, trace,
+                            ServiceConfig(replan=RCFG_T), seed=7)
+    assert no_triage.counters["rejected_apps"] == 0
+
+
+def test_estimate_rates_solves_on_observed_arrivals(fleet):
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=4, seed=5)
+    cfg = ServiceConfig(replan=RCFG_T, estimate_rates=True,
+                        window_rounds=2)
+    rep = run_service(dags, trace, cfg, seed=7)
+    assert all(r.est_rate > 0.0 for r in rep.rounds)
+    assert all(r.rung == ("warm",) * 2 for r in rep.rounds)
+    assert rep.availability() == 1.0
+    for dag, x in zip(dags, rep.plans):
+        assert plan_is_valid(SimProblem.build(dag, trace.env_at(3)), x)

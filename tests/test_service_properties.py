@@ -1,0 +1,149 @@
+"""Property coverage for rescue under COMPOUND drift (DESIGN.md §11):
+a round that loses a node AND surges the request load at once. The
+invariants, over random fleets, both fitness backends:
+
+  * feasible-by-construction — surviving plans are well-formed, honor
+    pins, and (when the log says feasible) pass the full stale-plan
+    guard ``plan_is_valid`` under the drifted environment, downed links
+    included;
+  * replay-exact — the logged per-problem cost is reproduced by an
+    independent ``incumbent_keys`` replay of the final plans under the
+    same environment and arrival draws (infeasible rounds key at or
+    above ``INFEASIBLE_OFFSET``).
+
+Runs as a seeded sweep that always executes plus ``@given`` property
+tests when hypothesis is installed (tests/hypo_compat.py).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DriftEvent, EnvTrace, INFEASIBLE_OFFSET,
+                        PSOGAConfig, ReplanConfig, SimProblem,
+                        TrafficConfig, heft_makespan, paper_environment,
+                        plan_is_valid, replan_fleet, simulate_np)
+from repro.core.dag import LayerDAG
+from repro.core.online import _identity_event, _round_arrivals, incumbent_keys
+
+from hypo_compat import given, st
+
+TINY = PSOGAConfig(pop_size=12, max_iters=24, stall_iters=10)
+TP = TrafficConfig(rate=0.5, max_requests=3, mc_solver=1, mc_eval=2)
+
+
+def compound_case(seed: int):
+    """Two random pinned DAGs + a 2-round trace whose drift round churns
+    out a (non-pinned) server AND surges the arrival rate."""
+    rng = np.random.default_rng(seed)
+    env = paper_environment()
+    s = env.num_servers
+    dags = []
+    for _ in range(2):
+        p = int(rng.integers(4, 9))
+        edges, mbs = [], []
+        for j in range(1, p):
+            parents = rng.choice(j, size=min(j, int(rng.integers(1, 3))),
+                                 replace=False)
+            for u in parents:
+                edges.append((int(u), j))
+                mbs.append(float(rng.uniform(0.01, 1.0)))
+        pinned = np.full(p, -1, np.int32)
+        devices = np.nonzero(np.asarray(env.tier) == 2)[0]
+        pinned[0] = int(rng.choice(devices))
+        dag = LayerDAG(compute=rng.uniform(0.05, 2.0, p),
+                       edges=np.asarray(edges, np.int32).reshape(-1, 2),
+                       edge_mb=np.asarray(mbs),
+                       app_id=np.zeros(p, np.int32),
+                       deadline=np.asarray([np.inf]),
+                       pinned=pinned)
+        h, _ = heft_makespan(dag, env)
+        dl = float(rng.choice([1.5, 3.0, 8.0])) * h
+        dags.append(dag.with_deadline(np.asarray([dl])))
+    pinned_servers = {int(d.pinned[0]) for d in dags}
+    down = np.zeros(s, bool)
+    down[int(rng.choice([i for i in range(s)
+                         if i not in pinned_servers]))] = True
+    surge = float(rng.uniform(1.5, 3.0))
+    ev = DriftEvent(t=60.0, label=f"compound[{surge:.2f}]",
+                    bw_scale=np.ones((s, s)), power_scale=np.ones(s),
+                    price_scale=np.ones(s), down=down, load_scale=surge)
+    trace = EnvTrace(base=env, events=(_identity_event(s, 0.0, "base"), ev))
+    return dags, trace
+
+
+def check_compound_rescue(seed: int, backend: str,
+                          traffic: bool = True) -> None:
+    dags, trace = compound_case(seed)
+    pso = dataclasses.replace(TINY, fitness_backend=backend)
+    cfg = ReplanConfig(pso=pso, traffic=TP if traffic else None)
+    rep = replan_fleet(dags, trace, cfg, seed=seed)
+    log = rep.rounds[0]
+    probs = [SimProblem.build(d, trace.env_at(1)) for d in dags]
+    arr = _round_arrivals(cfg, dags, trace.events[1], seed + 1000)
+
+    for i, (pr, x) in enumerate(zip(probs, rep.plans)):
+        # feasible-by-construction: well-formed, pins honored, and when
+        # the round claims feasibility the plan survives the full guard
+        # (every edge on a live link) under the POST-churn environment.
+        x = np.asarray(x)
+        assert x.shape == (pr.num_layers,)
+        assert np.all((x >= 0) & (x < pr.num_servers))
+        pin = np.asarray(pr.pinned) >= 0
+        assert np.all(x[pin] == np.asarray(pr.pinned)[pin])
+        if log.feasible[i]:
+            assert plan_is_valid(pr, x)
+
+    # replay-exact: an independent key replay of the surviving plans
+    # reproduces the logged costs (same env, same arrival draws).
+    keys = incumbent_keys(probs, list(rep.plans), pso, arrivals=arr)
+    for i in range(len(dags)):
+        if log.feasible[i]:
+            assert keys[i] == pytest.approx(float(log.cost[i]), rel=1e-5)
+        else:
+            assert not np.isfinite(log.cost[i])
+            assert keys[i] >= INFEASIBLE_OFFSET
+
+
+# --------------------------------------------------------------------------
+# seeded sweep — always runs, hypothesis or not
+# --------------------------------------------------------------------------
+
+def test_compound_rescue_scan_sweep():
+    for seed in range(8):
+        check_compound_rescue(seed, "scan")
+
+
+def test_compound_rescue_scan_no_traffic_sweep():
+    """Node churn alone (no request stream): the logged cost must equal
+    a plain simulator replay of the surviving plan."""
+    for seed in range(6):
+        dags, trace = compound_case(seed)
+        cfg = ReplanConfig(pso=TINY)
+        rep = replan_fleet(dags, trace, cfg, seed=seed)
+        log = rep.rounds[0]
+        probs = [SimProblem.build(d, trace.env_at(1)) for d in dags]
+        for i, (pr, x) in enumerate(zip(probs, rep.plans)):
+            if log.feasible[i]:
+                assert plan_is_valid(pr, x)
+                replay = simulate_np(pr, np.asarray(x, np.int64),
+                                     faithful=TINY.faithful_sim)
+                assert float(log.cost[i]) == \
+                    pytest.approx(float(replay.total_cost), rel=1e-6)
+            else:
+                assert not np.isfinite(log.cost[i])
+
+
+@pytest.mark.slow
+def test_compound_rescue_pallas_sweep():
+    for seed in range(2):
+        check_compound_rescue(seed, "pallas")
+
+
+# --------------------------------------------------------------------------
+# hypothesis properties — run when hypothesis is installed
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_compound_rescue_hypothesis(seed):
+    check_compound_rescue(seed, "scan")

@@ -1,0 +1,166 @@
+"""Front-door input validation (DESIGN.md §11): malformed rates, drift
+events, and arrival arrays must die at the boundary with a clear
+ValueError — not as NaN fitness keys inside a jitted solver. One
+regression test per rejection."""
+import numpy as np
+import pytest
+
+from repro.core import (DriftEvent, EnvTrace, TrafficConfig,
+                        paper_environment, sample_arrivals, sample_trace)
+from repro.core.batch import pack_arrivals
+
+
+# ---------------------------------------------------------------------------
+# sample_arrivals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [float("nan"), 0.0, -0.5, float("inf")])
+def test_sample_arrivals_rejects_bad_rate(rate):
+    with pytest.raises(ValueError, match="rate"):
+        sample_arrivals("poisson", n_apps=2, rate=rate)
+
+
+@pytest.mark.parametrize("horizon", [float("nan"), 0.0, -1.0])
+def test_sample_arrivals_rejects_bad_horizon(horizon):
+    with pytest.raises(ValueError, match="horizon"):
+        sample_arrivals("poisson", n_apps=2, horizon=horizon)
+
+
+@pytest.mark.parametrize("field,kwargs", [
+    ("n_apps", {"n_apps": 0}),
+    ("max_requests", {"n_apps": 1, "max_requests": 0}),
+    ("n_seeds", {"n_apps": 1, "n_seeds": 0}),
+])
+def test_sample_arrivals_rejects_bad_counts(field, kwargs):
+    with pytest.raises(ValueError, match=field):
+        sample_arrivals("poisson", **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# TrafficConfig
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs,match", [
+    ({"kind": "tsunami"}, "kind"),
+    ({"rate": float("nan")}, "rate"),
+    ({"rate": 0.0}, "rate"),
+    ({"rate": -1.0}, "rate"),
+    ({"horizon": 0.0}, "horizon"),
+    ({"max_requests": 0}, "max_requests"),
+    ({"mc_solver": 0}, "mc_solver"),
+    ({"mc_eval": 0}, "mc_eval"),
+    ({"miss_budget": float("nan")}, "miss_budget"),
+    ({"miss_budget": 1.5}, "miss_budget"),
+    ({"miss_budget": -0.1}, "miss_budget"),
+])
+def test_traffic_config_rejects(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        TrafficConfig(**kwargs)
+
+
+def test_traffic_config_accepts_defaults():
+    cfg = TrafficConfig()
+    assert cfg.rate > 0.0
+
+
+# ---------------------------------------------------------------------------
+# sample_trace
+# ---------------------------------------------------------------------------
+
+def test_sample_trace_rejects_zero_rounds():
+    with pytest.raises(ValueError, match="rounds"):
+        sample_trace("wifi-fade", paper_environment(), rounds=0)
+
+
+@pytest.mark.parametrize("period", [float("nan"), 0.0, -3.0])
+def test_sample_trace_rejects_bad_period(period):
+    with pytest.raises(ValueError, match="period"):
+        sample_trace("wifi-fade", paper_environment(), rounds=2,
+                     period=period)
+
+
+@pytest.mark.parametrize("severity", [float("nan"), 0.0, -0.2, 1.5])
+def test_sample_trace_rejects_bad_severity(severity):
+    with pytest.raises(ValueError, match="severity"):
+        sample_trace("congestion", paper_environment(), rounds=2,
+                     severity=severity)
+
+
+# ---------------------------------------------------------------------------
+# DriftEvent / EnvTrace
+# ---------------------------------------------------------------------------
+
+def _event(s=3, **overrides):
+    base = dict(t=0.0, label="test",
+                bw_scale=np.ones((s, s)), power_scale=np.ones(s),
+                price_scale=np.ones(s), down=np.zeros(s, bool))
+    base.update(overrides)
+    return DriftEvent(**base)
+
+
+def test_drift_event_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="malformed drift event"):
+        _event(bw_scale=np.ones((3, 4)))
+    with pytest.raises(ValueError, match="malformed drift event"):
+        _event(power_scale=np.ones(5))
+
+
+def test_drift_event_rejects_nan_scales():
+    bad = np.ones((3, 3))
+    bad[0, 1] = np.nan
+    with pytest.raises(ValueError, match="bw_scale"):
+        _event(bw_scale=bad)
+
+
+def test_drift_event_rejects_negative_scales():
+    with pytest.raises(ValueError, match="power_scale"):
+        _event(power_scale=np.array([1.0, -0.5, 1.0]))
+
+
+@pytest.mark.parametrize("t", [float("nan"), -1.0])
+def test_drift_event_rejects_bad_time(t):
+    with pytest.raises(ValueError, match="t must be"):
+        _event(t=t)
+
+
+@pytest.mark.parametrize("load", [float("nan"), 0.0, -2.0, float("inf")])
+def test_drift_event_rejects_bad_load_scale(load):
+    with pytest.raises(ValueError, match="load_scale"):
+        _event(load_scale=load)
+
+
+def test_env_trace_rejects_empty_events():
+    with pytest.raises(ValueError, match="at least one event"):
+        EnvTrace(base=paper_environment(), events=())
+
+
+def test_env_trace_rejects_server_count_mismatch():
+    env = paper_environment()
+    with pytest.raises(ValueError, match="servers"):
+        EnvTrace(base=env, events=(_event(s=env.num_servers + 1),))
+
+
+# ---------------------------------------------------------------------------
+# pack_arrivals
+# ---------------------------------------------------------------------------
+
+def test_pack_arrivals_rejects_nan_times():
+    a = np.zeros((2, 1, 3))
+    a[0, 0, 1] = np.nan
+    with pytest.raises(ValueError, match="NaN or negative"):
+        pack_arrivals([a], max_apps=2)
+
+
+def test_pack_arrivals_rejects_negative_times():
+    a = np.zeros((2, 1, 3))
+    a[1, 0, 0] = -0.25
+    with pytest.raises(ValueError, match="NaN or negative"):
+        pack_arrivals([a], max_apps=2)
+
+
+def test_pack_arrivals_accepts_inf_padding():
+    a = np.full((2, 1, 3), np.inf)
+    a[:, 0, 0] = 0.5
+    out = pack_arrivals([a], max_apps=2)
+    assert out.shape == (1, 2, 2, 3)
+    assert np.isinf(out[0, :, 1, :]).all()    # padded app never arrives
