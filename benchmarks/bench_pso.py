@@ -33,6 +33,10 @@ from .common import bench_metadata, print_csv
 #: moderate budget so the N=64 fleet stays CPU-friendly
 FLEET_CFG = PSOGAConfig(pop_size=32, max_iters=80, stall_iters=25)
 
+#: tiny budget for the N>=1024 mixed-size fleet (the bench measures
+#: bucketed-vs-global PACKING overhead, not solution quality)
+MIXED_CFG = PSOGAConfig(pop_size=16, max_iters=12, stall_iters=6)
+
 
 def make_fleet(n: int, env=None):
     """N heterogeneous problems: mixed nets, pins, and deadline ratios."""
@@ -47,17 +51,78 @@ def make_fleet(n: int, env=None):
     return problems
 
 
-def bench_fleet(n: int, cfg: PSOGAConfig = FLEET_CFG):
+def make_mixed_fleet(n: int, env=None):
+    """A mostly-small fleet with a long tail — the regime DESIGN.md §12
+    buckets for: ~72% alexnet (11 layers -> bucket 16), ~20% vgg19
+    (25 -> 32), ~7% googlenet (83 -> 128), and one resnet101 per 128
+    problems (338 -> 512) that used to drag EVERY problem to the global
+    512-gene padding."""
+    env = env or paper_environment()
+    problems = []
+    for i in range(n):
+        if i % 128 == 0:
+            net = "resnet101"
+        elif i % 16 == 8:
+            net = "googlenet"
+        elif i % 5 == 1:
+            net = "vgg19"
+        else:
+            net = "alexnet"
+        dag = zoo.build(net, pin_server=i % 10)
+        h, _ = heft_makespan(dag, env)
+        problems.append((dag.with_deadline(np.array([3.0 * h])), env))
+    return problems
+
+
+def bench_mixed_fleet(n: int, mesh=None, cfg: PSOGAConfig = MIXED_CFG):
+    """Bucketed vs global-padding packing at N>=1024, optionally sharded
+    over a device mesh (DESIGN.md §12). Reports the bucketed-vs-global
+    speedup, per-device throughput, and fitness parity between the two
+    packings (bucket shape must never change a gene)."""
+    import jax as _jax
+
+    from repro.launch.mesh import data_shard_count
+
+    problems = make_mixed_fleet(n)
+    t0 = time.perf_counter()
+    r_bucket = run_pso_ga_batch(problems, cfg, seed=0, bucket=True,
+                                mesh=mesh)
+    t_bucket = time.perf_counter() - t0
+    t0 = time.perf_counter()                # warm: all runners compiled
+    run_pso_ga_batch(problems, cfg, seed=0, bucket=True, mesh=mesh)
+    t_bucket_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_global = run_pso_ga_batch(problems, cfg, seed=0, bucket=False,
+                                mesh=mesh)
+    t_global = time.perf_counter() - t0
+    match = sum(a.best_fitness == b.best_fitness
+                for a, b in zip(r_bucket, r_global))
+    shards = data_shard_count(mesh) if mesh is not None else 1
+    return {
+        "n_problems": n,
+        "devices": int(_jax.device_count()),
+        "data_shards": shards,
+        "bucketed_s": t_bucket,
+        "bucketed_warm_s": t_bucket_warm,
+        "global_pad_s": t_global,
+        "bucket_speedup": t_global / t_bucket_warm,
+        "problems_per_s": n / t_bucket_warm,
+        "problems_per_s_per_shard": n / t_bucket_warm / shards,
+        "fitness_match": f"{match}/{n}",
+    }
+
+
+def bench_fleet(n: int, cfg: PSOGAConfig = FLEET_CFG, mesh=None):
     problems = make_fleet(n)
     t0 = time.perf_counter()
     seq = [run_pso_ga(dag, env, cfg, seed=i)
            for i, (dag, env) in enumerate(problems)]
     t_seq = time.perf_counter() - t0
     t0 = time.perf_counter()
-    bat = run_pso_ga_batch(problems, cfg, seed=list(range(n)))
+    bat = run_pso_ga_batch(problems, cfg, seed=list(range(n)), mesh=mesh)
     t_batch = time.perf_counter() - t0
     t0 = time.perf_counter()                 # second call hits the compiled cache
-    run_pso_ga_batch(problems, cfg, seed=list(range(n)))
+    run_pso_ga_batch(problems, cfg, seed=list(range(n)), mesh=mesh)
     t_cached = time.perf_counter() - t0
     match = sum(a.best_fitness == b.best_fitness
                 for a, b in zip(seq, bat))
@@ -117,17 +182,34 @@ def main() -> None:
     ap.add_argument("--skip-fleet", action="store_true",
                     help="skip the sequential-vs-batched fleet benchmark")
     ap.add_argument("--fleet-sizes", type=int, nargs="*", default=[1, 8, 64])
+    ap.add_argument("--mesh", default="none",
+                    choices=("none", "host", "prod"),
+                    help="shard the fleet solves over this device mesh "
+                         "(DESIGN.md §12); 'host' uses the visible "
+                         "devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 to "
+                         "simulate 8 on one host)")
+    ap.add_argument("--mixed-fleet", type=int, default=0, metavar="N",
+                    help="also run the N>=1024 mixed-size fleet bench: "
+                         "bucketed vs global padding, per-device "
+                         "scaling (DESIGN.md §12); 0 skips")
+    ap.add_argument("--skip-nets", action="store_true",
+                    help="skip the per-net swarm-iteration microbench")
     args = ap.parse_args()
-    rows = [bench_net(n, pop=args.pop, backend=args.backend)
-            for n in ("alexnet", "vgg19", "googlenet", "resnet101")]
-    print_csv(rows, ["net", "layers", "pop", "backend", "us_per_iter",
-                     "evals_per_s", "layersteps_per_s"])
+    from repro.launch.mesh import resolve_mesh
+    mesh = resolve_mesh(args.mesh)
+    rows = []
+    if not args.skip_nets:
+        rows = [bench_net(n, pop=args.pop, backend=args.backend)
+                for n in ("alexnet", "vgg19", "googlenet", "resnet101")]
+        print_csv(rows, ["net", "layers", "pop", "backend", "us_per_iter",
+                         "evals_per_s", "layersteps_per_s"])
     fleet_rows = []
     if not args.skip_fleet:
         fleet_cfg = dataclasses.replace(FLEET_CFG,
                                         fitness_backend=args.backend)
         for n in args.fleet_sizes:
-            row = bench_fleet(n, fleet_cfg)
+            row = bench_fleet(n, fleet_cfg, mesh=mesh)
             print(f"# fleet N={n}: seq {row['seq_s']:.2f}s, "
                   f"batch {row['batch_s']:.2f}s "
                   f"({row['speedup']:.1f}x; cached "
@@ -137,16 +219,42 @@ def main() -> None:
         print_csv(fleet_rows, ["n_problems", "seq_s", "batch_s",
                                "batch_cached_s", "speedup",
                                "speedup_cached", "fitness_match"])
+    mixed_row = None
+    if args.mixed_fleet:
+        mixed_cfg = dataclasses.replace(MIXED_CFG,
+                                        fitness_backend=args.backend)
+        mixed_row = bench_mixed_fleet(args.mixed_fleet, mesh=mesh,
+                                      cfg=mixed_cfg)
+        print(f"# mixed fleet N={mixed_row['n_problems']} on "
+              f"{mixed_row['devices']} devices "
+              f"({mixed_row['data_shards']} shards): bucketed "
+              f"{mixed_row['bucketed_warm_s']:.2f}s warm vs global-pad "
+              f"{mixed_row['global_pad_s']:.2f}s "
+              f"({mixed_row['bucket_speedup']:.1f}x), "
+              f"{mixed_row['problems_per_s']:.0f} problems/s, "
+              f"fitness match {mixed_row['fitness_match']}", flush=True)
     if args.json:
-        payload = {
+        # merge into an existing BENCH_pso.json so a mixed-fleet-only or
+        # fleet-only run updates ITS entries without dropping the rest
+        payload = {}
+        try:
+            with open(args.json) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            pass
+        payload.update({
             "bench": "bench_pso",
-            "meta": bench_metadata(seeds=[0]),
+            "meta": bench_metadata(seeds=[0], mesh=mesh),
             "backend": args.backend,
             "pop": args.pop,
             "device": jax.devices()[0].platform,
-            "nets": rows,
-            "fleet": fleet_rows,
-        }
+        })
+        if rows:
+            payload["nets"] = rows
+        if fleet_rows:
+            payload["fleet"] = fleet_rows
+        if mixed_row is not None:
+            payload["mixed_fleet"] = mixed_row
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")

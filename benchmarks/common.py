@@ -119,11 +119,14 @@ def print_csv(rows: List[Dict], cols: List[str]) -> None:
                        else str(r[c]) for c in cols))
 
 
-def bench_metadata(seeds: Optional[Sequence[int]] = None) -> Dict:
+def bench_metadata(seeds: Optional[Sequence[int]] = None,
+                   mesh=None) -> Dict:
     """Reproducibility stamp for every ``BENCH_*.json`` payload: library
-    versions, platform, the repo's git sha (dirty-marked), and the
-    protocol seeds the run used — enough to re-run the exact cell a
-    number came from months later."""
+    versions, platform, device COUNT, the repo's git sha (dirty-marked),
+    and the protocol seeds the run used — enough to re-run the exact
+    cell a number came from months later. Pass the solver ``mesh`` when
+    a run sharded the fleet (DESIGN.md §12) so multi-device entries are
+    interpretable: its axis names and shape are stamped alongside."""
     import jax
 
     try:
@@ -137,12 +140,19 @@ def bench_metadata(seeds: Optional[Sequence[int]] = None) -> Dict:
         git_sha = (sha + ("-dirty" if dirty else "")) if sha else "unknown"
     except (OSError, subprocess.SubprocessError):
         git_sha = "unknown"
-    return {
+    meta = {
         "jax_version": jax.__version__,
         "numpy_version": np.__version__,
         "python_version": platform.python_version(),
         "platform": platform.platform(),
         "device": jax.devices()[0].platform,
+        "device_count": int(jax.device_count()),
         "git_sha": git_sha,
         "seeds": list(map(int, seeds)) if seeds is not None else [],
     }
+    if mesh is not None:
+        meta["mesh"] = {
+            "axes": list(mesh.axis_names),
+            "shape": [int(s) for s in mesh.devices.shape],
+        }
+    return meta

@@ -21,16 +21,17 @@ from .common import print_csv
 FAST = PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40)
 
 
-def run(archs, ratios=(1.2, 1.5, 3.0)):
+def run(archs, ratios=(1.2, 1.5, 3.0), mesh=None):
     env = tpu_fleet_environment()
     shape = SHAPES[1]                              # prefill_32k
     cells = [(arch, ratio) for arch in archs for ratio in ratios]
 
-    # one batched PSO-GA fleet for every (arch, ratio) cell
+    # one batched PSO-GA fleet for every (arch, ratio) cell, optionally
+    # sharded over the device mesh (DESIGN.md §12)
     t0 = time.perf_counter()
     plans = plan_offload_batch(
         [(get(arch), shape, ratio) for arch, ratio in cells],
-        env=env, pso=FAST, seed=0)
+        env=env, pso=FAST, seed=0, mesh=mesh)
     batch_wall = time.perf_counter() - t0
     print(f"# batched PSO-GA: {len(cells)} problems in {batch_wall:.2f}s "
           f"({batch_wall / len(cells):.3f}s/problem)", flush=True)
@@ -68,8 +69,13 @@ def run(archs, ratios=(1.2, 1.5, 3.0)):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", nargs="*", default=list(names()))
+    ap.add_argument("--mesh", default="none",
+                    choices=("none", "host", "prod"),
+                    help="shard the batched solve over this device mesh "
+                         "(DESIGN.md §12); plans are identical either way")
     args = ap.parse_args()
-    rows = run(args.archs)
+    from repro.launch.mesh import resolve_mesh
+    rows = run(args.archs, mesh=resolve_mesh(args.mesh))
     print_csv(rows, ["arch", "ratio", "psoga_cost", "greedy_cost",
                      "uniform_cost", "psoga_stages", "wall_s"])
 

@@ -31,7 +31,8 @@ from .simulator import (PaddedProblem, SimProblem, SimResult,
                         build_simulator, pad_problem, simulate_np,
                         simulate_padded, simulate_swarm)
 from .pso_ga import PSOGAConfig, PSOGAResult, run_pso_ga, swarm_step
-from .batch import (pack_arrivals, pack_problems, run_pso_ga_batch,
+from .batch import (FleetBucket, PackedFleet, pack_arrivals, pack_fleet,
+                    pack_problems, run_pso_ga_batch,
                     runner_cache_stats, reset_runner_cache_stats)
 from .online import (DriftEvent, EnvTrace, OnlineReport, ReplanConfig,
                      RoundLog, TRACE_KINDS, plan_is_valid, replan_fleet,
@@ -59,7 +60,8 @@ __all__ = [
     "SimProblem", "SimResult", "build_simulator", "simulate_np",
     "PaddedProblem", "pad_problem", "simulate_padded", "simulate_swarm",
     "PSOGAConfig", "PSOGAResult", "run_pso_ga", "swarm_step",
-    "pack_arrivals", "pack_problems", "run_pso_ga_batch",
+    "FleetBucket", "PackedFleet", "pack_arrivals", "pack_fleet",
+    "pack_problems", "run_pso_ga_batch",
     "runner_cache_stats", "reset_runner_cache_stats",
     "DriftEvent", "EnvTrace", "OnlineReport", "ReplanConfig", "RoundLog",
     "TRACE_KINDS", "plan_is_valid", "replan_fleet", "replan_round",

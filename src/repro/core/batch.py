@@ -1,14 +1,19 @@
 """Fleet-scale batched PSO-GA: solve N heterogeneous offloading problems
-in ONE jitted program (DESIGN.md §4).
+in ONE jitted program per shape bucket (DESIGN.md §4, §12).
 
 The sequential solver re-traces and re-compiles ``lax.while_loop`` per
 problem — fatal when a production planner must place many (DAG, env)
 pairs per second. This module packs N heterogeneous ``SimProblem``s into
-a single ``PaddedProblem`` whose leaves carry a leading problem axis
-(layers padded to ``max_p``, servers to ``max_S``, with validity encoded
-so padded layers are zero-cost no-ops and padded servers unreachable),
-then runs the entire fleet of swarms as ``vmap``-over-problems of
-``swarm_step`` inside ONE ``lax.while_loop``.
+a ``PackedFleet`` of power-of-two ``(max_p, max_S)`` shape buckets: each
+bucket stacks its members into one ``PaddedProblem`` whose leaves carry
+a leading problem axis (layers padded to the BUCKET's ``max_p``, servers
+to its ``max_S``, with validity encoded so padded layers are zero-cost
+no-ops and padded servers unreachable), then runs each bucket's fleet of
+swarms as ``vmap``-over-problems of ``swarm_step`` inside ONE
+``lax.while_loop``. Bucket rounding is per-group, not fleet-global, so a
+mostly-small fleet with one resnet101 no longer pads every problem ~8×
+(DESIGN.md §12); results are scattered back through each bucket's
+original-index permutation, restoring input order exactly.
 
 Convergence is tracked per problem: a problem whose stall counter hits
 ``cfg.stall_iters`` (or that reaches ``cfg.max_iters``) is *frozen* — its
@@ -20,18 +25,29 @@ problem converges.
 Because each problem keeps its own PRNG key (seeded exactly like
 ``run_pso_ga``), its own link-aware initial swarm, and mutation/crossover
 bounds drawn from its TRUE ``(p, S)`` sizes, the batched solver matches
-the sequential solver gene-for-gene in fitness (see
-``tests/test_batch.py::test_batched_matches_sequential``).
+the sequential solver gene-for-gene in fitness — independent of which
+bucket (or which co-tenants) a problem lands with (see
+``tests/test_batch.py::test_batched_matches_sequential`` and the
+bucket/permutation invariants in ``tests/test_fleet.py``).
 
-Compiled programs are cached per config, with jit specializing on the
-``(N, max_p, max_S, ...)`` shape bucket underneath (``max_p``/``max_S``
-round up to powers of two in ``pack_problems``), so repeated fleets with
-similar shapes skip retracing entirely.
+With a ``mesh`` (``launch.mesh``), each bucket's runner is wrapped in a
+``shard_map`` over the mesh's non-"model" axes: the problem axis splits
+across the data shards (N padded up to a multiple of the shard count
+with masked dummy problems — replicas of row 0 whose results are
+discarded), each shard runs its own while_loop to local convergence, and
+per-problem freezing makes the sharded solve gene-for-gene identical to
+the single-device path (DESIGN.md §12).
+
+Compiled programs are cached per ``(cfg, traffic?, shape-bucket, mesh)``,
+with jit specializing on the exact ``(N, max_p, max_S, ...)`` shapes
+underneath, so repeated fleets with similar shapes skip retracing
+entirely.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +61,8 @@ from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
 
 __all__ = ["pack_problems", "pack_arrivals", "run_pso_ga_batch",
-           "bucket_size", "runner_cache_info", "runner_cache_stats",
+           "bucket_size", "FleetBucket", "PackedFleet", "pack_fleet",
+           "runner_cache_info", "runner_cache_stats",
            "reset_runner_cache_stats"]
 
 ProblemLike = Union[SimProblem, Tuple[LayerDAG, Environment]]
@@ -91,12 +108,17 @@ def _normalize_seeds(seed, n: int) -> List[int]:
 
 def pack_problems(problems: Sequence[ProblemLike],
                   bucket: bool = True) -> PaddedProblem:
-    """Pack N heterogeneous problems into one stacked ``PaddedProblem``.
+    """Pack N heterogeneous problems into one stacked ``PaddedProblem``
+    at a single fleet-global shape.
 
     Every leaf gains a leading ``N`` axis; per-problem true sizes live in
     the ``num_layers`` / ``num_servers`` / ``num_apps`` fields (shape
     (N,)). With ``bucket=True`` the layer/server axes round up to power-
     of-two buckets so fleets of similar shapes share compiled programs.
+
+    This is the single-shape primitive — the fleet solver now groups
+    problems into per-size buckets via ``pack_fleet`` instead of padding
+    the whole fleet to the global max (DESIGN.md §12).
     """
     probs = _as_problems(problems)
     if not probs:
@@ -114,8 +136,78 @@ def pack_problems(problems: Sequence[ProblemLike],
     return jax.tree.map(lambda *leaves: jnp.stack(leaves), *padded)
 
 
+class FleetBucket(NamedTuple):
+    """One shape bucket of a ``PackedFleet``: the members stacked at the
+    bucket's padded shape, plus their original fleet indices."""
+    ppb: PaddedProblem           # stacked leaves, leading axis = len(idx)
+    idx: np.ndarray              # (len,) original problem indices
+    max_p: int                   # bucket layer padding (power of two)
+    max_S: int                   # bucket server padding (power of two)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedFleet:
+    """N heterogeneous problems grouped into ``(max_p, max_S)`` shape
+    buckets (DESIGN.md §12). Bucket membership is a pure function of
+    each problem's own true sizes — never of its co-tenants — so the
+    same problem lands in the same bucket under any fleet permutation,
+    and ``buckets[*].idx`` is the original→bucket permutation used to
+    restore input order in results."""
+    buckets: Tuple[FleetBucket, ...]
+    n_problems: int
+    max_apps: int                # fleet-global app padding (arrivals
+    #   pack once per bucket against this shared width)
+
+
+def pack_fleet(problems: Sequence[ProblemLike],
+               bucket: bool = True) -> PackedFleet:
+    """Group N problems into power-of-two ``(max_p, max_S)`` buckets.
+
+    With ``bucket=True`` each problem's bucket is
+    ``(bucket_size(p), bucket_size(S, floor=4))`` of its OWN true sizes —
+    per-group rounding, so a fleet of mostly-small DNNs with one huge
+    straggler pads only the straggler's bucket large. With
+    ``bucket=False`` the whole fleet forms ONE bucket at the exact
+    fleet-global ``(max p, max S)`` (the pre-§12 global-padding
+    behavior, kept as the A/B baseline in ``bench_pso --mixed-fleet``).
+
+    The in/out-degree and app paddings stay fleet-global: they are tiny
+    axes, and a shared ``max_apps`` lets one ``pack_arrivals`` width
+    serve every bucket.
+    """
+    probs = _as_problems(problems)
+    if not probs:
+        raise ValueError("pack_fleet needs at least one problem")
+    max_in = max(pr.parent_idx.shape[1] for pr in probs)
+    max_out = max(pr.child_idx.shape[1] for pr in probs)
+    max_apps = max(pr.num_apps for pr in probs)
+    if bucket:
+        def key(pr: SimProblem) -> Tuple[int, int]:
+            return (bucket_size(pr.num_layers),
+                    bucket_size(pr.num_servers, floor=4))
+    else:
+        gp = max(pr.num_layers for pr in probs)
+        gS = max(pr.num_servers for pr in probs)
+
+        def key(pr: SimProblem) -> Tuple[int, int]:
+            return (gp, gS)
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    for i, pr in enumerate(probs):
+        groups.setdefault(key(pr), []).append(i)
+    buckets = []
+    for bp, bS in sorted(groups):
+        idx = np.asarray(groups[(bp, bS)], np.int64)
+        padded = [pad_problem(probs[i], max_p=bp, max_S=bS, max_in=max_in,
+                              max_out=max_out, max_apps=max_apps)
+                  for i in idx]
+        ppb = jax.tree.map(lambda *leaves: jnp.stack(leaves), *padded)
+        buckets.append(FleetBucket(ppb=ppb, idx=idx, max_p=bp, max_S=bS))
+    return PackedFleet(buckets=tuple(buckets), n_problems=len(probs),
+                       max_apps=max_apps)
+
+
 # --------------------------------------------------------------------------
-# compiled fleet runner, cached per shape bucket
+# compiled fleet runner, cached per (cfg, traffic?, shape bucket, mesh)
 # --------------------------------------------------------------------------
 
 _RUNNER_CACHE: Dict[tuple, Callable] = {}
@@ -128,7 +220,8 @@ _CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
 
 
 def runner_cache_info() -> Tuple[tuple, ...]:
-    """(config, traffic?) keys currently holding a compiled fleet runner."""
+    """(config, traffic?, shape-bucket, mesh) keys currently holding a
+    compiled fleet runner."""
     return tuple(_RUNNER_CACHE)
 
 
@@ -148,20 +241,33 @@ def _done(state: _SwarmState, cfg: PSOGAConfig) -> jnp.ndarray:
     return (state.it >= cfg.max_iters) | (state.stall >= cfg.stall_iters)
 
 
-def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
+def _mesh_cache_key(mesh) -> Optional[tuple]:
+    """Hashable identity of a mesh for the runner cache: axis names,
+    shape, and the device ids in mesh order (two mesh objects over the
+    same devices in the same layout share compiled runners)."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False,
+                  shape_bucket: Optional[Tuple[int, int]] = None,
+                  mesh=None) -> Callable:
     """Jitted ``(ppb, keys, X0b, incb, migb[, arrb]) -> final _SwarmState``.
 
-    One cache entry per ``(cfg, traffic?)`` (the config is baked into
-    the traced loop; the traffic flag switches the runner's signature —
-    with it, per-problem Monte-Carlo arrivals ``arrb (N, M, max_apps,
-    R)`` ride along as one more traced argument, DESIGN.md §10); jit's
-    own cache handles shape specialization underneath, and the
-    power-of-two buckets of ``pack_problems`` keep the number of
-    distinct ``(max_p, max_S)`` shapes it sees small. Distinct fleet
-    sizes N still trace separately — batch at stable sizes if that
-    matters.
+    One cache entry per ``(cfg, traffic?, shape-bucket, mesh)`` (the
+    config is baked into the traced loop; the traffic flag switches the
+    runner's signature — with it, per-problem Monte-Carlo arrivals
+    ``arrb (N, M, max_apps, R)`` ride along as one more traced argument,
+    DESIGN.md §10; the shape bucket keys each ``(max_p, max_S)`` group
+    of a ``PackedFleet`` to its own compiled program, DESIGN.md §12);
+    jit's own cache handles exact shape specialization underneath, and
+    the power-of-two buckets of ``pack_fleet`` keep the number of
+    distinct shapes it sees small. Distinct bucket sizes N still trace
+    separately — batch at stable sizes if that matters.
 
-    Cold and warm (re-planning) solves share this ONE program: the
+    Cold and warm (re-planning) solves share ONE program per bucket: the
     incumbent genes ``incb (N, max_p)`` and migration weights ``migb
     (N,)`` are ordinary traced arrays, and a zero weight multiplies the
     migration term away bit-exactly (DESIGN.md §9). Drift — of the
@@ -169,6 +275,15 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
     so every re-planning round after the first reuses the compiled
     runner; ``runner_cache_stats()["traces"]`` counts the actual
     re-traces.
+
+    With a ``mesh``, the runner body is wrapped in ``shard_map`` over
+    the mesh's non-"model" axes before jitting: every input/output leaf
+    shards its leading problem axis across the data shards, each shard
+    runs its own while_loop to local convergence (per-problem freezing
+    makes extra iterations no-ops, so shard-local exit is a pure win),
+    and the caller guarantees N is a multiple of the shard count
+    (``run_pso_ga_batch`` pads with masked dummy problems,
+    DESIGN.md §12).
 
     The backend string is normalized BEFORE the cache key: ``"auto"``
     and whatever it resolves to on this host share one entry (and one
@@ -178,7 +293,7 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
     """
     cfg = dataclasses.replace(
         cfg, fitness_backend=resolve_fitness_backend(cfg.fitness_backend))
-    cache_key = (cfg, traffic)
+    cache_key = (cfg, traffic, shape_bucket, _mesh_cache_key(mesh))
     cached = _RUNNER_CACHE.get(cache_key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
@@ -195,9 +310,9 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
         incumbent=inc, mig_weight=mw, arrivals=arr,
         miss_budget=cfg.miss_budget)(X))
 
-    def run(ppb: PaddedProblem, keys: jnp.ndarray, X0b: jnp.ndarray,
-            incb: jnp.ndarray, migb: jnp.ndarray,
-            arrb: Optional[jnp.ndarray] = None) -> _SwarmState:
+    def run_impl(ppb: PaddedProblem, keys: jnp.ndarray, X0b: jnp.ndarray,
+                 incb: jnp.ndarray, migb: jnp.ndarray,
+                 arrb: Optional[jnp.ndarray]) -> _SwarmState:
         _CACHE_STATS["traces"] += 1        # python side effect: trace-time only
         n = X0b.shape[0]
         f0 = vfit(ppb, X0b, incb, migb, arrb)                  # (N, P)
@@ -222,6 +337,28 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False) -> Callable:
                 new, st)
 
         return jax.lax.while_loop(cond, body, state)
+
+    # fixed arity per traffic flag: shard_map needs in_specs to match the
+    # call signature exactly, so the no-traffic runner takes 5 args and
+    # the traffic runner 6 (no optional-None juggling inside the spec).
+    if traffic:
+        def run(ppb, keys, X0b, incb, migb, arrb):
+            return run_impl(ppb, keys, X0b, incb, migb, arrb)
+    else:
+        def run(ppb, keys, X0b, incb, migb):
+            return run_impl(ppb, keys, X0b, incb, migb, None)
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+
+        from ..launch.mesh import data_axes_of
+        # P((axes,)) shards dim 0 — the problem axis — over every
+        # non-"model" axis jointly; the spec acts as a pytree prefix, so
+        # each PaddedProblem/_SwarmState leaf splits its leading axis.
+        spec = jax.sharding.PartitionSpec(tuple(data_axes_of(mesh)))
+        n_args = 6 if traffic else 5
+        run = shard_map(run, mesh=mesh, in_specs=(spec,) * n_args,
+                        out_specs=spec, check_rep=False)
 
     jitted = jax.jit(run)
     _RUNNER_CACHE[cache_key] = jitted
@@ -265,6 +402,18 @@ def pack_arrivals(arrivals: Sequence[np.ndarray],
     return out
 
 
+def _pad_rows(arr, pad: int):
+    """Append ``pad`` copies of row 0 along axis 0 (the masked dummy
+    problems of the mesh path, DESIGN.md §12 — every vmap lane is
+    independent and the dummies' results are sliced away, so replicating
+    any real row is parity-safe)."""
+    if isinstance(arr, np.ndarray):
+        return np.concatenate(
+            [arr, np.broadcast_to(arr[:1], (pad,) + arr.shape[1:])], axis=0)
+    return jnp.concatenate(
+        [arr, jnp.broadcast_to(arr[:1], (pad,) + arr.shape[1:])], axis=0)
+
+
 def run_pso_ga_batch(problems: Sequence[ProblemLike],
                      cfg: PSOGAConfig = PSOGAConfig(),
                      seed: Union[int, Sequence[int]] = 0,
@@ -274,18 +423,26 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
                      migration_weight: Union[float,
                                              Sequence[float]] = 0.0,
                      warm_rescue: Optional[Sequence[bool]] = None,
-                     arrivals: Optional[Sequence[np.ndarray]] = None):
-    """Solve N offloading problems with one fleet of swarms.
+                     arrivals: Optional[Sequence[np.ndarray]] = None,
+                     mesh=None):
+    """Solve N offloading problems with one fleet of swarms per bucket.
 
     Args:
       problems: ``SimProblem``s or ``(LayerDAG, Environment)`` pairs.
-      cfg: shared PSO-GA hyperparameters (one compiled program per cfg).
+      cfg: shared PSO-GA hyperparameters (one compiled program per cfg
+        per shape bucket).
       seed: one seed for every problem, or a per-problem sequence —
         problem i behaves exactly like ``run_pso_ga(..., seed=seed_i)``.
-      bucket: round padded shapes up to power-of-two buckets so repeated
-        fleet shapes reuse the compiled runner.
-      return_state: also return the final stacked ``_SwarmState`` (tests
-        use it to assert padded genes were never touched).
+      bucket: group problems into power-of-two ``(max_p, max_S)`` shape
+        buckets (``pack_fleet``, DESIGN.md §12) so a mostly-small fleet
+        never pads to its largest member and repeated fleet shapes reuse
+        compiled runners. ``False`` solves the whole fleet as ONE bucket
+        at the exact global max (the A/B baseline).
+      return_state: also return the final stacked ``_SwarmState`` in
+        ORIGINAL problem order, re-assembled across buckets at the
+        fleet's largest bucket ``max_p`` (genes beyond a problem's own
+        bucket stay 0 — tests use it to assert padded genes were never
+        touched).
       incumbent: per-problem (p_i,) incumbent assignments (online
         re-planning, DESIGN.md §9): swarms are warm-started in the
         incumbent's neighborhood (``init_swarm`` incumbent mode) and the
@@ -295,7 +452,9 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         per-problem entry of ``None`` demotes only that problem to a
         cold solve (stale-plan guard, DESIGN.md §11): its swarm draws
         the cold init and its migration weight is zeroed, while the
-        rest of the fleet stays warm.
+        rest of the fleet stays warm. Incumbents route with their
+        problem through re-bucketing — warm state survives any fleet
+        composition change that keeps the problem's own shape.
       migration_weight: scalar or per-problem migration-cost weights
         (ignored without ``incumbent``).
       warm_rescue: per-problem flags (with ``incumbent`` only): seed the
@@ -308,10 +467,17 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         to the queue-aware traffic key under ``cfg.miss_budget``. The
         packed arrays are traced runner inputs, so sweeping the load
         (or re-planning under a load surge) never retraces.
+      mesh: a ``jax.sharding.Mesh`` (``launch.mesh``) — shard each
+        bucket's problem axis across the mesh's non-"model" axes via
+        ``shard_map``; each bucket's N is padded to a multiple of the
+        data-shard count with masked dummy problems whose results are
+        discarded. Gene-for-gene identical to the single-device solve
+        (DESIGN.md §12). ``None`` keeps today's single-device path.
 
-    Returns a list of per-problem ``PSOGAResult`` (and the state if asked).
-    ``record_history`` is not supported in fleet mode — use the sequential
-    solver to trace a single problem's convergence curve.
+    Returns a list of per-problem ``PSOGAResult`` in INPUT ORDER (and
+    the re-assembled state if asked) — bucket assignment is invisible in
+    the output. ``record_history`` is not supported in fleet mode — use
+    the sequential solver to trace a single problem's convergence curve.
     ``best_fitness`` is the migration-adjusted key when warm (the
     traffic key when ``arrivals`` is given); ``best_cost`` is always
     the raw zero-load replayed plan cost.
@@ -323,66 +489,127 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         raise ValueError(f"{len(incumbent)} incumbents for {n} problems")
     if arrivals is not None and len(arrivals) != n:
         raise ValueError(f"{len(arrivals)} arrival sets for {n} problems")
+    mig_arr = np.broadcast_to(
+        np.asarray(migration_weight, np.float32), (n,))
 
-    ppb = pack_problems(probs, bucket=bucket)
-    max_p = int(ppb.compute.shape[1])
+    fleet = pack_fleet(probs, bucket=bucket)
+    traffic = arrivals is not None
+    shards = 1
+    if mesh is not None:
+        from ..launch.mesh import data_shard_count
+        shards = data_shard_count(mesh)
 
-    # Per-problem init mirrors run_pso_ga exactly: split the problem's own
-    # key, draw the link-aware swarm at the TRUE (p, S) shape, then embed
-    # into the padded gene space (padded genes start — and stay — 0).
-    keys = []
-    X0b = np.zeros((n, cfg.pop_size, max_p), np.int32)
-    incb = np.zeros((n, max_p), np.int32)
-    migb = np.zeros((n,), np.float32)
-    if incumbent is not None:
-        migb[:] = np.asarray(migration_weight, np.float32)
-    for i, pr in enumerate(probs):
-        key, k_init = jax.random.split(jax.random.PRNGKey(seeds[i]))
-        keys.append(np.asarray(key))
-        inc_i = None
-        rescue_i = False
-        if incumbent is not None and incumbent[i] is not None:
-            inc_i = np.asarray(incumbent[i], np.int32)
-            if inc_i.shape != (pr.num_layers,):
-                raise ValueError(
-                    f"incumbent[{i}] has shape {inc_i.shape}, expected "
-                    f"({pr.num_layers},)")
-            incb[i, :pr.num_layers] = inc_i
-            rescue_i = bool(warm_rescue[i]) if warm_rescue is not None \
-                else False
-        elif incumbent is not None:
-            # a demoted problem (stale incumbent, DESIGN.md §11) solves
-            # cold inside the warm fleet: zero migration weight
+    results: List[Optional[PSOGAResult]] = [None] * n
+    bucket_states: List[Tuple[FleetBucket, _SwarmState]] = []
+    for b in fleet.buckets:
+        nb = int(b.idx.shape[0])
+        # Per-problem init mirrors run_pso_ga exactly: split the
+        # problem's own key, draw the link-aware swarm at the TRUE
+        # (p, S) shape, then embed into the bucket's padded gene space
+        # (padded genes start — and stay — 0). Seeds, incumbents,
+        # rescue flags, and arrivals all route by ORIGINAL index, so
+        # bucket assignment never reshuffles a problem's inputs.
+        keys_l = []
+        X0b = np.zeros((nb, cfg.pop_size, b.max_p), np.int32)
+        incb = np.zeros((nb, b.max_p), np.int32)
+        migb = np.zeros((nb,), np.float32)
+        for j, i in enumerate(b.idx):
+            pr = probs[i]
+            key, k_init = jax.random.split(jax.random.PRNGKey(seeds[i]))
+            keys_l.append(np.asarray(key))
+            inc_i = None
+            rescue_i = False
+            if incumbent is not None and incumbent[i] is not None:
+                inc_i = np.asarray(incumbent[i], np.int32)
+                if inc_i.shape != (pr.num_layers,):
+                    raise ValueError(
+                        f"incumbent[{i}] has shape {inc_i.shape}, "
+                        f"expected ({pr.num_layers},)")
+                incb[j, :pr.num_layers] = inc_i
+                migb[j] = mig_arr[i]
+                rescue_i = bool(warm_rescue[i]) if warm_rescue is not None \
+                    else False
+            # else: a demoted problem (stale incumbent, DESIGN.md §11)
+            # solves cold inside the warm fleet: zero migration weight
             # multiplies the term away bit-exactly, and init_swarm gets
             # no incumbent — identical to a cold solve of problem i.
-            migb[i] = 0.0
-        X0b[i, :, :pr.num_layers] = np.asarray(
-            init_swarm(k_init, pr, cfg, incumbent=inc_i,
-                       rescue=rescue_i))
+            X0b[j, :, :pr.num_layers] = np.asarray(
+                init_swarm(k_init, pr, cfg, incumbent=inc_i,
+                           rescue=rescue_i))
+        keys_a = np.stack(keys_l)
+        arrb = None
+        if traffic:
+            arrb = pack_arrivals([arrivals[i] for i in b.idx],
+                                 fleet.max_apps)
 
-    runner = _fleet_runner(cfg, traffic=arrivals is not None)
-    arrb = None
-    if arrivals is not None:
-        arrb = jnp.asarray(
-            pack_arrivals(arrivals, int(ppb.deadline.shape[1])))
-    state = runner(ppb, jnp.asarray(np.stack(keys)), jnp.asarray(X0b),
-                   jnp.asarray(incb), jnp.asarray(migb), arrb)
-    jax.block_until_ready(state.gbest_f)
+        ppb = b.ppb
+        pad = (-nb) % shards
+        if pad:
+            ppb = jax.tree.map(lambda a: _pad_rows(a, pad), ppb)
+            keys_a = _pad_rows(keys_a, pad)
+            X0b = _pad_rows(X0b, pad)
+            incb = _pad_rows(incb, pad)
+            migb = _pad_rows(migb, pad)
+            if arrb is not None:
+                arrb = _pad_rows(arrb, pad)
 
-    # Re-simulate each gbest (same as the sequential epilogue).
-    res = jax.vmap(
-        lambda pp, x: simulate_padded(pp, x, cfg.faithful_sim))(
-            ppb, state.gbest_x)
-    results: List[PSOGAResult] = []
-    for i, pr in enumerate(probs):
-        feasible = bool(res.feasible[i])
-        results.append(PSOGAResult(
-            best_x=np.asarray(state.gbest_x[i])[:pr.num_layers],
-            best_fitness=float(state.gbest_f[i]),
-            best_cost=float(res.total_cost[i]) if feasible else float("inf"),
-            feasible=feasible,
-            iterations=int(state.it[i]),
-            history=None))
-    if return_state:
-        return results, state
-    return results
+        runner = _fleet_runner(cfg, traffic=traffic,
+                               shape_bucket=(b.max_p, b.max_S), mesh=mesh)
+        args = (ppb, jnp.asarray(keys_a), jnp.asarray(X0b),
+                jnp.asarray(incb), jnp.asarray(migb))
+        if traffic:
+            args = args + (jnp.asarray(arrb),)
+        state = runner(*args)
+        jax.block_until_ready(state.gbest_f)
+        if pad:
+            state = jax.tree.map(lambda a: a[:nb], state)
+
+        # Re-simulate each gbest (same as the sequential epilogue).
+        res = jax.vmap(
+            lambda pp, x: simulate_padded(pp, x, cfg.faithful_sim))(
+                b.ppb, state.gbest_x)
+        for j, i in enumerate(b.idx):
+            pr = probs[i]
+            feasible = bool(res.feasible[j])
+            results[i] = PSOGAResult(
+                best_x=np.asarray(state.gbest_x[j])[:pr.num_layers],
+                best_fitness=float(state.gbest_f[j]),
+                best_cost=float(res.total_cost[j]) if feasible
+                else float("inf"),
+                feasible=feasible,
+                iterations=int(state.it[j]),
+                history=None)
+        bucket_states.append((b, state))
+
+    if not return_state:
+        return results
+
+    # Re-assemble one fleet-ordered state across buckets at the largest
+    # bucket's max_p: genes beyond a problem's own bucket shape are 0 —
+    # the same "padded genes untouched" invariant the single-bucket
+    # state had (tests/test_batch.py::test_padding_never_selected).
+    gmax_p = max(b.max_p for b in fleet.buckets)
+    st0 = bucket_states[0][1]
+    key_g = np.zeros((n,) + st0.key.shape[1:], np.asarray(st0.key).dtype)
+    X_g = np.zeros((n, cfg.pop_size, gmax_p), np.int32)
+    pbx_g = np.zeros((n, cfg.pop_size, gmax_p), np.int32)
+    pbf_g = np.zeros((n, cfg.pop_size), np.asarray(st0.pbest_f).dtype)
+    gbx_g = np.zeros((n, gmax_p), np.int32)
+    gbf_g = np.zeros((n,), np.asarray(st0.gbest_f).dtype)
+    it_g = np.zeros((n,), np.int32)
+    stall_g = np.zeros((n,), np.int32)
+    for b, st in bucket_states:
+        key_g[b.idx] = np.asarray(st.key)
+        X_g[b.idx, :, :b.max_p] = np.asarray(st.X)
+        pbx_g[b.idx, :, :b.max_p] = np.asarray(st.pbest_x)
+        pbf_g[b.idx] = np.asarray(st.pbest_f)
+        gbx_g[b.idx, :b.max_p] = np.asarray(st.gbest_x)
+        gbf_g[b.idx] = np.asarray(st.gbest_f)
+        it_g[b.idx] = np.asarray(st.it)
+        stall_g[b.idx] = np.asarray(st.stall)
+    state_out = _SwarmState(
+        key=jnp.asarray(key_g), X=jnp.asarray(X_g),
+        pbest_x=jnp.asarray(pbx_g), pbest_f=jnp.asarray(pbf_g),
+        gbest_x=jnp.asarray(gbx_g), gbest_f=jnp.asarray(gbf_g),
+        it=jnp.asarray(it_g), stall=jnp.asarray(stall_g))
+    return results, state_out

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .batch import pack_arrivals, pack_problems, run_pso_ga_batch
+from .batch import pack_arrivals, pack_fleet, run_pso_ga_batch
 from .dag import LayerDAG
 from .environment import CLOUD, DEVICE, EDGE, Environment
 from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
@@ -292,6 +292,11 @@ class ReplanConfig:
     #: ``load-surge`` family then drives replans with the environment
     #: bit-still.
     traffic: Optional[TrafficConfig] = None
+    #: device mesh for the fleet solver (DESIGN.md §12): every round's
+    #: warm solve shards its shape buckets across the mesh's data axes.
+    #: Gene-for-gene identical to the single-device path, so replan
+    #: decisions are mesh-invariant.
+    mesh: Optional[jax.sharding.Mesh] = None
 
 
 class RoundLog(NamedTuple):
@@ -410,26 +415,37 @@ def incumbent_keys(probs: Sequence[SimProblem],
     queue-aware traffic keys under ``cfg.miss_budget`` (DESIGN.md §10).
     A ``None`` entry (a demoted incumbent, DESIGN.md §11) keys as +inf —
     any candidate strictly beats it.
+
+    Evaluation is bucketed exactly like the solver (``pack_fleet``,
+    DESIGN.md §12): each shape bucket keys through its own jit-cached
+    ``_fleet_keys`` at the bucket's padded shape, and the keys scatter
+    back to input order — so the incumbent's key and the warm
+    candidate's key always come from identically-shaped programs.
     """
-    ppb = pack_problems(probs)
-    max_p = int(ppb.compute.shape[1])
-    Xb = np.zeros((len(probs), max_p), np.int32)
+    probs = list(probs)
+    fleet = pack_fleet(probs)
+    keys = np.zeros(len(probs), np.float64)
     missing = np.zeros(len(probs), bool)
-    for i, (pr, inc) in enumerate(zip(probs, incumbent)):
-        if inc is None:
-            missing[i] = True
+    for b in fleet.buckets:
+        nb = int(b.idx.shape[0])
+        Xb = np.zeros((nb, b.max_p), np.int32)
+        for j, i in enumerate(b.idx):
+            inc = incumbent[i]
+            if inc is None:
+                missing[i] = True
+            else:
+                Xb[j, :probs[i].num_layers] = np.asarray(inc, np.int32)
+        if arrivals is not None:
+            arrb = jnp.asarray(pack_arrivals(
+                [arrivals[i] for i in b.idx], fleet.max_apps))
+            kb = np.array(_fleet_keys_traffic(
+                b.ppb, jnp.asarray(Xb), arrb, cfg.faithful_sim,
+                cfg.fitness_backend, cfg.miss_budget))
         else:
-            Xb[i, :pr.num_layers] = np.asarray(inc, np.int32)
-    if arrivals is not None:
-        arrb = jnp.asarray(pack_arrivals(arrivals,
-                                         int(ppb.deadline.shape[1])))
-        keys = np.array(_fleet_keys_traffic(
-            ppb, jnp.asarray(Xb), arrb, cfg.faithful_sim,
-            cfg.fitness_backend, cfg.miss_budget))
-    else:
-        keys = np.array(_fleet_keys(ppb, jnp.asarray(Xb),
-                                    cfg.faithful_sim,
-                                    cfg.fitness_backend))
+            kb = np.array(_fleet_keys(b.ppb, jnp.asarray(Xb),
+                                      cfg.faithful_sim,
+                                      cfg.fitness_backend))
+        keys[b.idx] = kb
     keys[missing] = np.inf
     return keys
 
@@ -487,7 +503,8 @@ def replan_round(probs: Sequence[SimProblem],
                                    migration_weight=cfg.migration_weight,
                                    warm_rescue=rescue,
                                    return_state=True,
-                                   arrivals=arrivals)
+                                   arrivals=arrivals,
+                                   mesh=cfg.mesh)
     wall = time.perf_counter() - t0
 
     plans: List[np.ndarray] = []
@@ -572,7 +589,8 @@ def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
         probs0 = [SimProblem.build(d, trace.env_at(0)) for d in dags]
         cold = run_pso_ga_batch(
             probs0, cfg.pso, seed=seed,
-            arrivals=_round_arrivals(cfg, dags, trace.events[0], seed))
+            arrivals=_round_arrivals(cfg, dags, trace.events[0], seed),
+            mesh=cfg.mesh)
     else:
         if len(initial) != len(dags):
             raise ValueError(f"{len(initial)} initial results for "

@@ -246,7 +246,8 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
                        fitness_backend: Optional[str] = None,
                        warm: Optional[Sequence[np.ndarray]] = None,
                        migration_weight: float = 1.0,
-                       traffic: Optional["TrafficConfig"] = None
+                       traffic: Optional["TrafficConfig"] = None,
+                       mesh=None
                        ) -> List[OffloadPlan]:
     """Plan many serving requests with ONE batched PSO-GA fleet.
 
@@ -274,6 +275,10 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
     (``traffic_stats`` dict). The resolved fitness backend is stamped
     into ``OffloadPlan.backend`` either way, so ``"auto"`` is never
     reported back as "auto".
+
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. ``launch.mesh.resolve_mesh``,
+    DESIGN.md §12): shard the fleet solve's shape buckets across the
+    mesh's data axes — gene-for-gene identical plans, more devices.
     """
     from .batch import run_pso_ga_batch      # local: avoid import cycle
     from .fitness import resolve_fitness_backend
@@ -306,7 +311,7 @@ def plan_offload_batch(requests: Sequence[Tuple[ModelConfig, ShapeSpec,
     results = run_pso_ga_batch([(d, env) for d in dags], cfg=pso, seed=seed,
                                incumbent=warm,
                                migration_weight=migration_weight,
-                               arrivals=arrivals)
+                               arrivals=arrivals, mesh=mesh)
     reports: List[Optional[dict]] = [None] * len(dags)
     if traffic is not None:
         for i, (d, r) in enumerate(zip(dags, results)):

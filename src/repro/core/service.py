@@ -380,7 +380,8 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
         probs0 = [SimProblem.build(d, env0) for d in dags]
         cold = run_pso_ga_batch(
             probs0, rcfg.pso, seed=seed,
-            arrivals=_round_arrivals(rcfg, dags, trace.events[0], seed))
+            arrivals=_round_arrivals(rcfg, dags, trace.events[0], seed),
+            mesh=rcfg.mesh)
     else:
         if len(initial) != len(dags):
             raise ValueError(f"{len(initial)} initial results for "

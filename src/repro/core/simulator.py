@@ -248,7 +248,12 @@ def pad_problem(prob: SimProblem,
 
     With all sizes None this is the identity embedding (zero padding) —
     ``build_simulator`` uses exactly that, so the unbatched solver is the
-    N=1 case of the batched machinery.
+    N=1 case of the batched machinery. Explicit per-axis targets are how
+    ``batch.pack_fleet`` pads each problem to its own BUCKET's
+    ``(max_p, max_S)`` rather than a fleet-global shape (DESIGN.md §12);
+    padded layers are zero-cost no-ops appended after the real entries
+    and padded servers are unreachable, so the simulated result is
+    bit-identical under any legal target sizes.
     """
     p, s, a = prob.num_layers, prob.num_servers, prob.num_apps
     in0, out0 = prob.parent_idx.shape[1], prob.child_idx.shape[1]

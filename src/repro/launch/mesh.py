@@ -3,11 +3,12 @@ jax device state (jax locks the device count on first backend init, and
 the dry-run must set XLA_FLAGS before that happens)."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "data_axes_of"]
+__all__ = ["make_production_mesh", "make_test_mesh", "data_axes_of",
+           "data_shard_count", "resolve_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -29,6 +30,14 @@ def make_test_mesh(*, multi_pod: bool = False,
     if multi_pod:
         model = 2
         pod = 2
+        if n < pod * model:
+            # without this gate the data axis rounds to ZERO and the
+            # reshape below dies with an opaque size mismatch — name the
+            # actual requirement instead (tests/test_fleet.py pins it).
+            raise ValueError(
+                f"make_test_mesh(multi_pod=True) needs at least "
+                f"{pod * model} devices (pod=2 x model=2 with a "
+                f"non-empty data axis); only {n} available")
         data = n // (pod * model)
         shape: Tuple[int, ...] = (pod, data, model)
         axes: Tuple[str, ...] = ("pod", "data", "model")
@@ -47,3 +56,27 @@ def make_test_mesh(*, multi_pod: bool = False,
 def data_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     """Batch-sharding axes: ("pod","data") on a multi-pod mesh."""
     return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def data_shard_count(mesh: jax.sharding.Mesh) -> int:
+    """How many ways the problem axis splits on ``mesh`` — the product
+    of every non-"model" axis size. The fleet solver pads each shape
+    bucket's N up to a multiple of this (DESIGN.md §12)."""
+    count = 1
+    for a in data_axes_of(mesh):
+        count *= int(mesh.shape[a])
+    return count
+
+
+def resolve_mesh(name: Optional[str]) -> Optional[jax.sharding.Mesh]:
+    """CLI spelling -> mesh: "none"/None (single-device fleet solve),
+    "host" (the scaled-down test mesh over the visible host devices),
+    "prod" (the 16x16 v5e pod — needs 256 real chips)."""
+    if name is None or name == "none":
+        return None
+    if name == "host":
+        return make_test_mesh()
+    if name == "prod":
+        return make_production_mesh()
+    raise ValueError(f"unknown mesh {name!r} "
+                     f"(expected one of: none, host, prod)")

@@ -120,6 +120,14 @@ def main() -> None:
     ap.add_argument("--fitness-backend", default="scan",
                     choices=("scan", "pallas", "auto"),
                     help="swarm-fitness backend for --plan (DESIGN.md §8)")
+    ap.add_argument("--mesh", default="none",
+                    choices=("none", "host", "prod"),
+                    help="device mesh for the fleet SOLVER (DESIGN.md "
+                         "§12): shard --plan/--replan/--serve solves "
+                         "across the mesh's data axes. 'host' builds the "
+                         "test mesh over the visible devices; 'prod' "
+                         "needs a real 16x16 pod. Plans are gene-for-"
+                         "gene identical to --mesh none.")
     ap.add_argument("--replan", default=None, metavar="SCENARIO",
                     help="after --plan, drive the placements through a "
                          "drift trace (wifi-fade | congestion | "
@@ -185,9 +193,15 @@ def main() -> None:
         # (DESIGN.md §4) instead of re-compiling the solver per shape.
         from ..core import (PSOGAConfig, TrafficConfig,
                             plan_offload_batch, tpu_fleet_environment)
+        from .mesh import resolve_mesh
         fleet_env = tpu_fleet_environment()
         shapes = [s for s in SHAPES if s.kind != "train"]
         pso_cfg = PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40)
+        solver_mesh = resolve_mesh(args.mesh)
+        if solver_mesh is not None:
+            print(f"[serve] solver mesh: "
+                  f"{dict(zip(solver_mesh.axis_names, solver_mesh.devices.shape))}"
+                  f" over {solver_mesh.devices.size} devices")
         traffic_cfg = None
         if args.traffic:
             # queue-aware planning: score every placement under the
@@ -197,7 +211,7 @@ def main() -> None:
         plans = plan_offload_batch(
             [(cfg, s, 1.5) for s in shapes], env=fleet_env,
             pso=pso_cfg, fitness_backend=args.fitness_backend,
-            traffic=traffic_cfg)
+            traffic=traffic_cfg, mesh=solver_mesh)
         for shape, plan in zip(shapes, plans):
             tag = f" under {args.traffic} traffic" if args.traffic else ""
             print(f"[serve] PSO-GA fleet placement for {shape.name}"
@@ -227,7 +241,8 @@ def main() -> None:
             # replace the traffic-aware plans with zero-load plans.
             report = replan_fleet(
                 [p.dag for p in plans], trace,
-                ReplanConfig(pso=replan_pso, traffic=traffic_cfg),
+                ReplanConfig(pso=replan_pso, traffic=traffic_cfg,
+                             mesh=solver_mesh),
                 initial=[p.result for p in plans])
             for log in report.rounds:
                 n_re = int(log.replanned.sum())
@@ -260,7 +275,8 @@ def main() -> None:
                     nan_env_rounds=(min(3, last),),
                     mid_round_down={min(4, last): 1})
             scfg = ServiceConfig(
-                replan=ReplanConfig(pso=serve_pso, traffic=traffic_cfg),
+                replan=ReplanConfig(pso=serve_pso, traffic=traffic_cfg,
+                                    mesh=solver_mesh),
                 slo_s=args.slo_s, triage_margin=args.triage_margin,
                 estimate_rates=args.estimate_rates, chaos=chaos)
             report = run_service([p.dag for p in plans], trace, scfg,

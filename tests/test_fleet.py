@@ -1,0 +1,316 @@
+"""Multi-bucket fleet packing + mesh-sharded solving (DESIGN.md §12):
+bucket grouping and order restoration, gene-for-gene parity of bucketed
+and sharded solves against the single-shape/single-device path, runner-
+cache discipline per (cfg, shape-bucket), and the mesh satellites.
+
+The mesh parity tests scale with the visible device count: under the CI
+variant job (XLA_FLAGS=--xla_force_host_platform_device_count=8) they
+run the defining N=64-on-8-devices invariant; on a 1-device host they
+still exercise the shard_map path at trivial shard count.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (PSOGAConfig, SimProblem, heft_makespan,
+                        pack_fleet, paper_environment, run_pso_ga,
+                        run_pso_ga_batch, zoo)
+from repro.core.batch import (bucket_size, reset_runner_cache_stats,
+                              runner_cache_stats)
+from repro.core.online import incumbent_keys
+from repro.launch.mesh import (data_axes_of, data_shard_count,
+                               make_test_mesh, resolve_mesh)
+
+# distinct configs per test file: fresh fleet-runner cache entries, so
+# cache-counter assertions here never collide with other suites
+FLEET_CFG = PSOGAConfig(pop_size=24, max_iters=82, stall_iters=25)
+MESH_CFG = PSOGAConfig(pop_size=16, max_iters=30, stall_iters=12)
+
+
+def _mk(net, pin, ratio, env):
+    dag = zoo.build(net, pin_server=pin)
+    h, _ = heft_makespan(dag, env)
+    return (dag.with_deadline(np.array([ratio * h])), env)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return paper_environment()
+
+
+@pytest.fixture(scope="module")
+def mixed6(env):
+    """Six problems over three shape buckets: alexnet (11 -> 16),
+    vgg19 (25 -> 32), googlenet (83 -> 128)."""
+    nets = ["alexnet", "vgg19", "alexnet", "googlenet", "vgg19",
+            "alexnet"]
+    return [_mk(n, i % 10, (1.5, 3.0, 5.0)[i % 3], env)
+            for i, n in enumerate(nets)]
+
+
+@pytest.fixture(scope="module")
+def mesh_fleet(env):
+    """The mesh-parity fleet: mostly small with vgg19/googlenet tails,
+    sized so bucket populations are NOT multiples of the shard count
+    (the dummy-padding path must engage on multi-device hosts)."""
+    n = 64 if jax.device_count() >= 8 else 8
+    problems = []
+    for i in range(n):
+        net = "googlenet" if i % 16 == 0 else \
+            "vgg19" if i % 4 == 1 else "alexnet"
+        problems.append(_mk(net, i % 10, (1.5, 3.0)[i % 2], env))
+    return problems
+
+
+@pytest.fixture(scope="module")
+def mesh_cold(mesh_fleet):
+    """Single-device reference solve of the mesh fleet."""
+    return run_pso_ga_batch(mesh_fleet, MESH_CFG, seed=list(
+        range(len(mesh_fleet))))
+
+
+# ---------------------------------------------------------------------------
+# PackedFleet: grouping, order restoration, single-bucket fallback
+# ---------------------------------------------------------------------------
+
+def test_pack_fleet_groups_by_own_size(mixed6):
+    probs = [SimProblem.build(d, e) for d, e in mixed6]
+    fleet = pack_fleet(probs)
+    keys = {(b.max_p, b.max_S) for b in fleet.buckets}
+    assert keys == {(16, 32), (32, 32), (128, 32)}
+    # the index permutation partitions the fleet exactly
+    all_idx = np.sort(np.concatenate([b.idx for b in fleet.buckets]))
+    np.testing.assert_array_equal(all_idx, np.arange(6))
+    for b in fleet.buckets:
+        assert b.ppb.compute.shape == (len(b.idx), b.max_p)
+        assert b.ppb.power.shape == (len(b.idx), b.max_S)
+        for i, j in enumerate(b.idx):
+            # each member's true sizes ride with it into its bucket
+            assert int(b.ppb.num_layers[i]) == probs[j].num_layers
+            assert (b.max_p, b.max_S) == (
+                bucket_size(probs[j].num_layers),
+                bucket_size(probs[j].num_servers, floor=4))
+
+
+def test_pack_fleet_global_padding_is_one_bucket(mixed6):
+    probs = [SimProblem.build(d, e) for d, e in mixed6]
+    fleet = pack_fleet(probs, bucket=False)
+    assert len(fleet.buckets) == 1
+    b = fleet.buckets[0]
+    assert (b.max_p, b.max_S) == (max(p.num_layers for p in probs),
+                                  probs[0].num_servers)
+    np.testing.assert_array_equal(np.sort(b.idx), np.arange(6))
+
+
+# ---------------------------------------------------------------------------
+# gene-for-gene parity: buckets vs sequential, buckets vs global padding
+# ---------------------------------------------------------------------------
+
+def test_multi_bucket_matches_sequential(env):
+    """Problems split across two buckets still match the sequential
+    solver gene-for-gene — the PR 1 bar, now per bucket."""
+    fleet = [_mk("alexnet", 0, 3.0, env), _mk("vgg19", 1, 3.0, env),
+             _mk("alexnet", 2, 1.5, env), _mk("vgg19", 3, 5.0, env)]
+    seq = [run_pso_ga(d, e, FLEET_CFG, seed=i)
+           for i, (d, e) in enumerate(fleet)]
+    bat = run_pso_ga_batch(fleet, FLEET_CFG, seed=list(range(4)))
+    for a, b in zip(seq, bat):
+        assert a.best_fitness == b.best_fitness
+        np.testing.assert_array_equal(a.best_x, b.best_x)
+        assert a.iterations == b.iterations
+
+
+def test_bucketed_equals_global_padding(mixed6):
+    """Bucket shape is invisible in results: per-group power-of-two
+    padding and fleet-global padding agree bit-for-bit."""
+    a = run_pso_ga_batch(mixed6, FLEET_CFG, seed=7, bucket=True)
+    b = run_pso_ga_batch(mixed6, FLEET_CFG, seed=7, bucket=False)
+    for ra, rb in zip(a, b):
+        assert ra.best_fitness == rb.best_fitness
+        assert ra.best_cost == rb.best_cost
+        np.testing.assert_array_equal(ra.best_x, rb.best_x)
+
+
+def test_result_order_bit_stable_under_permutation(mixed6):
+    """Solving the same fleet in a random input order returns the same
+    per-problem genes — bucket assignment routes by problem identity,
+    never by input position."""
+    base = run_pso_ga_batch(mixed6, FLEET_CFG, seed=[10 + i
+                                                    for i in range(6)])
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(6)
+    shuffled = run_pso_ga_batch([mixed6[p] for p in perm], FLEET_CFG,
+                                seed=[10 + int(p) for p in perm])
+    for k, p in enumerate(perm):
+        assert shuffled[k].best_fitness == base[p].best_fitness
+        np.testing.assert_array_equal(shuffled[k].best_x, base[p].best_x)
+
+
+def test_return_state_restores_order_across_buckets(mixed6):
+    """The re-assembled state is fleet-ordered at the largest bucket's
+    max_p, with genes beyond each problem's own bucket left zero."""
+    res, state = run_pso_ga_batch(mixed6, FLEET_CFG, seed=5,
+                                  return_state=True)
+    assert state.X.shape == (6, FLEET_CFG.pop_size, 128)
+    probs = [SimProblem.build(d, e) for d, e in mixed6]
+    for i, (pr, r) in enumerate(zip(probs, res)):
+        assert float(state.gbest_f[i]) == r.best_fitness
+        np.testing.assert_array_equal(
+            np.asarray(state.gbest_x[i])[:pr.num_layers], r.best_x)
+        bp = bucket_size(pr.num_layers)
+        assert not np.asarray(state.X[i, :, bp:]).any()
+        assert not np.asarray(state.gbest_x[i])[pr.num_layers:].any()
+
+
+# ---------------------------------------------------------------------------
+# runner-cache discipline under bucketing
+# ---------------------------------------------------------------------------
+
+def test_one_trace_per_cfg_bucket_and_repeat_hits(mixed6):
+    """Exactly one miss+trace per distinct (cfg, shape-bucket); a repeat
+    fleet is ALL hits with zero new traces."""
+    cfg = dataclasses.replace(FLEET_CFG, max_iters=83)   # fresh entries
+    reset_runner_cache_stats()
+    run_pso_ga_batch(mixed6, cfg, seed=0)
+    s1 = runner_cache_stats()
+    assert s1["misses"] == 3                     # three shape buckets
+    assert s1["traces"] == 3
+    assert s1["hits"] == 0
+    run_pso_ga_batch(mixed6, cfg, seed=1)
+    s2 = runner_cache_stats()
+    assert s2["hits"] == 3
+    assert s2["misses"] == 3
+    assert s2["traces"] == 3
+
+
+# ---------------------------------------------------------------------------
+# warm incumbents and arrivals route with their problem
+# ---------------------------------------------------------------------------
+
+def test_warm_incumbents_route_through_buckets(mixed6):
+    probs = [SimProblem.build(d, e) for d, e in mixed6]
+    cold = run_pso_ga_batch(mixed6, FLEET_CFG, seed=2)
+    plans = [r.best_x for r in cold]
+    # the incumbent's key re-keys bit-equal through the bucketed
+    # evaluator — solver and evaluator pad identically per bucket
+    keys = incumbent_keys(probs, plans, FLEET_CFG)
+    for r, k in zip(cold, keys):
+        assert r.best_fitness == pytest.approx(float(k), rel=0, abs=0)
+    # a demoted entry (None incumbent) inside a warm fleet solves cold —
+    # bit-identical to the cold fleet — regardless of which bucket the
+    # demoted problem lives in (here: the lone googlenet bucket)
+    warm_inc = list(plans)
+    warm_inc[3] = None
+    warm = run_pso_ga_batch(mixed6, FLEET_CFG, seed=2,
+                            incumbent=warm_inc, migration_weight=1.0)
+    assert warm[3].best_fitness == cold[3].best_fitness
+    np.testing.assert_array_equal(warm[3].best_x, cold[3].best_x)
+
+
+def test_arrivals_route_through_buckets(mixed6):
+    rng = np.random.default_rng(11)
+    arrivals = [np.sort(rng.uniform(0.0, 10.0, size=(2, 1, 3)), axis=-1)
+                for _ in mixed6]
+    a = run_pso_ga_batch(mixed6, MESH_CFG, seed=4, arrivals=arrivals,
+                         bucket=True)
+    b = run_pso_ga_batch(mixed6, MESH_CFG, seed=4, arrivals=arrivals,
+                         bucket=False)
+    for ra, rb in zip(a, b):
+        assert ra.best_fitness == rb.best_fitness
+        np.testing.assert_array_equal(ra.best_x, rb.best_x)
+
+
+# ---------------------------------------------------------------------------
+# mesh sharding: gene-for-gene identical to the single-device solve
+# ---------------------------------------------------------------------------
+
+def _assert_same_results(a, b):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        assert ra.best_fitness == rb.best_fitness
+        assert ra.best_cost == rb.best_cost
+        assert ra.iterations == rb.iterations
+        np.testing.assert_array_equal(ra.best_x, rb.best_x)
+
+
+def test_mesh_sharded_parity_cold(mesh_fleet, mesh_cold):
+    mesh = make_test_mesh()
+    sharded = run_pso_ga_batch(mesh_fleet, MESH_CFG,
+                               seed=list(range(len(mesh_fleet))),
+                               mesh=mesh)
+    _assert_same_results(mesh_cold, sharded)
+
+
+def test_mesh_sharded_parity_warm(mesh_fleet, mesh_cold):
+    mesh = make_test_mesh()
+    inc = [r.best_x for r in mesh_cold]
+    ref = run_pso_ga_batch(mesh_fleet, MESH_CFG, seed=9, incumbent=inc,
+                           migration_weight=1.0)
+    sharded = run_pso_ga_batch(mesh_fleet, MESH_CFG, seed=9,
+                               incumbent=inc, migration_weight=1.0,
+                               mesh=mesh)
+    _assert_same_results(ref, sharded)
+
+
+def test_mesh_sharded_parity_traffic(mesh_fleet):
+    rng = np.random.default_rng(23)
+    arrivals = [np.sort(rng.uniform(0.0, 8.0, size=(2, 1, 3)), axis=-1)
+                for _ in mesh_fleet]
+    mesh = make_test_mesh()
+    ref = run_pso_ga_batch(mesh_fleet, MESH_CFG, seed=6,
+                           arrivals=arrivals)
+    sharded = run_pso_ga_batch(mesh_fleet, MESH_CFG, seed=6,
+                               arrivals=arrivals, mesh=mesh)
+    _assert_same_results(ref, sharded)
+
+
+def test_mesh_pads_non_divisible_buckets(env):
+    """N=3 in one bucket: on a multi-shard mesh the runner pads with
+    dummy problems; results must be identical to the unsharded solve
+    (and to a solo solve of each problem)."""
+    fleet = [_mk("alexnet", i, 3.0, env) for i in range(3)]
+    mesh = make_test_mesh()
+    ref = run_pso_ga_batch(fleet, MESH_CFG, seed=[1, 2, 3])
+    sharded = run_pso_ga_batch(fleet, MESH_CFG, seed=[1, 2, 3],
+                               mesh=mesh)
+    _assert_same_results(ref, sharded)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction satellites
+# ---------------------------------------------------------------------------
+
+def test_multipod_test_mesh_min_devices():
+    if jax.device_count() < 4:
+        with pytest.raises(ValueError, match="at least 4 devices"):
+            make_test_mesh(multi_pod=True)
+    else:
+        m = make_test_mesh(multi_pod=True)
+        assert m.axis_names == ("pod", "data", "model")
+        assert data_axes_of(m) == ("pod", "data")
+        assert data_shard_count(m) == m.devices.size // 2
+
+
+def test_resolve_mesh():
+    assert resolve_mesh(None) is None
+    assert resolve_mesh("none") is None
+    m = resolve_mesh("host")
+    assert isinstance(m, jax.sharding.Mesh)
+    assert data_shard_count(m) >= 1
+    with pytest.raises(ValueError, match="unknown mesh"):
+        resolve_mesh("bogus")
+
+
+def test_bench_metadata_stamps_devices():
+    # tier-1 runs `python -m pytest` from the repo root, so the
+    # benchmarks package resolves from the cwd
+    from benchmarks.common import bench_metadata
+    meta = bench_metadata(seeds=[0])
+    assert meta["device_count"] == jax.device_count()
+    assert "mesh" not in meta
+    m = make_test_mesh()
+    meta = bench_metadata(mesh=m)
+    assert meta["mesh"]["axes"] == list(m.axis_names)
+    assert tuple(meta["mesh"]["shape"]) == m.devices.shape

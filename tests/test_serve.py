@@ -60,11 +60,12 @@ def test_serve_plan_traffic_backend_smoke(monkeypatch, capsys):
     real = core.plan_offload_batch
     captured = {}
 
-    def spy(items, env, pso, fitness_backend, traffic):
+    def spy(items, env, pso, fitness_backend, traffic, mesh=None):
         pso = dataclasses.replace(pso, pop_size=8, max_iters=4,
                                   stall_iters=2)
         plans = real(items[:1], env=env, pso=pso,
-                     fitness_backend=fitness_backend, traffic=traffic)
+                     fitness_backend=fitness_backend, traffic=traffic,
+                     mesh=mesh)
         captured["plans"] = plans
         return plans                    # zip(shapes, plans) truncates
 
@@ -94,11 +95,12 @@ def test_serve_service_cli_smoke(monkeypatch, capsys):
     real_service = core.run_service
     captured = {}
 
-    def plan_spy(items, env, pso, fitness_backend, traffic):
+    def plan_spy(items, env, pso, fitness_backend, traffic, mesh=None):
         pso = dataclasses.replace(pso, pop_size=8, max_iters=4,
                                   stall_iters=2)
         return real_plan(items[:1], env=env, pso=pso,
-                         fitness_backend=fitness_backend, traffic=traffic)
+                         fitness_backend=fitness_backend, traffic=traffic,
+                         mesh=mesh)
 
     def service_spy(dags, trace, cfg, seed=0, initial=None, sleeper=None):
         small = dataclasses.replace(
