@@ -24,11 +24,12 @@ import json
 import jax
 import numpy as np
 
-from repro.core import (ChaosConfig, PSOGAConfig, ReplanConfig,
-                        ServiceConfig, SimProblem, TrafficConfig,
-                        heft_makespan, merge_dags, paper_environment,
-                        run_service, runner_cache_stats, sample_trace,
-                        traffic_replay, zero_drift_trace, zoo)
+from repro.core import (ChaosConfig, PlanCacheConfig, PSOGAConfig,
+                        ReplanConfig, ServiceConfig, SimProblem,
+                        TrafficConfig, heft_makespan, merge_dags,
+                        paper_environment, run_service,
+                        runner_cache_stats, sample_trace, traffic_replay,
+                        zero_drift_trace, zoo)
 
 from .bench_online import _json_safe, make_fleet
 from .common import bench_metadata, print_csv
@@ -136,6 +137,42 @@ def run_triage_cell(rounds: int, seed: int):
     return row, out
 
 
+def run_cache_cell(n: int, rounds: int, seed: int, arms):
+    """Plan-cache A/B on a repeat-scenario trace (DESIGN.md §11 phase
+    2): the same epoch recurs every round, so with the cache on every
+    round after the first is served through the replay-exact gate
+    instead of a warm solve. ``arms`` runs in the given order — put
+    ``off`` first so both arms see a hot compiled-runner cache and the
+    delta is pure solve-vs-lookup, not compile time."""
+    env = paper_environment()
+    dags = make_fleet(n, env)
+    trace = zero_drift_trace(env, rounds=rounds)
+    rows, out = [], {}
+    for arm in arms:
+        cfg = ServiceConfig(
+            replan=ReplanConfig(pso=SERVICE_CFG),
+            plan_cache=PlanCacheConfig() if arm == "on" else None)
+        rep = run_service(dags, trace, cfg, seed=seed)
+        s = rep.summary()
+        hit_rate = 0.0
+        if rep.cache_stats is not None:
+            cs = rep.cache_stats
+            n_look = cs["hits"] + cs["misses"]
+            hit_rate = cs["hits"] / n_look if n_look else 0.0
+        row = {
+            "cell": f"cache_{arm}", "kind": "repeat-scenario",
+            "n_problems": n, "rounds": rounds,
+            "availability": s["availability"],
+            "ttp_p50_s": s["time_to_plan_s"]["p50"],
+            "ttp_p99_s": s["time_to_plan_s"]["p99"],
+            "ttp_max_s": s["time_to_plan_s"]["max"],
+            "cache_hit_rate": hit_rate,
+        }
+        rows.append(row)
+        out[arm] = s
+    return rows, out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=6,
@@ -145,6 +182,13 @@ def main() -> None:
     ap.add_argument("--kind", default="node-loss",
                     help="drift family for the chaos cell")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-cache", default="both",
+                    choices=("on", "off", "both"),
+                    help="which plan-cache arms to run for the "
+                         "repeat-scenario A/B cell")
+    ap.add_argument("--cache-rounds", type=int, default=32,
+                    help="rounds in the repeat-scenario trace (enough "
+                         "that one cold miss falls outside the p99)")
     ap.add_argument("--json", default="BENCH_service.json",
                     help="machine-readable results ('' to disable)")
     args = ap.parse_args()
@@ -169,6 +213,26 @@ def main() -> None:
           f"{chaos['fallback_counts']}, counters {chaos['counters']}",
           flush=True)
 
+    arms = {"both": ("off", "on"), "on": ("on",),
+            "off": ("off",)}[args.plan_cache]
+    cache_rows, cache_out = run_cache_cell(
+        args.n, args.cache_rounds, args.seed, arms)
+    rows.extend(cache_rows)
+    details["cache"] = cache_out
+    by_arm = {r["cell"]: r for r in cache_rows}
+    if "cache_on" in by_arm and "cache_off" in by_arm:
+        on, off = by_arm["cache_on"], by_arm["cache_off"]
+        ok = on["ttp_p99_s"] < off["ttp_p99_s"]
+        print(f"# cache A/B: hit rate {on['cache_hit_rate']:.2f}, "
+              f"time-to-plan p99 {off['ttp_p99_s']:.3f}s -> "
+              f"{on['ttp_p99_s']:.3f}s (bar: on < off) "
+              f"-> {'PASS' if ok else 'MISS'}", flush=True)
+    else:
+        arm = cache_rows[0]
+        print(f"# cache {arms[0]}: hit rate "
+              f"{arm['cache_hit_rate']:.2f}, time-to-plan p99 "
+              f"{arm['ttp_p99_s']:.3f}s", flush=True)
+
     triage_row, triage = run_triage_cell(max(4, args.rounds // 2),
                                          args.seed)
     rows.append(triage_row)
@@ -185,6 +249,9 @@ def main() -> None:
                            "ttp_max_s"]
               + [f"rung_{r}" for r in sorted(
                   k[5:] for k in clean_row if k.startswith("rung_"))])
+    print_csv(cache_rows, ["cell", "kind", "n_problems", "rounds",
+                           "availability", "ttp_p50_s", "ttp_p99_s",
+                           "ttp_max_s", "cache_hit_rate"])
     print_csv([triage_row], ["cell", "kind", "n_problems", "rounds",
                              "no_triage_miss_p95", "triage_miss_p95",
                              "rejected_apps"])

@@ -37,9 +37,13 @@ from .batch import (FleetBucket, PackedFleet, pack_arrivals, pack_fleet,
 from .online import (DriftEvent, EnvTrace, OnlineReport, ReplanConfig,
                      RoundLog, TRACE_KINDS, plan_is_valid, replan_fleet,
                      replan_round, sample_trace, zero_drift_trace)
+from .plancache import PlanCache, PlanCacheConfig, dag_fingerprint
+from .seeding import coerce_seed, rng_entropy
 from .service import (ChaosConfig, LADDER_RUNGS, ServiceConfig,
-                      ServiceReport, ServiceRoundLog, run_service)
-from .traffic import (ArrivalTrace, TRAFFIC_KINDS, TrafficConfig,
+                      ServiceReport, ServiceRoundLog, run_service,
+                      run_services)
+from .traffic import (ArrivalQueue, ArrivalTrace, IngestConfig,
+                      TRAFFIC_KINDS, TrafficConfig,
                       TrafficResult, sample_arrivals,
                       simulate_traffic_swarm, traffic_replay,
                       traffic_stats, zero_contention_arrivals)
@@ -67,8 +71,11 @@ __all__ = [
     "TRACE_KINDS", "plan_is_valid", "replan_fleet", "replan_round",
     "sample_trace", "zero_drift_trace",
     "ChaosConfig", "LADDER_RUNGS", "ServiceConfig", "ServiceReport",
-    "ServiceRoundLog", "run_service",
-    "ArrivalTrace", "TRAFFIC_KINDS", "TrafficConfig", "TrafficResult",
+    "ServiceRoundLog", "run_service", "run_services",
+    "PlanCache", "PlanCacheConfig", "dag_fingerprint",
+    "coerce_seed", "rng_entropy",
+    "ArrivalQueue", "ArrivalTrace", "IngestConfig",
+    "TRAFFIC_KINDS", "TrafficConfig", "TrafficResult",
     "sample_arrivals", "simulate_traffic_swarm", "traffic_replay",
     "traffic_stats", "zero_contention_arrivals",
     "GAConfig", "greedy_offload", "heft_makespan", "pre_pso", "run_ga",

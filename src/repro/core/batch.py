@@ -46,6 +46,7 @@ entirely.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
                     Tuple, Union)
 
@@ -58,6 +59,7 @@ from .environment import Environment
 from .fitness import make_swarm_fitness, resolve_fitness_backend
 from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
                      swarm_step)
+from .seeding import coerce_seed
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
 
 __all__ = ["pack_problems", "pack_arrivals", "run_pso_ga_batch",
@@ -90,14 +92,15 @@ def _normalize_seeds(seed, n: int) -> List[int]:
     ``np.isscalar`` is the wrong predicate here: it rejects 0-d numpy
     arrays (``np.array(7)``) and, on some numpy versions, numpy integer
     scalars — both of which flow naturally out of configs and RNGs. Treat
-    anything 0-d as a broadcast scalar, any 1-d integer-like sequence as
-    per-problem seeds.
+    anything 0-d as a broadcast scalar (via the shared ``coerce_seed``
+    front door, so samplers and the fleet solver fail identically), any
+    1-d integer-like sequence as per-problem seeds.
     """
     arr = np.asarray(seed)
     if not np.issubdtype(arr.dtype, np.integer):
         raise TypeError(f"seed must be int-like, got dtype {arr.dtype}")
     if arr.ndim == 0:
-        return [int(arr)] * n
+        return [coerce_seed(arr)] * n
     if arr.ndim != 1:
         raise ValueError(f"seed must be a scalar or 1-d sequence, "
                          f"got shape {arr.shape}")
@@ -217,6 +220,10 @@ _RUNNER_CACHE: Dict[tuple, Callable] = {}
 #: invariant "every round after the first hits the compiled runner"
 #: (DESIGN.md §9) is asserted against this counter.
 _CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
+#: one lock guards lookups/inserts (and the counters) so N concurrent
+#: ``run_service`` loops share one runner per key — the multi-service
+#: invariant of DESIGN.md §11 phase 2.
+_RUNNER_LOCK = threading.Lock()
 
 
 def runner_cache_info() -> Tuple[tuple, ...]:
@@ -290,16 +297,62 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False,
     compiled program), so flipping only the spelling of the backend
     never retraces — pinned by
     ``tests/test_traffic_kernel.py::test_runner_cache_backend_normalized``.
+
+    Thread-safe: lookups, inserts, and the counters sit behind one lock,
+    and first calls per shape specialization are serialized, so N
+    concurrent ``run_service`` loops (``run_services``) get exactly one
+    miss — and one trace — per key (DESIGN.md §11).
     """
     cfg = dataclasses.replace(
         cfg, fitness_backend=resolve_fitness_backend(cfg.fitness_backend))
     cache_key = (cfg, traffic, shape_bucket, _mesh_cache_key(mesh))
-    cached = _RUNNER_CACHE.get(cache_key)
-    if cached is not None:
-        _CACHE_STATS["hits"] += 1
-        return cached
-    _CACHE_STATS["misses"] += 1
+    with _RUNNER_LOCK:
+        cached = _RUNNER_CACHE.get(cache_key)
+        if cached is not None:
+            _CACHE_STATS["hits"] += 1
+            return cached
+        _CACHE_STATS["misses"] += 1
+        jitted = _build_fleet_runner(cfg, traffic, mesh)
+        _RUNNER_CACHE[cache_key] = jitted
+        return jitted
 
+
+def _serialize_first_calls(jitted: Callable) -> Callable:
+    """Serialize the FIRST call per argument-shape specialization.
+
+    ``jax.jit`` traces lazily at first invocation and drops the GIL
+    while XLA compiles, so two service threads hitting a fresh runner
+    could each trace the same program — double-counting the ``traces``
+    invariant counter and compiling twice. One lock per shape signature
+    makes the first call exclusive; warmed signatures take the lock-free
+    fast path, so concurrent solves still overlap.
+    """
+    guard = threading.Lock()
+    warmed: set = set()
+    locks: Dict[tuple, threading.Lock] = {}
+
+    def wrapper(*args):
+        sig = tuple((tuple(leaf.shape), str(leaf.dtype))
+                    for leaf in jax.tree.leaves(args)
+                    if hasattr(leaf, "shape"))
+        with guard:
+            warm = sig in warmed
+            lock = None if warm else locks.setdefault(sig, threading.Lock())
+        if warm:
+            return jitted(*args)
+        with lock:
+            out = jitted(*args)
+        with guard:
+            warmed.add(sig)
+            locks.pop(sig, None)
+        return out
+
+    return wrapper
+
+
+def _build_fleet_runner(cfg: PSOGAConfig, traffic: bool, mesh) -> Callable:
+    """Construct (without tracing) the jitted fleet loop for
+    ``_fleet_runner`` — see its docstring for the contract."""
     vstep = jax.vmap(lambda pp, st, inc, mw, arr: swarm_step(
         pp, st, cfg, incumbent=inc, mig_weight=mw, arrivals=arr))
     # one swarm-fitness per problem, vmapped over the fleet: the scan
@@ -360,9 +413,7 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False,
         run = shard_map(run, mesh=mesh, in_specs=(spec,) * n_args,
                         out_specs=spec, check_rep=False)
 
-    jitted = jax.jit(run)
-    _RUNNER_CACHE[cache_key] = jitted
-    return jitted
+    return _serialize_first_calls(jax.jit(run))
 
 
 def pack_arrivals(arrivals: Sequence[np.ndarray],

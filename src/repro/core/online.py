@@ -44,6 +44,7 @@ from .dag import LayerDAG
 from .environment import CLOUD, DEVICE, EDGE, Environment
 from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
 from .pso_ga import PSOGAConfig, PSOGAResult
+from .seeding import rng_entropy
 from .simulator import SimProblem
 from .traffic import TrafficConfig
 
@@ -229,7 +230,7 @@ def sample_trace(kind: str, env: Environment, rounds: int,
     if not np.isfinite(severity) or not 0.0 < severity <= 1.0:
         raise ValueError(f"severity must be finite in (0, 1], "
                          f"got {severity!r}")
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(rng_entropy(seed))
     s = env.num_servers
     tier = np.asarray(env.tier)
     events: List[DriftEvent] = [_identity_event(s, 0.0, f"{kind}[base]")]

@@ -37,6 +37,24 @@ deployable:
     poison the shared FCFS queues the admitted apps ride
     (DESIGN.md §10), instead of dragging every co-scheduled request
     over its deadline.
+  * **plan cache** (phase 2) — with ``plan_cache`` set, rounds whose
+    (DNN, env-bucket, load-bucket) key holds a stored plan that passes
+    the replay-exact revalidation gate skip ``replan_round`` entirely
+    and serve from cache (rung ``cached``); a hit is bit-identical to
+    the plan a fresh warm-started solve would keep, and cached plans
+    still walk the ladder's ``_plan_ok`` gate against the post-churn
+    env, so node-loss invalidation composes (``core.plancache``).
+  * **async request ingestion** (phase 2) — with ``ingest`` set, the
+    rate estimator's arrival observations flow through a bounded
+    ``ArrivalQueue`` (explicit backpressure counters) instead of
+    synchronous per-round draws; ``threads=0`` is the deterministic
+    single-thread mode (bit-identical to the synchronous path),
+    ``threads>0`` pre-draws observations concurrently.
+  * **multi-service sharing** (phase 2) — ``run_services`` runs N
+    service loops concurrently against one thread-safe compiled-runner
+    pool: ``runner_cache_stats()`` shows one trace per (cfg, bucket,
+    mesh) across all of them, and an optional shared ``PlanCache``
+    lets services reuse each other's solves.
   * **chaos harness** — ``ChaosConfig`` wires ``runtime.fault``'s
     ``FailureInjector`` and ``runtime.straggler``'s detector into the
     loop: injected solver crashes (retried with backoff, then circuit-
@@ -55,9 +73,11 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import (Dict, List, Mapping, NamedTuple, Optional, Sequence,
-                    Tuple)
+                    Tuple, Union)
 
 import numpy as np
 
@@ -70,15 +90,20 @@ from .dag import LayerDAG
 from .environment import Environment
 from .online import (EnvTrace, ReplanConfig, RoundLog, _round_arrivals,
                      plan_is_valid, replan_round)
+from .plancache import PlanCache, PlanCacheConfig, dag_fingerprint
 from .pso_ga import PSOGAConfig, PSOGAResult
 from .simulator import SimProblem, simulate_np
+from .traffic import ArrivalQueue, IngestConfig
 
 __all__ = ["ChaosConfig", "ServiceConfig", "ServiceRoundLog",
-           "ServiceReport", "run_service", "LADDER_RUNGS"]
+           "ServiceReport", "run_service", "run_services", "LADDER_RUNGS"]
 
-#: the graceful-degradation ladder, best rung first. ``pinned`` is the
-#: circuit-breaker rung (serve the last-good plan without solving).
-LADDER_RUNGS = ("warm", "burst", "pinned", "heft", "greedy", "reject")
+#: the graceful-degradation ladder, best rung first. ``cached`` serves a
+#: stored plan that survived the replay-exact gate without solving;
+#: ``pinned`` is the circuit-breaker rung (serve the last-good plan
+#: without solving).
+LADDER_RUNGS = ("cached", "warm", "burst", "pinned", "heft", "greedy",
+                "reject")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,10 +167,21 @@ class ServiceConfig:
     treat_stalls_as_failures: bool = False
     straggler_warmup: int = 2       # detector warmup (first rounds compile)
     chaos: Optional[ChaosConfig] = None
+    #: phase 2: plan cache over (DNN, env-bucket, load-bucket) keys —
+    #: None keeps every round solving (the parity configuration).
+    plan_cache: Optional[PlanCacheConfig] = None
+    #: phase 2: route rate observations through a bounded ArrivalQueue;
+    #: requires ``estimate_rates`` (there is no stream to ingest
+    #: otherwise). None keeps the legacy synchronous draws.
+    ingest: Optional[IngestConfig] = None
 
     def __post_init__(self):
         if self.slo_s <= 0.0 or np.isnan(self.slo_s):
             raise ValueError(f"slo_s must be > 0, got {self.slo_s!r}")
+        if self.ingest is not None and not self.estimate_rates:
+            raise ValueError("ingest requires estimate_rates=True — "
+                             "without rate estimation there is no "
+                             "observation stream to ingest")
         if not np.isfinite(self.triage_margin) or self.triage_margin < 0.0:
             raise ValueError(f"triage_margin must be finite and >= 0, "
                              f"got {self.triage_margin!r}")
@@ -169,8 +205,10 @@ class ServiceRoundLog(NamedTuple):
     stale_env: bool              # env snapshot rejected, last-good used
     stalled: bool                # straggler detector flagged the solve
     rejected_apps: int           # apps triaged out of the shared queues
-    est_rate: float              # observed-rate estimate (0 when unused)
+    est_rates: Tuple[float, ...]  # per-DAG observed-rate estimates
+                                  # (empty when estimation is off)
     replan: Optional[RoundLog]   # the PSO rung's log (None when skipped)
+    cache_hit: bool = False      # every problem served from the plan cache
 
 
 @dataclasses.dataclass
@@ -182,6 +220,10 @@ class ServiceReport:
     plans: List[Optional[np.ndarray]]   # final per-problem plans
     fallback_counts: Dict[str, int]     # problem-rounds served per rung
     counters: Dict[str, int]
+    #: plan-cache counters snapshot (None when the cache is off). With a
+    #: shared cache the snapshot is taken at this service's exit, so it
+    #: includes every sharer's traffic up to that point.
+    cache_stats: Optional[Dict[str, int]] = None
 
     def availability(self) -> float:
         """Fraction of problem-rounds served a valid plan (any rung but
@@ -202,11 +244,14 @@ class ServiceReport:
                 "max": float(walls.max())}
 
     def summary(self) -> Dict[str, object]:
-        return {"rounds": len(self.rounds),
-                "availability": self.availability(),
-                "time_to_plan_s": self.time_to_plan(),
-                "fallback_counts": dict(self.fallback_counts),
-                "counters": dict(self.counters)}
+        out = {"rounds": len(self.rounds),
+               "availability": self.availability(),
+               "time_to_plan_s": self.time_to_plan(),
+               "fallback_counts": dict(self.fallback_counts),
+               "counters": dict(self.counters)}
+        if self.cache_stats is not None:
+            out["cache_stats"] = dict(self.cache_stats)
+        return out
 
 
 class _RateWindow:
@@ -331,27 +376,36 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                 cfg: ServiceConfig = ServiceConfig(),
                 seed: int = 0,
                 initial: Optional[Sequence[PSOGAResult]] = None,
-                sleeper=None) -> ServiceReport:
+                sleeper=None,
+                plan_cache: Optional[PlanCache] = None) -> ServiceReport:
     """Drive a fleet through a drift trace as a long-running service.
 
     Round 0 solves cold exactly like ``replan_fleet``; every later round
     runs the fault-tolerant pipeline: validate the env snapshot →
-    estimate arrival rates (or reuse the trace's) → triage unsavable
-    apps → pick a PSO rung within the watchdog's iteration budget →
-    solve with retries under the circuit breaker → apply any mid-round
-    churn → walk every problem down the ladder until a rung's plan
-    passes ``_plan_ok``. Surviving plans are the next round's
-    incumbents; a rejected problem re-enters cold (the stale-plan guard
-    accepts ``None`` incumbents).
+    estimate arrival rates (or reuse the trace's) → consult the plan
+    cache (a full-fleet hit that survives the replay-exact gate serves
+    immediately, rung ``cached``) → triage unsavable apps → pick a PSO
+    rung within the watchdog's iteration budget → solve with retries
+    under the circuit breaker → apply any mid-round churn → walk every
+    problem down the ladder until a rung's plan passes ``_plan_ok`` →
+    store freshly-solved plans back into the cache. Surviving plans are
+    the next round's incumbents; a rejected problem re-enters cold (the
+    stale-plan guard accepts ``None`` incumbents).
 
     With every protection at its default-off setting the loop IS
     ``replan_fleet`` step for step — same seeds, same arrivals, same
     accept-if-better — so plans match bit-for-bit (the parity test).
     ``sleeper`` is handed to ``retry_with_backoff`` (tests inject a
-    recorder so chaos runs never block).
+    recorder so chaos runs never block). ``plan_cache`` overrides
+    ``cfg.plan_cache`` with a caller-owned (possibly shared) cache
+    instance.
     """
     rcfg = cfg.replan
     burst_rcfg = dataclasses.replace(rcfg, pso=cfg.burst)
+    cache = plan_cache
+    if cache is None and cfg.plan_cache is not None:
+        cache = PlanCache(cfg.plan_cache)
+    fps = [dag_fingerprint(d) for d in dags] if cache is not None else None
     injector = None
     if cfg.chaos is not None and (cfg.chaos.crash_rounds
                                   or cfg.chaos.p_crash > 0.0):
@@ -367,6 +421,45 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
     if cfg.estimate_rates and rcfg.traffic is not None:
         windows = [_RateWindow(cfg.window_rounds, rcfg.traffic.horizon,
                                d.num_apps) for d in dags]
+
+    def _observe(k: int, i: int) -> Tuple[int, int, np.ndarray]:
+        """One (round, dag, timestamps) arrival observation — the exact
+        draw the synchronous estimate_rates path makes in-loop, so the
+        deterministic ingestion mode is bit-identical to it."""
+        tc = rcfg.traffic
+        obs = tc.solver_arrivals(
+            dags[i].num_apps, seed=seed + 7919 * k + 31 * i,
+            rate_scale=trace.events[k].load_scale)[0]
+        return (k, i, obs)
+
+    # async ingestion (phase 2): observations ride a bounded queue. With
+    # threads=0 the round loop enqueues its own round synchronously —
+    # deterministic and bit-identical to the legacy path; with threads>0
+    # producers pre-draw future rounds' observations concurrently.
+    queue: Optional[ArrivalQueue] = None
+    producers: List[threading.Thread] = []
+    stop = threading.Event()
+    if cfg.ingest is not None:
+        if windows is None:
+            raise ValueError("ingest requires a traffic model "
+                             "(cfg.replan.traffic) to observe")
+        queue = ArrivalQueue(cfg.ingest.capacity)
+
+        def _produce(idxs: List[int]) -> None:
+            for kk in range(1, trace.num_rounds):
+                for ii in idxs:
+                    if stop.is_set():
+                        return
+                    queue.put(_observe(kk, ii))
+
+        n_threads = min(int(cfg.ingest.threads), len(dags))
+        for t in range(n_threads):
+            th = threading.Thread(
+                target=_produce, args=(list(range(t, len(dags),
+                                                  n_threads)),),
+                daemon=True)
+            producers.append(th)
+            th.start()
 
     counters = {"retries": 0, "crashes": 0, "stale_env_rounds": 0,
                 "stalls_flagged": 0, "breaker_opened": 0,
@@ -405,47 +498,87 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
             last_good_env = env_k
         probs = [SimProblem.build(d, env_k) for d in dags]
 
-        # arrivals: the trace's own draws, or resampled at the observed
-        # rate (streaming ingestion — the solver never sees load_scale).
-        est_rate = 0.0
+        # rate estimation: ingest this round's observations — via the
+        # bounded queue when async ingestion is on, else the legacy
+        # synchronous draws — and slide them into the per-DAG windows
+        # (the solver never sees the trace's load_scale).
+        est_rates: Tuple[float, ...] = ()
         if windows is not None:
             tc = rcfg.traffic
-            arrivals = []
-            for i, d in enumerate(dags):
-                obs = tc.solver_arrivals(
-                    d.num_apps, seed=seed + 7919 * k + 31 * i,
-                    rate_scale=ev.load_scale)[0]
-                windows[i].ingest(obs)
-                est = windows[i].rate()
-                est_rate = est if est is not None else tc.rate
-                scale = max(est_rate / tc.rate, 1e-6)
-                arrivals.append(tc.solver_arrivals(
-                    d.num_apps, seed=seed + 1000 * k + 31 * i,
-                    rate_scale=scale))
-        else:
-            arrivals = _round_arrivals(rcfg, dags, ev, seed + 1000 * k)
-        arrivals, rejected = _triage(dags, probs, env_k,
-                                     cfg.triage_margin, arrivals)
+            if queue is not None:
+                if not producers:   # deterministic single-thread mode
+                    for i in range(len(dags)):
+                        queue.put(_observe(k, i))
+                for _, i, obs in queue.drain():
+                    windows[i].ingest(obs)
+            else:
+                for i in range(len(dags)):
+                    windows[i].ingest(_observe(k, i)[2])
+            ests = [windows[i].rate() for i in range(len(dags))]
+            est_rates = tuple(
+                tc.rate if e is None else float(e) for e in ests)
+
+        # plan cache: a full-fleet hit that survives the replay-exact
+        # gate serves instantly and skips triage/watchdog/solve.
+        cache_hit = False
+        keys_k: Optional[List[tuple]] = None
+        cached_plans: Optional[List[np.ndarray]] = None
+        cache_wall = 0.0
+        if cache is not None:
+            t_c = time.perf_counter()
+            if windows is not None:
+                scales = [max(e / rcfg.traffic.rate, 1e-6)
+                          for e in est_rates]
+            elif rcfg.traffic is not None:
+                scales = [max(float(ev.load_scale), 1e-6)] * len(dags)
+            else:
+                scales = [1.0] * len(dags)
+            keys_k = [cache.key(fps[i], env_k, scales[i])
+                      for i in range(len(dags))]
+            cached_plans = cache.lookup_fleet(keys_k, probs)
+            cache_hit = cached_plans is not None
+            cache_wall = time.perf_counter() - t_c
+
+        rejected = 0
+        arrivals = None
+        if not cache_hit:
+            if windows is not None:
+                tc = rcfg.traffic
+                arrivals = [tc.solver_arrivals(
+                    dags[i].num_apps, seed=seed + 1000 * k + 31 * i,
+                    rate_scale=max(est_rates[i] / tc.rate, 1e-6))
+                    for i in range(len(dags))]
+            else:
+                arrivals = _round_arrivals(rcfg, dags, ev,
+                                           seed + 1000 * k)
+            arrivals, rejected = _triage(dags, probs, env_k,
+                                         cfg.triage_margin, arrivals)
         counters["rejected_apps"] += rejected
 
         # watchdog: remaining SLO slack → iteration budget → rung.
-        est = per_iter.value
-        budget = float("inf") if est is None or not np.isfinite(cfg.slo_s) \
-            else cfg.slo_s / max(est, 1e-12)
-        rung0 = _select_rung(budget, rcfg.pso.max_iters,
-                             cfg.burst.max_iters)
-        want: Optional[ReplanConfig] = {
-            "warm": rcfg, "burst": burst_rcfg, "pinned": None}[rung0]
-        if rung0 != "warm":
-            counters["watchdog_cuts"] += 1
+        # (iter_est, NOT the rate estimate: per-iteration solve seconds.)
+        iter_est = per_iter.value
+        budget = float("inf") \
+            if iter_est is None or not np.isfinite(cfg.slo_s) \
+            else cfg.slo_s / max(iter_est, 1e-12)
         breaker_state = breaker.state
-        if not breaker.allow(k):
-            want, rung0 = None, "pinned"
+        want: Optional[ReplanConfig] = None
+        if cache_hit:
+            rung0 = "cached"
+        else:
+            rung0 = _select_rung(budget, rcfg.pso.max_iters,
+                                 cfg.burst.max_iters)
+            want = {"warm": rcfg, "burst": burst_rcfg,
+                    "pinned": None}[rung0]
+            if rung0 != "warm":
+                counters["watchdog_cuts"] += 1
+            if not breaker.allow(k):
+                want, rung0 = None, "pinned"
 
         solver_failed = False
         retries_used = 0
         rlog: Optional[RoundLog] = None
-        new_plans: Optional[List[np.ndarray]] = None
+        new_plans: Optional[List[np.ndarray]] = cached_plans
         t0 = time.perf_counter()
         if want is not None:
             def attempt(a: int, _want=want):
@@ -465,7 +598,11 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                 counters["crashes"] += 1
             counters["retries"] += retries_used
         wall = time.perf_counter() - t0
-        if cfg.chaos is not None and k in cfg.chaos.stall_rounds:
+        if cache_hit:
+            # time-to-plan for a cached round is the lookup+revalidation
+            # time; injected solver stalls can't stall a skipped solve.
+            wall = cache_wall
+        elif cfg.chaos is not None and k in cfg.chaos.stall_rounds:
             wall += cfg.chaos.stall_s
         stalled = False
         if want is not None:
@@ -509,14 +646,81 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
             rung.append(r_i)
             fallback_counts[r_i] += 1
 
+        # store freshly-solved plans for repeat scenarios: only solver
+        # rungs (accepted under env_k with their replay invariants) and
+        # only when no mid-round churn separated solve-env from
+        # serve-env — a post-churn plan belongs to an env the key never
+        # saw.
+        if (cache is not None and not cache_hit
+                and env_post is env_k):
+            for i, r_i in enumerate(rung):
+                if r_i in ("warm", "burst") and plans[i] is not None:
+                    cache.store(keys_k[i], probs[i], plans[i])
+
         rounds.append(ServiceRoundLog(
             round=k, label=ev.label, rung=tuple(rung), wall_s=wall,
             budget_iters=budget, breaker_state=breaker_state,
             solver_failed=solver_failed, retries_used=retries_used,
             stale_env=stale_env, stalled=stalled,
-            rejected_apps=rejected, est_rate=float(est_rate),
-            replan=rlog))
+            rejected_apps=rejected, est_rates=est_rates,
+            replan=rlog, cache_hit=cache_hit))
+
+    if producers:
+        stop.set()
+        for th in producers:
+            th.join()
+    if queue is not None:
+        qc = queue.counters()
+        counters["ingest_enqueued"] = qc["enqueued"]
+        counters["ingest_dropped"] = qc["dropped"]
+        counters["ingest_drained"] = qc["drained"]
+        counters["ingest_leftover"] = qc["depth"]
 
     return ServiceReport(cold=cold, rounds=rounds, plans=plans,
                          fallback_counts=fallback_counts,
-                         counters=counters)
+                         counters=counters,
+                         cache_stats=cache.stats() if cache is not None
+                         else None)
+
+
+def run_services(fleets: Sequence[Sequence[LayerDAG]],
+                 traces: Union[EnvTrace, Sequence[EnvTrace]],
+                 cfgs: Union[ServiceConfig, Sequence[ServiceConfig],
+                             None] = None,
+                 seeds: Union[int, Sequence[int]] = 0,
+                 plan_cache: Optional[PlanCache] = None,
+                 max_workers: Optional[int] = None
+                 ) -> List[ServiceReport]:
+    """Run N planning services concurrently against one runner pool.
+
+    Each fleet gets its own ``run_service`` loop on its own thread; all
+    of them dispatch into the shared compiled-runner cache, whose lock +
+    first-call serialization guarantee one trace per (cfg, bucket, mesh)
+    across services (DESIGN.md §11 phase 2) — and, since each loop's
+    solves are seeded and self-contained, every service's report is
+    bit-identical to running it alone. ``traces`` / ``cfgs`` / ``seeds``
+    broadcast: pass one value for all services or a sequence of
+    ``len(fleets)``. An optional shared ``plan_cache`` lets services
+    reuse each other's solves (its stats then aggregate all of them).
+    """
+    n = len(fleets)
+    if n == 0:
+        return []
+
+    def _bcast(x, name):
+        if isinstance(x, (list, tuple)):
+            if len(x) != n:
+                raise ValueError(f"{len(x)} {name} for {n} fleets")
+            return list(x)
+        return [x] * n
+
+    traces_l = _bcast(traces, "traces")
+    cfgs_l = _bcast(cfgs if cfgs is not None else ServiceConfig(),
+                    "configs")
+    seeds_l = _bcast(seeds, "seeds")
+    with ThreadPoolExecutor(max_workers=max_workers or n) as ex:
+        futs = [ex.submit(run_service, fleets[j], traces_l[j],
+                          cfgs_l[j], seed=seeds_l[j],
+                          plan_cache=plan_cache)
+                for j in range(n)]
+        return [f.result() for f in futs]

@@ -49,18 +49,22 @@ GA baseline optimize — see DESIGN.md §10.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 from functools import partial
-from typing import Callable, List, NamedTuple, Union
+from typing import Any, Callable, Dict, List, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .seeding import rng_entropy
 from .simulator import (PaddedProblem, SimProblem, _swarm_phase1,
                         pad_problem)
 
-__all__ = ["TRAFFIC_KINDS", "ArrivalTrace", "TrafficConfig",
+__all__ = ["TRAFFIC_KINDS", "ArrivalTrace", "ArrivalQueue",
+           "IngestConfig", "TrafficConfig",
            "sample_arrivals", "TrafficSim", "TrafficResult",
            "simulate_traffic_swarm", "traffic_replay", "traffic_stats",
            "zero_contention_arrivals"]
@@ -184,7 +188,9 @@ def sample_arrivals(kind: str, n_apps: int, rate: float = 0.5,
 
     Mean intensity is ≈ ``rate`` requests/s/app for every family, so an
     intensity sweep compares like with like. Seeded and deterministic:
-    seed index ``s`` draws from ``default_rng([seed, s])``.
+    seed index ``s`` draws from ``default_rng([seed, s])``; the seed is
+    routed through the fleet solver's int-coercion front door, so numpy
+    integer scalars, 0-d arrays, and negative seeds all work.
     """
     if kind not in TRAFFIC_KINDS:
         raise ValueError(f"unknown traffic kind {kind!r} "
@@ -194,9 +200,10 @@ def sample_arrivals(kind: str, n_apps: int, rate: float = 0.5,
     n_apps = _require_count("n_apps", n_apps)
     max_requests = _require_count("max_requests", max_requests)
     n_seeds = _require_count("n_seeds", n_seeds)
+    entropy = rng_entropy(seed)
     t = np.full((n_seeds, n_apps, max_requests), np.inf)
     for s in range(n_seeds):
-        rng = np.random.default_rng([seed, s])
+        rng = np.random.default_rng([entropy, s])
         if kind == "bursty":
             ivals = _mmpp_intervals(rng, horizon)
 
@@ -604,3 +611,95 @@ def traffic_stats(res: TrafficResult) -> dict:
     lat = res.latency[res.req_valid]
     out["latency_p95"] = float(np.percentile(lat, 95)) if lat.size else 0.0
     return out
+
+
+# --------------------------------------------------------------------------
+# async request ingestion (DESIGN.md §11 phase 2)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IngestConfig:
+    """Async arrival-ingestion knobs for the planning service.
+
+    The service's rate estimator (`estimate_rates`) historically drew
+    one arrival observation per DAG synchronously inside every round.
+    With ingestion enabled, observations flow through a bounded
+    :class:`ArrivalQueue` instead — the pipelined producer/consumer
+    shape of offline-inference servers — and the round loop drains
+    whatever has arrived before estimating.
+
+    threads:  0 = deterministic single-thread mode — the round loop
+              itself enqueues exactly this round's observations before
+              draining, so estimates (and therefore plans) are
+              bit-identical to the legacy synchronous path; chaos and
+              parity suites run in this mode. >0 = that many producer
+              threads pre-draw observations for future rounds and
+              enqueue them concurrently (liveness and backpressure are
+              deterministic, drain *interleaving* is not).
+    capacity: queue slots; a full queue drops the observation and
+              counts it (``ingest_dropped``) — backpressure is
+              explicit, never blocking the planner.
+    """
+
+    threads: int = 0
+    capacity: int = 64
+
+    def __post_init__(self) -> None:
+        if int(self.threads) < 0:
+            raise ValueError(
+                f"threads must be >= 0, got {self.threads!r}")
+        if int(self.capacity) < 1:
+            raise ValueError(
+                f"capacity must be >= 1, got {self.capacity!r}")
+
+
+class ArrivalQueue:
+    """Bounded, thread-safe arrival-observation queue.
+
+    ``put`` never blocks: when the queue is full the observation is
+    dropped and counted, so a slow planner sheds load instead of
+    wedging its producers (rate observations are lossy-tolerant — the
+    sliding window just sees fewer samples). Counters are monotonic:
+    ``enqueued`` + ``dropped`` = offered, ``drained`` = consumed,
+    ``depth`` = enqueued - drained.
+    """
+
+    def __init__(self, capacity: int = 64) -> None:
+        if int(capacity) < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity!r}")
+        self.capacity = int(capacity)
+        self._dq: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self.enqueued = 0
+        self.dropped = 0
+        self.drained = 0
+        self.max_depth = 0
+
+    def put(self, item: Any) -> bool:
+        """Enqueue; False (and counted) when full."""
+        with self._lock:
+            if len(self._dq) >= self.capacity:
+                self.dropped += 1
+                return False
+            self._dq.append(item)
+            self.enqueued += 1
+            self.max_depth = max(self.max_depth, len(self._dq))
+            return True
+
+    def drain(self) -> List[Any]:
+        """Dequeue everything currently buffered, FIFO order."""
+        with self._lock:
+            items = list(self._dq)
+            self._dq.clear()
+            self.drained += len(items)
+            return items
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._dq)
+
+    def counters(self) -> Dict[str, int]:
+        with self._lock:
+            return {"enqueued": self.enqueued, "dropped": self.dropped,
+                    "drained": self.drained, "max_depth": self.max_depth,
+                    "depth": len(self._dq)}

@@ -160,6 +160,18 @@ def main() -> None:
                     help="with --serve --traffic: plan on arrival rates "
                          "estimated from the observed stream instead of "
                          "the generator's configured rate")
+    ap.add_argument("--plan-cache", action="store_true",
+                    help="with --serve: cache plans by (DNN, env-bucket, "
+                         "load-bucket) and serve repeat scenarios through "
+                         "the replay-exact revalidation gate instead of "
+                         "re-solving (DESIGN.md §11 phase 2)")
+    ap.add_argument("--async-ingest", type=int, default=None,
+                    metavar="THREADS",
+                    help="with --serve --estimate-rates: route the rate "
+                         "observations through the bounded ingestion "
+                         "queue; 0 = deterministic single-thread mode, "
+                         "N>0 = concurrent producer threads "
+                         "(DESIGN.md §11 phase 2)")
     ap.add_argument("--traffic", default=None, metavar="SCENARIO",
                     choices=TRAFFIC_KINDS,
                     help="plan under a request-stream workload of this "
@@ -188,6 +200,11 @@ def main() -> None:
             and not args.traffic:
         ap.error("--estimate-rates / --triage-margin need --traffic "
                  "(they act on the request stream, DESIGN.md §11)")
+    if args.async_ingest is not None and not args.estimate_rates:
+        ap.error("--async-ingest needs --estimate-rates (it queues the "
+                 "rate observations, DESIGN.md §11)")
+    if args.async_ingest is not None and args.async_ingest < 0:
+        ap.error("--async-ingest THREADS must be >= 0")
     if args.plan:
         # one batched PSO-GA fleet plans every serving shape at once
         # (DESIGN.md §4) instead of re-compiling the solver per shape.
@@ -258,8 +275,9 @@ def main() -> None:
             # through to LM serving (it IS the serving loop).
             import dataclasses as _dc
 
-            from ..core import (ChaosConfig, ReplanConfig, ServiceConfig,
-                                run_service, sample_trace)
+            from ..core import (ChaosConfig, IngestConfig,
+                                PlanCacheConfig, ReplanConfig,
+                                ServiceConfig, run_service, sample_trace)
             trace = sample_trace(args.serve_scenario, fleet_env,
                                  rounds=args.serve_rounds, seed=0)
             serve_pso = _dc.replace(pso_cfg,
@@ -278,7 +296,11 @@ def main() -> None:
                 replan=ReplanConfig(pso=serve_pso, traffic=traffic_cfg,
                                     mesh=solver_mesh),
                 slo_s=args.slo_s, triage_margin=args.triage_margin,
-                estimate_rates=args.estimate_rates, chaos=chaos)
+                estimate_rates=args.estimate_rates, chaos=chaos,
+                plan_cache=(PlanCacheConfig() if args.plan_cache
+                            else None),
+                ingest=(IngestConfig(threads=args.async_ingest)
+                        if args.async_ingest is not None else None))
             report = run_service([p.dag for p in plans], trace, scfg,
                                  seed=0,
                                  initial=[p.result for p in plans])
@@ -297,6 +319,14 @@ def main() -> None:
                   f"{s['availability']:.4f}, time-to-plan p50 "
                   f"{ttp['p50'] * 1e3:.0f}ms p99 {ttp['p99'] * 1e3:.0f}ms,"
                   f" fallbacks {s['fallback_counts']}")
+            if report.cache_stats is not None:
+                cs = report.cache_stats
+                n_look = cs["hits"] + cs["misses"]
+                rate = cs["hits"] / n_look if n_look else 0.0
+                print(f"[serve] plan cache: hit rate {rate:.2f} "
+                      f"({cs['hits']}/{n_look}), stores {cs['stores']}, "
+                      f"evictions {cs['evictions']}, revalidation "
+                      f"failures {cs['revalidation_failures']}")
             return
     if args.reduced:
         cfg = cfg.reduced()

@@ -1,0 +1,154 @@
+"""Async request ingestion (repro.core.traffic.ArrivalQueue +
+run_service's ingest modes, DESIGN.md §11 phase 2): queue semantics and
+backpressure counters, the deterministic single-thread mode's bit-parity
+with the legacy synchronous draws, and the threaded producers."""
+import numpy as np
+import pytest
+
+from repro.core import (ArrivalQueue, IngestConfig, PSOGAConfig,
+                        ReplanConfig, ServiceConfig, SimProblem,
+                        TrafficConfig, heft_makespan, paper_environment,
+                        plan_is_valid, run_service, sample_trace, zoo)
+
+FAST = PSOGAConfig(pop_size=20, max_iters=50, stall_iters=18)
+TCFG = TrafficConfig(rate=0.4, max_requests=4, mc_solver=2, mc_eval=4)
+RCFG_T = ReplanConfig(pso=FAST, traffic=TCFG)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    env = paper_environment()
+    dags = []
+    for i, net in enumerate(("alexnet", "googlenet")):
+        dag = zoo.build(net, pin_server=i)
+        h, _ = heft_makespan(dag, env)
+        dags.append(dag.with_deadline(np.array([1.5 * h])))
+    return env, dags
+
+
+# ---------------------------------------------------------------------------
+# ArrivalQueue / IngestConfig units
+# ---------------------------------------------------------------------------
+
+def test_arrival_queue_fifo_and_counters():
+    q = ArrivalQueue(capacity=4)
+    for i in range(3):
+        assert q.put(i)
+    assert q.depth() == 3
+    assert q.drain() == [0, 1, 2]
+    assert q.depth() == 0 and q.drain() == []
+    c = q.counters()
+    assert c["enqueued"] == 3 and c["drained"] == 3
+    assert c["dropped"] == 0 and c["max_depth"] == 3 and c["depth"] == 0
+
+
+def test_arrival_queue_drops_when_full():
+    q = ArrivalQueue(capacity=2)
+    assert q.put("a") and q.put("b")
+    assert not q.put("c")               # bounded: drop, don't block
+    c = q.counters()
+    assert c["enqueued"] == 2 and c["dropped"] == 1
+    assert q.drain() == ["a", "b"]
+
+
+def test_arrival_queue_rejects_bad_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        ArrivalQueue(capacity=0)
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    ({"threads": -1}, "threads"),
+    ({"capacity": 0}, "capacity"),
+])
+def test_ingest_config_rejects(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        IngestConfig(**kwargs)
+
+
+def test_service_config_ingest_requires_estimation():
+    with pytest.raises(ValueError, match="estimate_rates"):
+        ServiceConfig(ingest=IngestConfig())
+
+
+def test_run_service_ingest_requires_traffic(fleet):
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=2, seed=1)
+    cfg = ServiceConfig(replan=ReplanConfig(pso=FAST),  # no traffic model
+                        estimate_rates=True, ingest=IngestConfig())
+    with pytest.raises(ValueError, match="traffic"):
+        run_service(dags, trace, cfg, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# service integration
+# ---------------------------------------------------------------------------
+
+def test_sync_ingest_bit_identical_to_legacy(fleet):
+    """threads=0 is the deterministic mode: same draws in the same
+    order as the legacy synchronous estimate_rates path, so estimates,
+    rungs and plans all match bit for bit."""
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=4, seed=5)
+    legacy = run_service(
+        dags, trace,
+        ServiceConfig(replan=RCFG_T, estimate_rates=True,
+                      window_rounds=2),
+        seed=7)
+    queued = run_service(
+        dags, trace,
+        ServiceConfig(replan=RCFG_T, estimate_rates=True,
+                      window_rounds=2, ingest=IngestConfig(threads=0)),
+        seed=7)
+    for rl, rq in zip(legacy.rounds, queued.rounds):
+        assert rq.est_rates == rl.est_rates
+        assert rq.rung == rl.rung
+    for xl, xq in zip(legacy.plans, queued.plans):
+        assert np.array_equal(xl, xq)
+    # all observations flowed through the queue, none dropped
+    c = queued.counters
+    assert c["ingest_enqueued"] == (trace.num_rounds - 1) * len(dags)
+    assert c["ingest_dropped"] == 0
+    assert c["ingest_drained"] == c["ingest_enqueued"]
+    assert c["ingest_leftover"] == 0
+
+
+def test_sync_ingest_backpressure_drops_deterministically(fleet):
+    """capacity=1 in the deterministic mode: each round enqueues one
+    observation per DAG but only the first fits, so the drop count is
+    exact — and the service still serves every round."""
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=4, seed=5)
+    rep = run_service(
+        dags, trace,
+        ServiceConfig(replan=RCFG_T, estimate_rates=True,
+                      window_rounds=2,
+                      ingest=IngestConfig(threads=0, capacity=1)),
+        seed=7)
+    c = rep.counters
+    assert c["ingest_dropped"] == (trace.num_rounds - 1) * (len(dags) - 1)
+    assert c["ingest_enqueued"] == trace.num_rounds - 1
+    assert rep.availability() == 1.0
+
+
+def test_threaded_ingest_serves_every_round(fleet):
+    """threads>0 pre-draws observations concurrently; ordering is no
+    longer bit-deterministic but the conservation law and availability
+    must hold."""
+    env, dags = fleet
+    trace = sample_trace("load-surge", env, rounds=4, seed=5)
+    rep = run_service(
+        dags, trace,
+        ServiceConfig(replan=RCFG_T, estimate_rates=True,
+                      window_rounds=2,
+                      ingest=IngestConfig(threads=2, capacity=64)),
+        seed=7)
+    assert rep.availability() == 1.0
+    c = rep.counters
+    assert c["ingest_enqueued"] \
+        == c["ingest_drained"] + c["ingest_leftover"]
+    assert c["ingest_dropped"] + c["ingest_enqueued"] \
+        == (trace.num_rounds - 1) * len(dags)
+    assert all(len(r.est_rates) == len(dags) for r in rep.rounds)
+    for dag, x in zip(dags, rep.plans):
+        assert plan_is_valid(
+            SimProblem.build(dag, trace.env_at(trace.num_rounds - 1)), x)

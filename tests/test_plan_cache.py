@@ -1,0 +1,291 @@
+"""Plan cache (repro.core.plancache, DESIGN.md §11 phase 2): key
+bucketing, the replay-exact revalidation gate, LRU eviction, the
+service-loop integration (cache-hit rounds bit-identical to fresh
+solves), chaos composition, and multi-service runner-cache sharing."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ChaosConfig, PlanCache, PlanCacheConfig,
+                        PSOGAConfig, ReplanConfig, ServiceConfig,
+                        SimProblem, dag_fingerprint, plan_is_valid,
+                        run_service, run_services, sample_environment,
+                        sample_trace, simulate_np, zero_drift_trace)
+from repro.core.batch import reset_runner_cache_stats, runner_cache_stats
+from repro.core.dag import LayerDAG
+
+#: a converged configuration: the quickstart's 4-layer DAG is small
+#: enough that warm PSO finds (and keeps) the optimum from round 1, so
+#: cache-off rounds replan nothing — the precondition for bit-identity.
+FAST = PSOGAConfig(pop_size=24, max_iters=60, stall_iters=20)
+RCFG = ReplanConfig(pso=FAST)
+
+
+def _tiny_dag(env, pin):
+    return LayerDAG(
+        compute=np.array([1.1, 1.92, 2.35, 2.12]) * env.power[0],
+        edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]]),
+        edge_mb=np.array([1.0, 1.0, 0.5, 0.5]),
+        app_id=np.zeros(4, np.int32), deadline=np.array([3.7]),
+        pinned=np.array([pin, -1, -1, -1], np.int32))
+
+
+@pytest.fixture(scope="module")
+def tiny_fleet():
+    env = sample_environment()
+    return env, [_tiny_dag(env, 0), _tiny_dag(env, 1)]
+
+
+# ---------------------------------------------------------------------------
+# config + key unit tests
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs,match", [
+    ({"capacity": 0}, "capacity"),
+    ({"env_quant": 0.0}, "env_quant"),
+    ({"env_quant": float("nan")}, "env_quant"),
+    ({"load_quant": -0.1}, "load_quant"),
+])
+def test_plan_cache_config_rejects(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        PlanCacheConfig(**kwargs)
+
+
+def test_dag_fingerprint_tracks_content(tiny_fleet):
+    env, (d0, d1) = tiny_fleet
+    assert dag_fingerprint(d0) == dag_fingerprint(_tiny_dag(env, 0))
+    assert dag_fingerprint(d0) != dag_fingerprint(d1)   # pins differ
+    fatter = dataclasses.replace(d0, edge_mb=d0.edge_mb * 2.0)
+    assert dag_fingerprint(d0) != dag_fingerprint(fatter)
+
+
+def test_key_buckets_env_and_load(tiny_fleet):
+    env, (d0, _) = tiny_fleet
+    cache = PlanCache(PlanCacheConfig(env_quant=0.05, load_quant=0.1))
+    k = cache.key(d0, env)
+    # inside the quantization step: same bucket
+    near = dataclasses.replace(
+        env, bandwidth=np.asarray(env.bandwidth, float) * 1.001)
+    assert cache.key(d0, near) == k
+    # an order-of-magnitude fade: different bucket
+    far = dataclasses.replace(
+        env, bandwidth=np.asarray(env.bandwidth, float) * 0.5)
+    assert cache.key(d0, far) != k
+    # a severed link lands in the sentinel bucket, not log(0)
+    bw = np.asarray(env.bandwidth, float).copy()
+    bw[0, 1] = 0.0
+    assert cache.key(d0, dataclasses.replace(env, bandwidth=bw)) != k
+    # load buckets quantize the same way
+    assert cache.key(d0, env, 1.0) == cache.key(d0, env, 1.01)
+    assert cache.key(d0, env, 1.0) != cache.key(d0, env, 2.0)
+
+
+def test_key_rejects_bad_inputs(tiny_fleet):
+    env, (d0, _) = tiny_fleet
+    cache = PlanCache()
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="load_scale"):
+            cache.key(d0, env, bad)
+    bw = np.asarray(env.bandwidth, float).copy()
+    bw[0, -1] = np.nan
+    with pytest.raises(ValueError, match="NaN"):
+        cache.key(d0, dataclasses.replace(env, bandwidth=bw))
+
+
+# ---------------------------------------------------------------------------
+# store / lookup / revalidation gate
+# ---------------------------------------------------------------------------
+
+def test_store_lookup_roundtrip_and_gate(tiny_fleet):
+    env, (d0, _) = tiny_fleet
+    prob = SimProblem.build(d0, env)
+    plan = np.array([0, 1, 1, 1], np.int32)
+    assert plan_is_valid(prob, plan)
+    cache = PlanCache()
+    key = cache.key(d0, env)
+    assert cache.store(key, prob, plan)
+    got = cache.lookup(key, prob)
+    assert got is not None and np.array_equal(got, plan)
+    assert cache.stats()["hits"] == 1
+
+    # env drifted INSIDE the bucket: the key still matches but the
+    # replayed cost changes, so the gate drops the entry — a hit is
+    # never served against an env it would score differently on.
+    near = dataclasses.replace(
+        env, bandwidth=np.asarray(env.bandwidth, float) * 1.001)
+    assert cache.key(d0, near) == key
+    assert cache.lookup(key, SimProblem.build(d0, near)) is None
+    st = cache.stats()
+    assert st["revalidation_failures"] == 1 and st["misses"] == 1
+    assert len(cache) == 0                      # entry dropped
+
+
+def test_store_rejects_invalid_plans(tiny_fleet):
+    env, (d0, _) = tiny_fleet
+    prob = SimProblem.build(d0, env)
+    cache = PlanCache()
+    key = cache.key(d0, env)
+    bad = np.array([1, 1, 1, 1], np.int32)      # violates the pin
+    assert not cache.store(key, prob, bad)
+    assert cache.stats()["store_rejects"] == 1 and len(cache) == 0
+
+
+def test_lookup_fleet_is_all_or_nothing(tiny_fleet):
+    env, (d0, d1) = tiny_fleet
+    p0, p1 = SimProblem.build(d0, env), SimProblem.build(d1, env)
+    cache = PlanCache()
+    k0, k1 = cache.key(d0, env), cache.key(d1, env)
+    cache.store(k0, p0, np.array([0, 1, 1, 1], np.int32))
+    # only one of two problems cached: the whole fleet lookup misses
+    assert cache.lookup_fleet([k0, k1], [p0, p1]) is None
+    assert cache.stats()["misses"] == 2 and cache.stats()["hits"] == 0
+    with pytest.raises(ValueError, match="keys"):
+        cache.lookup_fleet([k0], [p0, p1])
+
+
+def test_lru_eviction_respects_capacity(tiny_fleet):
+    env, (d0, _) = tiny_fleet
+    prob = SimProblem.build(d0, env)
+    plan = np.array([0, 1, 1, 1], np.int32)
+    cache = PlanCache(PlanCacheConfig(capacity=2))
+    keys = [cache.key(d0, env, s) for s in (1.0, 2.0, 4.0)]
+    cache.store(keys[0], prob, plan)
+    cache.store(keys[1], prob, plan)
+    assert cache.lookup(keys[0], prob) is not None   # bump key 0
+    cache.store(keys[2], prob, plan)                 # evicts key 1 (LRU)
+    assert len(cache) == 2 and cache.stats()["evictions"] == 1
+    assert set(cache.keys()) == {keys[0], keys[2]}
+    assert cache.lookup(keys[1], prob) is None
+
+
+# ---------------------------------------------------------------------------
+# service integration: cache hits are bit-identical to fresh solves
+# ---------------------------------------------------------------------------
+
+def test_cached_rounds_bit_identical_to_fresh_solves(tiny_fleet):
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=4)
+    off = run_service(dags, trace, ServiceConfig(replan=RCFG), seed=11)
+    # precondition: the problem is converged — every cache-off round
+    # keeps the incumbent, so serving the stored plan CAN be identical
+    assert all(not r.replan.replanned.any() for r in off.rounds)
+
+    on = run_service(dags, trace,
+                     ServiceConfig(replan=RCFG,
+                                   plan_cache=PlanCacheConfig()),
+                     seed=11)
+    # round 1 misses (cold cache) and stores; every repeat round hits
+    assert on.rounds[0].rung == ("warm", "warm")
+    assert not on.rounds[0].cache_hit
+    for r in on.rounds[1:]:
+        assert r.cache_hit and r.rung == ("cached", "cached")
+        assert r.replan is None                 # replan_round skipped
+    st = on.cache_stats
+    assert st["stores"] == 2 and st["misses"] == 2
+    assert st["hits"] == 2 * (len(on.rounds) - 1)
+    assert st["revalidation_failures"] == 0
+
+    # the served plans — and their replayed costs — match bit for bit
+    assert on.availability() == 1.0
+    for x_on, x_off, d in zip(on.plans, off.plans, dags):
+        assert np.array_equal(x_on, x_off)
+        prob = SimProblem.build(d, trace.env_at(trace.num_rounds - 1))
+        assert (float(simulate_np(prob, x_on).total_cost)
+                == float(simulate_np(prob, x_off).total_cost))
+
+
+def test_env_drift_outside_bucket_misses(tiny_fleet):
+    env, dags = tiny_fleet
+    trace = sample_trace("wifi-fade", env, rounds=4, seed=3)
+    cfg_off = ServiceConfig(replan=RCFG)
+    cfg_on = ServiceConfig(replan=RCFG, plan_cache=PlanCacheConfig())
+    off = run_service(dags, trace, cfg_off, seed=11)
+    on = run_service(dags, trace, cfg_on, seed=11)
+    # every epoch is a distinct env bucket: no hits, and the cache
+    # changes nothing about what gets served
+    assert on.cache_stats["hits"] == 0
+    assert not any(r.cache_hit for r in on.rounds)
+    for x_on, x_off in zip(on.plans, off.plans):
+        assert np.array_equal(x_on, x_off)
+
+
+def test_node_loss_invalidation_composes_with_cache(tiny_fleet):
+    """Mid-round churn after a cache hit: the cached plan must still
+    pass the ladder's ``_plan_ok`` gate against the POST-churn env, and
+    an invalidated one re-ladders instead of being served stale."""
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=4)
+    # find a server the round-1 plans actually route through
+    base = run_service(dags, trace, ServiceConfig(replan=RCFG), seed=11)
+    pins = {0, 1}
+    used = sorted(set(int(s) for x in base.plans for s in x) - pins)
+    assert used, "tiny plans collapsed onto the pinned servers"
+    down = used[0]
+    rep = run_service(
+        dags, trace,
+        ServiceConfig(replan=RCFG, plan_cache=PlanCacheConfig(),
+                      chaos=ChaosConfig(mid_round_down={2: down})),
+        seed=11)
+    r2 = rep.rounds[1]      # round 2: lookup hits, then the churn lands
+    assert r2.cache_hit
+    assert any(g != "cached" for g in r2.rung)   # at least one re-laddered
+    assert rep.availability() == 1.0
+    # final plans are still valid against the (restored) live env
+    for d, x in zip(dags, rep.plans):
+        assert x is not None
+        assert plan_is_valid(SimProblem.build(d, trace.env_at(3)), x)
+
+
+# ---------------------------------------------------------------------------
+# multi-service sharing (run_services)
+# ---------------------------------------------------------------------------
+
+def test_run_services_share_one_compiled_runner(tiny_fleet):
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=3)
+    #: distinct from every other test config so this fleet's solves are
+    #: fresh runner-cache entries
+    pso = PSOGAConfig(pop_size=18, max_iters=40, stall_iters=15)
+    cfg = ServiceConfig(replan=ReplanConfig(pso=pso))
+
+    reset_runner_cache_stats()
+    reports = run_services([dags] * 3, trace, cfg, seeds=5)
+    st = runner_cache_stats()
+    solo = run_service(dags, trace, cfg, seed=5)
+    # one compiled program per (cfg, bucket, mesh) ACROSS services: both
+    # tiny DAGs share one size bucket, so exactly one miss + one trace
+    # even with three loops dispatching concurrently
+    assert st["misses"] == 1 and st["traces"] == 1
+    assert st["hits"] > 0
+    # and sharing the runner pool never leaks across solves: each
+    # service's report is bit-identical to running alone
+    for rep in reports:
+        assert rep.availability() == 1.0
+        for x, x_solo in zip(rep.plans, solo.plans):
+            assert np.array_equal(x, x_solo)
+
+
+def test_run_services_broadcast_validation(tiny_fleet):
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=2)
+    with pytest.raises(ValueError, match="seeds"):
+        run_services([dags] * 2, trace, seeds=[1, 2, 3])
+    assert run_services([], trace) == []
+
+
+def test_run_services_shared_plan_cache(tiny_fleet):
+    """Three services over one shared cache: after the first solve
+    lands, repeat scenarios hit across service boundaries."""
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=3)
+    cache = PlanCache()
+    cfg = ServiceConfig(replan=RCFG, plan_cache=PlanCacheConfig())
+    reports = run_services([dags] * 3, trace, cfg, seeds=11,
+                           plan_cache=cache)
+    st = cache.stats()
+    assert st["hits"] + st["misses"] == 3 * 2 * 2   # 3 services × 2 rounds × 2 dags
+    assert st["hits"] >= 2 * 2      # at least this service's own repeats
+    for rep in reports:
+        assert rep.availability() == 1.0
+        assert rep.cache_stats is not None

@@ -9,9 +9,9 @@ import pytest
 from repro.core import (ChaosConfig, LADDER_RUNGS, PSOGAConfig,
                         ReplanConfig, ServiceConfig, ServiceReport,
                         ServiceRoundLog, SimProblem, TrafficConfig,
-                        heft_makespan, paper_environment, plan_is_valid,
-                        replan_fleet, run_pso_ga_batch, run_service,
-                        sample_trace, zero_drift_trace, zoo)
+                        heft_makespan, merge_dags, paper_environment,
+                        plan_is_valid, replan_fleet, run_pso_ga_batch,
+                        run_service, sample_trace, zero_drift_trace, zoo)
 from repro.core.batch import reset_runner_cache_stats, runner_cache_stats
 from repro.core.online import replan_round
 from repro.core.service import _RateWindow, _down_env, _select_rung
@@ -178,7 +178,7 @@ def test_service_report_helpers():
                                breaker_state="closed", solver_failed=False,
                                retries_used=0, stale_env=False,
                                stalled=False, rejected_apps=0,
-                               est_rate=0.0, replan=None)
+                               est_rates=(), replan=None)
     rep = ServiceReport(cold=[], rounds=[row(("warm", "reject"), 1.0),
                                          row(("heft", "greedy"), 3.0)],
                         plans=[], fallback_counts={}, counters={})
@@ -466,8 +466,42 @@ def test_estimate_rates_solves_on_observed_arrivals(fleet):
     cfg = ServiceConfig(replan=RCFG_T, estimate_rates=True,
                         window_rounds=2)
     rep = run_service(dags, trace, cfg, seed=7)
-    assert all(r.est_rate > 0.0 for r in rep.rounds)
+    assert all(len(r.est_rates) == len(dags) for r in rep.rounds)
+    assert all(e > 0.0 for r in rep.rounds for e in r.est_rates)
     assert all(r.rung == ("warm",) * 2 for r in rep.rounds)
     assert rep.availability() == 1.0
     for dag, x in zip(dags, rep.plans):
         assert plan_is_valid(SimProblem.build(dag, trace.env_at(3)), x)
+
+
+def test_estimate_rates_records_per_dag_estimates(fleet):
+    """Regression: the round log must carry ONE estimate per DAG. The
+    old scalar ``est_rate`` field was overwritten each DAG iteration,
+    so only the last DAG's estimate survived into the record."""
+    env, base = fleet
+    # genuinely heterogeneous: a 1-app DAG and a 2-app merged DAG, at a
+    # rate low enough that draws do NOT saturate max_requests (a
+    # saturated window estimates the same per-app rate for everyone)
+    dags = [base[0], merge_dags(list(base))]
+    tc = TrafficConfig(rate=0.05, horizon=10.0, max_requests=4,
+                       mc_solver=2, mc_eval=4)
+    trace = sample_trace("load-surge", env, rounds=4, seed=5)
+    cfg = ServiceConfig(replan=ReplanConfig(pso=FAST, traffic=tc),
+                        estimate_rates=True, window_rounds=2)
+    rep = run_service(dags, trace, cfg, seed=7)
+
+    # replay the observation stream independently: the log's tuple must
+    # match the per-DAG sliding windows element for element
+    wins = [_RateWindow(2, tc.horizon, d.num_apps) for d in dags]
+    for r in rep.rounds:
+        expected = []
+        for i, d in enumerate(dags):
+            obs = tc.solver_arrivals(
+                d.num_apps, seed=7 + 7919 * r.round + 31 * i,
+                rate_scale=trace.events[r.round].load_scale)[0]
+            wins[i].ingest(obs)
+            expected.append(wins[i].rate())
+        assert r.est_rates == pytest.approx(tuple(expected))
+    # the per-DAG estimates genuinely differ on some round, so a single
+    # scalar cannot represent the record
+    assert any(r.est_rates[0] != r.est_rates[1] for r in rep.rounds)

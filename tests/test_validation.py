@@ -5,8 +5,9 @@ regression test per rejection."""
 import numpy as np
 import pytest
 
-from repro.core import (DriftEvent, EnvTrace, TrafficConfig,
-                        paper_environment, sample_arrivals, sample_trace)
+from repro.core import (DriftEvent, EnvTrace, TrafficConfig, coerce_seed,
+                        paper_environment, rng_entropy, sample_arrivals,
+                        sample_trace)
 from repro.core.batch import pack_arrivals
 
 
@@ -164,3 +165,55 @@ def test_pack_arrivals_accepts_inf_padding():
     out = pack_arrivals([a], max_apps=2)
     assert out.shape == (1, 2, 2, 3)
     assert np.isinf(out[0, :, 1, :]).all()    # padded app never arrives
+
+
+# ---------------------------------------------------------------------------
+# seed coercion (coerce_seed / rng_entropy)
+# ---------------------------------------------------------------------------
+
+def test_sample_arrivals_accepts_numpy_seeds():
+    """Regression: ``default_rng([seed, s])`` rejects int-like numpy
+    scalars and 0-d arrays — the seed must be coerced first."""
+    ref = sample_arrivals("poisson", n_apps=2, seed=7).t
+    for seed in (np.int32(7), np.int64(7), np.array(7)):
+        assert np.array_equal(sample_arrivals("poisson", n_apps=2,
+                                              seed=seed).t, ref)
+
+
+def test_sample_arrivals_accepts_negative_seeds():
+    """Regression: ``default_rng`` rejects negative entropy outright."""
+    a = sample_arrivals("poisson", n_apps=2, seed=-3).t
+    b = sample_arrivals("poisson", n_apps=2, seed=-3).t
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, sample_arrivals("poisson", n_apps=2,
+                                                 seed=-4).t)
+    assert np.array_equal(
+        sample_arrivals("poisson", n_apps=2, seed=np.array(-5)).t,
+        sample_arrivals("poisson", n_apps=2, seed=-5).t)
+
+
+def test_coerce_seed_rejects_non_int_like():
+    with pytest.raises(TypeError, match="int-like"):
+        coerce_seed(1.5)
+    with pytest.raises(TypeError, match="int-like"):
+        coerce_seed(np.float64(2.0))
+    with pytest.raises(ValueError, match="scalar"):
+        coerce_seed(np.array([1, 2]))
+
+
+def test_rng_entropy_preserves_non_negative_seeds():
+    """Golden-draw compatibility: non-negative seeds pass through
+    unchanged, so every existing trace is reproduced bit for bit."""
+    for s in (0, 1, 7, 2**40):
+        assert rng_entropy(s) == s
+    assert rng_entropy(np.array(7)) == 7
+    assert 0 <= rng_entropy(-1) < 2**64
+
+
+def test_sample_trace_accepts_numpy_seeds():
+    env = paper_environment()
+    ref = sample_trace("wifi-fade", env, rounds=3, seed=3)
+    got = sample_trace("wifi-fade", env, rounds=3, seed=np.int64(3))
+    for a, b in zip(ref.events, got.events):
+        assert np.array_equal(a.bw_scale, b.bw_scale)
+        assert np.array_equal(a.power_scale, b.power_scale)
