@@ -12,6 +12,9 @@
     a shared request stream, admission control on vs off: rejecting
     apps whose deadline even HEFT cannot meet keeps their requests out
     of the shared FCFS queues the admitted apps ride (DESIGN.md §10)
+  * telemetry tax  — the same clean run with the unified telemetry
+    layer off vs on (DESIGN.md §13); the registry snapshot of the
+    instrumented arm is stamped into the JSON (bar: < 2% overhead)
 
 Every run writes ``BENCH_service.json`` so the trajectory is tracked
 across PRs.
@@ -20,14 +23,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import numpy as np
 
 from repro.core import (ChaosConfig, PlanCacheConfig, PSOGAConfig,
                         ReplanConfig, ServiceConfig, SimProblem,
-                        TrafficConfig, heft_makespan, merge_dags,
-                        paper_environment, run_service,
+                        Telemetry, TrafficConfig, heft_makespan,
+                        merge_dags, paper_environment, run_service,
                         runner_cache_stats, sample_trace, traffic_replay,
                         zero_drift_trace, zoo)
 
@@ -173,6 +177,35 @@ def run_cache_cell(n: int, rounds: int, seed: int, arms):
     return rows, out
 
 
+def run_telemetry_cell(n: int, rounds: int, seed: int):
+    """Telemetry overhead A/B (DESIGN.md §13): the same clean service
+    run with the registry + tracer off vs on. Both arms run after a
+    warm-up pass so compile time cancels; the reported fraction is the
+    observability tax the off-parity invariant bounds."""
+    env = paper_environment()
+    dags = make_fleet(n, env)
+    trace = sample_trace("wifi-fade", env, rounds=rounds, seed=seed)
+    cfg = ServiceConfig(replan=ReplanConfig(pso=SERVICE_CFG))
+    run_service(dags, trace, cfg, seed=seed)      # warm the jit caches
+    t0 = time.perf_counter()
+    off_rep = run_service(dags, trace, cfg, seed=seed)
+    off_s = time.perf_counter() - t0
+    tel = Telemetry()
+    t0 = time.perf_counter()
+    on_rep = run_service(dags, trace, cfg, seed=seed, telemetry=tel)
+    on_s = time.perf_counter() - t0
+    assert on_rep.counters == off_rep.counters    # off-parity invariant
+    overhead = on_s / off_s - 1.0 if off_s > 0 else 0.0
+    row = {
+        "cell": "telemetry", "kind": "wifi-fade", "n_problems": n,
+        "rounds": rounds, "wall_off_s": off_s, "wall_on_s": on_s,
+        "overhead_frac": overhead,
+        "trace_events": len(tel.tracer.events()),
+    }
+    return row, {"overhead_frac": overhead,
+                 "registry": tel.registry.snapshot()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=6,
@@ -243,6 +276,14 @@ def main() -> None:
           f"({triage_row['rejected_apps']} app-rounds rejected)",
           flush=True)
 
+    tel_row, tel_out = run_telemetry_cell(args.n, args.rounds, args.seed)
+    rows.append(tel_row)
+    details["telemetry"] = tel_out
+    print(f"# telemetry: overhead {tel_row['overhead_frac'] * 100:+.2f}% "
+          f"({tel_row['wall_off_s']:.2f}s -> {tel_row['wall_on_s']:.2f}s, "
+          f"{tel_row['trace_events']} trace events) (bar < 2%)",
+          flush=True)
+
     avail_rows = [clean_row, chaos_row]
     print_csv(avail_rows, ["cell", "kind", "n_problems", "rounds",
                            "availability", "ttp_p50_s", "ttp_p99_s",
@@ -255,6 +296,9 @@ def main() -> None:
     print_csv([triage_row], ["cell", "kind", "n_problems", "rounds",
                              "no_triage_miss_p95", "triage_miss_p95",
                              "rejected_apps"])
+    print_csv([tel_row], ["cell", "kind", "n_problems", "rounds",
+                          "wall_off_s", "wall_on_s", "overhead_frac",
+                          "trace_events"])
     if args.json:
         payload = {
             "bench": "bench_service",

@@ -1,0 +1,141 @@
+"""Chrome trace-event / metrics-snapshot validator (DESIGN.md §13).
+
+CI gate for the telemetry exports: a trace file that Perfetto or
+chrome://tracing would reject — or a span stream whose B/E events do
+not nest — must fail the job, not ship. Checks:
+
+  * top level is ``{"traceEvents": [...]}`` (JSON object form);
+  * every event carries the required fields ``ph``/``ts``/``pid``/
+    ``tid``/``name``, with numeric ``ts`` and a known phase;
+  * duration events pair up: per (pid, tid) track, every ``E`` matches
+    the name of the innermost open ``B`` (proper nesting) and no ``B``
+    is left open at the end;
+  * complete events (``X``) carry a non-negative ``dur``;
+  * ``--require a,b,c`` span names all appear somewhere in the trace;
+  * with ``--metrics DIR``: ``metrics.jsonl`` parses line-by-line and
+    ``metrics.prom`` is non-empty Prometheus text.
+
+Usage:
+    python scripts/check_trace.py trace.json \
+        [--metrics DIR] [--require round,solve,replan_round]
+
+Exits 0 when everything validates, 1 with a message otherwise.
+"""
+import argparse
+import json
+import os
+import sys
+
+#: phases the exporter may legally emit (subset of the trace-event
+#: spec): duration B/E, complete X, instant i, metadata M.
+KNOWN_PHASES = {"B", "E", "X", "i", "M"}
+REQUIRED_FIELDS = ("ph", "ts", "pid", "tid", "name")
+
+
+def fail(msg: str) -> None:
+    print(f"[check_trace] FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_trace(path: str, require: list) -> int:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: top level must be an object with 'traceEvents'")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents must be a non-empty list")
+
+    names = set()
+    stacks = {}  # (pid, tid) -> [open span names]
+    for i, ev in enumerate(events):
+        for field in REQUIRED_FIELDS:
+            if field not in ev:
+                fail(f"event #{i} missing required field {field!r}: "
+                     f"{ev!r}")
+        if ev["ph"] not in KNOWN_PHASES:
+            fail(f"event #{i} has unknown phase {ev['ph']!r}")
+        if not isinstance(ev["ts"], (int, float)):
+            fail(f"event #{i} ts must be numeric, got {ev['ts']!r}")
+        if ev["ts"] < 0:
+            fail(f"event #{i} has negative ts {ev['ts']!r}")
+        track = (ev["pid"], ev["tid"])
+        if ev["ph"] == "B":
+            stacks.setdefault(track, []).append(ev["name"])
+        elif ev["ph"] == "E":
+            stack = stacks.get(track) or []
+            if not stack:
+                fail(f"event #{i}: E {ev['name']!r} on track {track} "
+                     f"with no open B")
+            top = stack.pop()
+            if top != ev["name"]:
+                fail(f"event #{i}: E {ev['name']!r} does not match "
+                     f"innermost open B {top!r} on track {track}")
+        elif ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)) \
+                    or ev["dur"] < 0:
+                fail(f"event #{i}: X needs a non-negative dur, got "
+                     f"{ev.get('dur')!r}")
+        elif ev["ph"] == "i":
+            if ev.get("s") not in (None, "t", "p", "g"):
+                fail(f"event #{i}: instant scope must be t/p/g, got "
+                     f"{ev.get('s')!r}")
+        if ev["ph"] != "M":
+            names.add(ev["name"])
+    for track, stack in stacks.items():
+        if stack:
+            fail(f"track {track} ends with unclosed spans: {stack}")
+    missing = [n for n in require if n not in names]
+    if missing:
+        fail(f"required span names absent from {path}: {missing} "
+             f"(present: {sorted(names)})")
+    return len(events)
+
+
+def check_metrics(out_dir: str) -> None:
+    jsonl = os.path.join(out_dir, "metrics.jsonl")
+    prom = os.path.join(out_dir, "metrics.prom")
+    for p in (jsonl, prom):
+        if not os.path.isfile(p):
+            fail(f"missing metrics export {p}")
+    with open(jsonl) as f:
+        lines = [ln for ln in f if ln.strip()]
+    if not lines:
+        fail(f"{jsonl} is empty")
+    for i, ln in enumerate(lines):
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError as e:
+            fail(f"{jsonl} line {i + 1} is not JSON: {e}")
+        if "name" not in rec or "type" not in rec:
+            fail(f"{jsonl} line {i + 1} missing name/type: {rec!r}")
+    with open(prom) as f:
+        text = f.read()
+    if "# TYPE" not in text:
+        fail(f"{prom} has no '# TYPE' lines — not Prometheus text")
+    print(f"[check_trace] metrics ok: {len(lines)} metrics in "
+          f"{jsonl}, {len(text.splitlines())} prom lines")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="also validate metrics.jsonl/metrics.prom "
+                         "in DIR")
+    ap.add_argument("--require", default="", metavar="NAMES",
+                    help="comma-separated span names that must appear")
+    args = ap.parse_args()
+    require = [n for n in args.require.split(",") if n]
+    n = check_trace(args.trace, require)
+    print(f"[check_trace] trace ok: {n} events in {args.trace}")
+    if args.metrics:
+        check_metrics(args.metrics)
+    print("[check_trace] PASS")
+
+
+if __name__ == "__main__":
+    main()

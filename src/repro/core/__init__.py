@@ -20,6 +20,9 @@ Public surface:
   * service / run_service                   — fault-tolerant always-on
                                               planning service
                                               (DESIGN.md §11)
+  * telemetry / Telemetry / MetricsRegistry — unified metrics + span
+                                              tracing with Perfetto
+                                              export (DESIGN.md §13)
 """
 from .dag import LayerDAG, merge_dags, preprocess, topological_order
 from .environment import (CLOUD, DEVICE, EDGE, Environment,
@@ -39,6 +42,9 @@ from .online import (DriftEvent, EnvTrace, OnlineReport, ReplanConfig,
                      replan_round, sample_trace, zero_drift_trace)
 from .plancache import PlanCache, PlanCacheConfig, dag_fingerprint
 from .seeding import coerce_seed, rng_entropy
+from .telemetry import (MetricsRegistry, SpanTracer, Telemetry,
+                        get_telemetry, maybe_span, set_telemetry,
+                        telemetry_scope)
 from .service import (ChaosConfig, LADDER_RUNGS, ServiceConfig,
                       ServiceReport, ServiceRoundLog, run_service,
                       run_services)
@@ -74,6 +80,8 @@ __all__ = [
     "ServiceRoundLog", "run_service", "run_services",
     "PlanCache", "PlanCacheConfig", "dag_fingerprint",
     "coerce_seed", "rng_entropy",
+    "MetricsRegistry", "SpanTracer", "Telemetry", "get_telemetry",
+    "maybe_span", "set_telemetry", "telemetry_scope",
     "ArrivalQueue", "ArrivalTrace", "IngestConfig",
     "TRAFFIC_KINDS", "TrafficConfig", "TrafficResult",
     "sample_arrivals", "simulate_traffic_swarm", "traffic_replay",

@@ -61,6 +61,7 @@ from .pso_ga import (PSOGAConfig, PSOGAResult, _SwarmState, init_swarm,
                      swarm_step)
 from .seeding import coerce_seed
 from .simulator import PaddedProblem, SimProblem, pad_problem, simulate_padded
+from .telemetry import get_telemetry, maybe_span
 
 __all__ = ["pack_problems", "pack_arrivals", "run_pso_ga_batch",
            "bucket_size", "FleetBucket", "PackedFleet", "pack_fleet",
@@ -260,7 +261,7 @@ def _mesh_cache_key(mesh) -> Optional[tuple]:
 
 def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False,
                   shape_bucket: Optional[Tuple[int, int]] = None,
-                  mesh=None) -> Callable:
+                  mesh=None, telemetry=None) -> Callable:
     """Jitted ``(ppb, keys, X0b, incb, migb[, arrb]) -> final _SwarmState``.
 
     One cache entry per ``(cfg, traffic?, shape-bucket, mesh)`` (the
@@ -308,13 +309,25 @@ def _fleet_runner(cfg: PSOGAConfig, traffic: bool = False,
     cache_key = (cfg, traffic, shape_bucket, _mesh_cache_key(mesh))
     with _RUNNER_LOCK:
         cached = _RUNNER_CACHE.get(cache_key)
-        if cached is not None:
+        hit = cached is not None
+        if hit:
             _CACHE_STATS["hits"] += 1
-            return cached
-        _CACHE_STATS["misses"] += 1
-        jitted = _build_fleet_runner(cfg, traffic, mesh)
-        _RUNNER_CACHE[cache_key] = jitted
-        return jitted
+        else:
+            _CACHE_STATS["misses"] += 1
+            cached = _build_fleet_runner(cfg, traffic, mesh)
+            _RUNNER_CACHE[cache_key] = cached
+    # telemetry (DESIGN.md §13): explicit channel first, else the
+    # process-global one — direct callers have no config path here.
+    # Emitted outside the runner lock so the tracer's lock never nests
+    # inside ours. Never part of the cache key: observation only.
+    tel = telemetry if telemetry is not None else get_telemetry()
+    if tel is not None:
+        tel.inc("runner_cache.lookup_hits" if hit
+                else "runner_cache.lookup_misses")
+        tel.instant("runner_cache_hit" if hit else "runner_cache_miss",
+                    bucket=str(shape_bucket), traffic=traffic,
+                    mesh=mesh is not None)
+    return cached
 
 
 def _serialize_first_calls(jitted: Callable) -> Callable:
@@ -475,7 +488,8 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
                                              Sequence[float]] = 0.0,
                      warm_rescue: Optional[Sequence[bool]] = None,
                      arrivals: Optional[Sequence[np.ndarray]] = None,
-                     mesh=None):
+                     mesh=None,
+                     telemetry=None):
     """Solve N offloading problems with one fleet of swarms per bucket.
 
     Args:
@@ -524,6 +538,11 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
         data-shard count with masked dummy problems whose results are
         discarded. Gene-for-gene identical to the single-device solve
         (DESIGN.md §12). ``None`` keeps today's single-device path.
+      telemetry: a ``Telemetry`` channel (DESIGN.md §13) — each bucket's
+        runner dispatch is wrapped in a ``fleet_solve`` span. ``None``
+        falls back to the process-global channel (``set_telemetry``);
+        with neither, the solve path is bit-identical to pre-telemetry
+        behavior.
 
     Returns a list of per-problem ``PSOGAResult`` in INPUT ORDER (and
     the re-assembled state if asked) — bucket assignment is invisible in
@@ -535,6 +554,7 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
     """
     probs = _as_problems(problems)
     n = len(probs)
+    tel = telemetry if telemetry is not None else get_telemetry()
     seeds = _normalize_seeds(seed, n)
     if incumbent is not None and len(incumbent) != n:
         raise ValueError(f"{len(incumbent)} incumbents for {n} problems")
@@ -605,13 +625,17 @@ def run_pso_ga_batch(problems: Sequence[ProblemLike],
                 arrb = _pad_rows(arrb, pad)
 
         runner = _fleet_runner(cfg, traffic=traffic,
-                               shape_bucket=(b.max_p, b.max_S), mesh=mesh)
+                               shape_bucket=(b.max_p, b.max_S),
+                               mesh=mesh, telemetry=tel)
         args = (ppb, jnp.asarray(keys_a), jnp.asarray(X0b),
                 jnp.asarray(incb), jnp.asarray(migb))
         if traffic:
             args = args + (jnp.asarray(arrb),)
-        state = runner(*args)
-        jax.block_until_ready(state.gbest_f)
+        with maybe_span(tel, "fleet_solve",
+                        bucket=f"{b.max_p}x{b.max_S}", n=nb,
+                        traffic=traffic, sharded=mesh is not None):
+            state = runner(*args)
+            jax.block_until_ready(state.gbest_f)
         if pad:
             state = jax.tree.map(lambda a: a[:nb], state)
 

@@ -46,6 +46,7 @@ from .fitness import INFEASIBLE_OFFSET, make_swarm_fitness
 from .pso_ga import PSOGAConfig, PSOGAResult
 from .seeding import rng_entropy
 from .simulator import SimProblem
+from .telemetry import Telemetry, maybe_span
 from .traffic import TrafficConfig
 
 __all__ = ["DriftEvent", "EnvTrace", "ReplanConfig", "RoundLog",
@@ -457,7 +458,8 @@ def replan_round(probs: Sequence[SimProblem],
                  seed: int = 0,
                  round_no: int = 0,
                  label: str = "",
-                 arrivals: Optional[Sequence[np.ndarray]] = None
+                 arrivals: Optional[Sequence[np.ndarray]] = None,
+                 telemetry: Optional[Telemetry] = None
                  ) -> Tuple[List[np.ndarray], RoundLog]:
     """One drift event: warm re-solve the fleet, accept-if-better.
 
@@ -476,9 +478,27 @@ def replan_round(probs: Sequence[SimProblem],
     (seed-mean load-adjusted cost).
 
     Returns the surviving per-problem plans and the round's log.
+
+    ``telemetry`` (DESIGN.md §13) wraps the round in a ``replan_round``
+    span (with ``incumbent_keys`` / ``warm_solve`` children), takes
+    ``wall_s`` from the injectable clock, and counts replans/demotions
+    under ``online.*`` — plans are bit-identical with it on or off.
     """
     n = len(probs)
-    t0 = time.perf_counter()
+    clock = telemetry.clock if telemetry is not None \
+        else time.perf_counter
+    span = maybe_span(telemetry, "replan_round", round=round_no,
+                      label=label, n=n)
+    with span:
+        return _replan_round_body(probs, incumbent, cfg, seed, round_no,
+                                  label, arrivals, telemetry, clock)
+
+
+def _replan_round_body(probs, incumbent, cfg, seed, round_no, label,
+                       arrivals, telemetry, clock
+                       ) -> Tuple[List[np.ndarray], RoundLog]:
+    n = len(probs)
+    t0 = clock()
     # stale-plan guard (DESIGN.md §11): an incumbent that fails static
     # validity under the CURRENT environment — wrong shape, NaN genes,
     # out-of-range server, broken pin, or an edge over a severed link —
@@ -492,21 +512,25 @@ def replan_round(probs: Sequence[SimProblem],
         else:
             demoted[i] = True
             checked.append(None)
-    inc_key = incumbent_keys(probs, checked, cfg.pso,
-                             arrivals=arrivals)
+    with maybe_span(telemetry, "incumbent_keys", round=round_no):
+        inc_key = incumbent_keys(probs, checked, cfg.pso,
+                                 arrivals=arrivals)
     # an incumbent stranded infeasible by the drift gets the cold tier
     # anchors back in its swarm tail (init_swarm rescue mode): recovery
     # then matches a cold solve's escape hatches, while healthy
     # incumbents keep the pure (faster-converging) neighborhood seeding.
     rescue = inc_key >= INFEASIBLE_OFFSET
-    cand, state = run_pso_ga_batch(probs, cfg.pso, seed=seed,
-                                   incumbent=checked,
-                                   migration_weight=cfg.migration_weight,
-                                   warm_rescue=rescue,
-                                   return_state=True,
-                                   arrivals=arrivals,
-                                   mesh=cfg.mesh)
-    wall = time.perf_counter() - t0
+    with maybe_span(telemetry, "warm_solve", round=round_no, n=n):
+        cand, state = run_pso_ga_batch(
+            probs, cfg.pso, seed=seed,
+            incumbent=checked,
+            migration_weight=cfg.migration_weight,
+            warm_rescue=rescue,
+            return_state=True,
+            arrivals=arrivals,
+            mesh=cfg.mesh,
+            telemetry=telemetry)
+    wall = clock() - t0
 
     plans: List[np.ndarray] = []
     replanned = np.zeros(n, bool)
@@ -553,6 +577,11 @@ def replan_round(probs: Sequence[SimProblem],
                    moved_layers=moved, iterations=iters,
                    converge_iters=converge, wall_s=wall,
                    demoted=demoted)
+    if telemetry is not None:
+        telemetry.inc("online.rounds")
+        telemetry.inc("online.replanned", int(replanned.sum()))
+        telemetry.inc("online.demotions", int(demoted.sum()))
+        telemetry.observe("online.round_wall_s", wall)
     return plans, log
 
 
@@ -573,7 +602,8 @@ def _round_arrivals(cfg: ReplanConfig, dags: Sequence[LayerDAG],
 def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
                  cfg: ReplanConfig = ReplanConfig(),
                  seed: int = 0,
-                 initial: Optional[Sequence[PSOGAResult]] = None
+                 initial: Optional[Sequence[PSOGAResult]] = None,
+                 telemetry: Optional[Telemetry] = None
                  ) -> OnlineReport:
     """Drive a fleet of DNN placements through a drift trace.
 
@@ -588,10 +618,12 @@ def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
     """
     if initial is None:
         probs0 = [SimProblem.build(d, trace.env_at(0)) for d in dags]
-        cold = run_pso_ga_batch(
-            probs0, cfg.pso, seed=seed,
-            arrivals=_round_arrivals(cfg, dags, trace.events[0], seed),
-            mesh=cfg.mesh)
+        with maybe_span(telemetry, "cold_solve", n=len(dags)):
+            cold = run_pso_ga_batch(
+                probs0, cfg.pso, seed=seed,
+                arrivals=_round_arrivals(cfg, dags, trace.events[0],
+                                         seed),
+                mesh=cfg.mesh, telemetry=telemetry)
     else:
         if len(initial) != len(dags):
             raise ValueError(f"{len(initial)} initial results for "
@@ -605,6 +637,7 @@ def replan_fleet(dags: Sequence[LayerDAG], trace: EnvTrace,
             probs_k, plans, cfg, seed=seed + k, round_no=k,
             label=trace.events[k].label,
             arrivals=_round_arrivals(cfg, dags, trace.events[k],
-                                     seed + 1000 * k))
+                                     seed + 1000 * k),
+            telemetry=telemetry)
         rounds.append(log)
     return OnlineReport(cold=cold, rounds=rounds, plans=plans)

@@ -120,15 +120,29 @@ class PlanCache:
     lookup outcomes; ``revalidation_failures`` counts entries dropped
     by the gate (each also counts as a miss); ``stores`` / ``evictions``
     / ``store_rejects`` track the write side.
+
+    With a ``telemetry`` channel every increment is mirrored live onto
+    the registry as ``plancache.<name>`` counters (DESIGN.md §13), so
+    exported snapshots agree with ``stats()`` at any instant. Telemetry
+    only observes — lookup/store outcomes are identical without it.
     """
 
-    def __init__(self, cfg: Optional[PlanCacheConfig] = None) -> None:
+    def __init__(self, cfg: Optional[PlanCacheConfig] = None, *,
+                 telemetry=None) -> None:
         self.cfg = cfg if cfg is not None else PlanCacheConfig()
         self._entries: "OrderedDict[tuple, _Entry]" = OrderedDict()
         self._lock = threading.Lock()
+        self._tel = telemetry
         self._stats: Dict[str, int] = {
             "hits": 0, "misses": 0, "revalidation_failures": 0,
             "stores": 0, "evictions": 0, "store_rejects": 0}
+
+    def _bump(self, name: str, n: int = 1) -> None:
+        """Count under ``self._lock``; the registry lock is a leaf, so
+        mirroring inside ours cannot deadlock."""
+        self._stats[name] += n
+        if self._tel is not None and n:
+            self._tel.inc(f"plancache.{name}", n)
 
     # -- keys ----------------------------------------------------------
     def key(self, dag: Union[LayerDAG, bytes], env: Environment,
@@ -193,14 +207,14 @@ class PlanCache:
         with self._lock:
             for key in failed:
                 self._entries.pop(key, None)
-                self._stats["revalidation_failures"] += 1
+                self._bump("revalidation_failures")
             if all(p is not None for p in plans):
-                self._stats["hits"] += len(keys)
+                self._bump("hits", len(keys))
                 for key in keys:
                     if key in self._entries:
                         self._entries.move_to_end(key)
                 return [np.array(p) for p in plans]
-            self._stats["misses"] += len(keys)
+            self._bump("misses", len(keys))
             return None
 
     # -- write side ----------------------------------------------------
@@ -210,13 +224,13 @@ class PlanCache:
         from .online import plan_is_valid
         if not plan_is_valid(prob, plan):
             with self._lock:
-                self._stats["store_rejects"] += 1
+                self._bump("store_rejects")
             return False
         res = simulate_np(prob, plan)
         total, make = float(res.total_cost), float(res.makespan)
         if not (np.isfinite(total) and np.isfinite(make)):
             with self._lock:
-                self._stats["store_rejects"] += 1
+                self._bump("store_rejects")
             return False
         entry = _Entry(np.array(plan), total, make)
         with self._lock:
@@ -224,8 +238,8 @@ class PlanCache:
             self._entries.move_to_end(key)
             while len(self._entries) > self.cfg.capacity:
                 self._entries.popitem(last=False)
-                self._stats["evictions"] += 1
-            self._stats["stores"] += 1
+                self._bump("evictions")
+            self._bump("stores")
         return True
 
     # -- bookkeeping ---------------------------------------------------

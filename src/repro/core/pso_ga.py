@@ -39,6 +39,7 @@ from .environment import Environment
 from .fitness import make_swarm_fitness
 from .simulator import (PaddedProblem, SimProblem, build_simulator,
                         pad_problem)
+from .telemetry import get_telemetry
 
 __all__ = ["PSOGAConfig", "PSOGAResult", "run_pso_ga", "init_swarm",
            "swarm_step"]
@@ -291,7 +292,8 @@ def run_pso_ga(dag: LayerDAG, env: Environment,
                cfg: PSOGAConfig = PSOGAConfig(),
                seed: int = 0,
                record_history: bool = False,
-               arrivals: Optional[np.ndarray] = None) -> PSOGAResult:
+               arrivals: Optional[np.ndarray] = None,
+               telemetry=None) -> PSOGAResult:
     """Run PSO-GA to convergence. Returns the best assignment found.
 
     ``arrivals`` (``(M, n_apps, R)`` Monte-Carlo request timestamps,
@@ -301,6 +303,11 @@ def run_pso_ga(dag: LayerDAG, env: Environment,
     still report the zero-load replay of the winning plan so results
     stay comparable across modes — use ``traffic.traffic_replay`` for
     the plan's load metrics.
+
+    With ``record_history`` and a telemetry channel (explicit arg, or
+    the process-global one from ``telemetry_scope``) the per-iteration
+    gBest curve is published as the ``solver.gbest`` metric series
+    (DESIGN.md §13) alongside the returned ``history`` array.
     """
     prob = SimProblem.build(dag, env)
     step, fit = _make_step(prob, cfg, arrivals=arrivals)
@@ -323,6 +330,10 @@ def run_pso_ga(dag: LayerDAG, env: Environment,
         state, hist = jax.lax.scan(body, state, None, length=cfg.max_iters)
         history = np.asarray(hist)
         iters = cfg.max_iters
+        tel = telemetry if telemetry is not None else get_telemetry()
+        if tel is not None:
+            tel.record_series("solver.gbest", history)
+            tel.inc("solver.history_runs")
     else:
         def cond(s: _SwarmState):
             return (s.it < cfg.max_iters) & (s.stall < cfg.stall_iters)

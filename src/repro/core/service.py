@@ -85,7 +85,7 @@ from ..runtime.fault import (CircuitBreaker, FailureInjector,
                              SimulatedFailure, retry_with_backoff)
 from ..runtime.straggler import EwmaEstimator, StragglerDetector
 from .baselines import greedy_offload, heft_makespan
-from .batch import run_pso_ga_batch
+from .batch import run_pso_ga_batch, runner_cache_stats
 from .dag import LayerDAG
 from .environment import Environment
 from .online import (EnvTrace, ReplanConfig, RoundLog, _round_arrivals,
@@ -93,6 +93,7 @@ from .online import (EnvTrace, ReplanConfig, RoundLog, _round_arrivals,
 from .plancache import PlanCache, PlanCacheConfig, dag_fingerprint
 from .pso_ga import PSOGAConfig, PSOGAResult
 from .simulator import SimProblem, simulate_np
+from .telemetry import Telemetry, get_telemetry, maybe_span
 from .traffic import ArrivalQueue, IngestConfig
 
 __all__ = ["ChaosConfig", "ServiceConfig", "ServiceRoundLog",
@@ -377,7 +378,9 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                 seed: int = 0,
                 initial: Optional[Sequence[PSOGAResult]] = None,
                 sleeper=None,
-                plan_cache: Optional[PlanCache] = None) -> ServiceReport:
+                plan_cache: Optional[PlanCache] = None,
+                telemetry: Optional[Telemetry] = None,
+                track: Optional[int] = None) -> ServiceReport:
     """Drive a fleet through a drift trace as a long-running service.
 
     Round 0 solves cold exactly like ``replan_fleet``; every later round
@@ -399,12 +402,32 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
     recorder so chaos runs never block). ``plan_cache`` overrides
     ``cfg.plan_cache`` with a caller-owned (possibly shared) cache
     instance.
+
+    ``telemetry`` (DESIGN.md §13) routes every round through the span
+    tracer (round / cache_lookup / solve / ladder spans on the
+    service's ``track``) and mirrors the ad-hoc counters onto the
+    metrics registry under ``service.*``; all wall measurements come
+    from its injectable clock (``time.perf_counter`` with telemetry
+    off), so a fake clock makes every ``wall_s`` deterministic. Plans,
+    seeds, and every ``ServiceReport`` field are bit-identical with
+    telemetry on, off, or globally installed — telemetry observes, it
+    never steers.
     """
+    tel = telemetry if telemetry is not None else get_telemetry()
+    clock = tel.clock if tel is not None else time.perf_counter
+    if tel is not None and track is not None:
+        tel.set_track(track, label=f"service-{track}")
+
+    def _bump(name: str, n: int = 1) -> None:
+        counters[name] += n
+        if tel is not None and n:
+            tel.inc(f"service.{name}", n)
+
     rcfg = cfg.replan
     burst_rcfg = dataclasses.replace(rcfg, pso=cfg.burst)
     cache = plan_cache
     if cache is None and cfg.plan_cache is not None:
-        cache = PlanCache(cfg.plan_cache)
+        cache = PlanCache(cfg.plan_cache, telemetry=tel)
     fps = [dag_fingerprint(d) for d in dags] if cache is not None else None
     injector = None
     if cfg.chaos is not None and (cfg.chaos.crash_rounds
@@ -443,7 +466,7 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
         if windows is None:
             raise ValueError("ingest requires a traffic model "
                              "(cfg.replan.traffic) to observe")
-        queue = ArrivalQueue(cfg.ingest.capacity)
+        queue = ArrivalQueue(cfg.ingest.capacity, telemetry=tel)
 
         def _produce(idxs: List[int]) -> None:
             for kk in range(1, trace.num_rounds):
@@ -461,9 +484,14 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
             producers.append(th)
             th.start()
 
+    # the counters schema is STABLE: every key is present from round 0
+    # (ingest_* stay 0 without async ingestion) so downstream consumers
+    # never need existence checks.
     counters = {"retries": 0, "crashes": 0, "stale_env_rounds": 0,
                 "stalls_flagged": 0, "breaker_opened": 0,
-                "watchdog_cuts": 0, "rejected_apps": 0, "demotions": 0}
+                "watchdog_cuts": 0, "rejected_apps": 0, "demotions": 0,
+                "ingest_enqueued": 0, "ingest_dropped": 0,
+                "ingest_drained": 0, "ingest_leftover": 0}
     fallback_counts = {r: 0 for r in LADDER_RUNGS}
 
     # round 0: the cold solve, exactly replan_fleet's (or admission-time
@@ -471,10 +499,12 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
     env0 = trace.env_at(0)
     if initial is None:
         probs0 = [SimProblem.build(d, env0) for d in dags]
-        cold = run_pso_ga_batch(
-            probs0, rcfg.pso, seed=seed,
-            arrivals=_round_arrivals(rcfg, dags, trace.events[0], seed),
-            mesh=rcfg.mesh)
+        with maybe_span(tel, "cold_solve", n=len(dags)):
+            cold = run_pso_ga_batch(
+                probs0, rcfg.pso, seed=seed,
+                arrivals=_round_arrivals(rcfg, dags, trace.events[0],
+                                         seed),
+                mesh=rcfg.mesh, telemetry=tel)
     else:
         if len(initial) != len(dags):
             raise ValueError(f"{len(initial)} initial results for "
@@ -486,13 +516,16 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
     rounds: List[ServiceRoundLog] = []
 
     for k in range(1, trace.num_rounds):
-        ev = trace.events[k]
+      ev = trace.events[k]
+      with maybe_span(tel, "round", round=k, label=ev.label):
         env_k = trace.env_at(k)
         if cfg.chaos is not None and k in cfg.chaos.nan_env_rounds:
             env_k = _poison_env(env_k)
         stale_env = not _env_ok(env_k)
         if stale_env:
-            counters["stale_env_rounds"] += 1
+            _bump("stale_env_rounds")
+            if tel is not None:
+                tel.instant("stale_env", round=k)
             env_k = last_good_env
         else:
             last_good_env = env_k
@@ -504,6 +537,7 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
         # (the solver never sees the trace's load_scale).
         est_rates: Tuple[float, ...] = ()
         if windows is not None:
+          with maybe_span(tel, "ingest", round=k):
             tc = rcfg.traffic
             if queue is not None:
                 if not producers:   # deterministic single-thread mode
@@ -517,6 +551,9 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
             ests = [windows[i].rate() for i in range(len(dags))]
             est_rates = tuple(
                 tc.rate if e is None else float(e) for e in ests)
+            if tel is not None:
+                for e in est_rates:
+                    tel.observe("service.est_rate", e)
 
         # plan cache: a full-fleet hit that survives the replay-exact
         # gate serves instantly and skips triage/watchdog/solve.
@@ -525,7 +562,8 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
         cached_plans: Optional[List[np.ndarray]] = None
         cache_wall = 0.0
         if cache is not None:
-            t_c = time.perf_counter()
+          with maybe_span(tel, "cache_lookup", round=k):
+            t_c = clock()
             if windows is not None:
                 scales = [max(e / rcfg.traffic.rate, 1e-6)
                           for e in est_rates]
@@ -537,7 +575,11 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                       for i in range(len(dags))]
             cached_plans = cache.lookup_fleet(keys_k, probs)
             cache_hit = cached_plans is not None
-            cache_wall = time.perf_counter() - t_c
+            cache_wall = clock() - t_c
+          if tel is not None:
+            tel.instant("cache_hit" if cache_hit else "cache_miss",
+                        round=k)
+            tel.observe("service.cache_lookup_s", cache_wall)
 
         rejected = 0
         arrivals = None
@@ -553,7 +595,9 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                                            seed + 1000 * k)
             arrivals, rejected = _triage(dags, probs, env_k,
                                          cfg.triage_margin, arrivals)
-        counters["rejected_apps"] += rejected
+        _bump("rejected_apps", rejected)
+        if tel is not None and rejected:
+            tel.instant("triage_reject", round=k, apps=rejected)
 
         # watchdog: remaining SLO slack → iteration budget → rung.
         # (iter_est, NOT the rate estimate: per-iteration solve seconds.)
@@ -571,15 +615,20 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
             want = {"warm": rcfg, "burst": burst_rcfg,
                     "pinned": None}[rung0]
             if rung0 != "warm":
-                counters["watchdog_cuts"] += 1
+                _bump("watchdog_cuts")
+                if tel is not None:
+                    tel.instant("watchdog_cut", round=k, rung=rung0,
+                                budget_iters=min(budget, 1e18))
             if not breaker.allow(k):
                 want, rung0 = None, "pinned"
+                if tel is not None:
+                    tel.instant("breaker_pinned", round=k)
 
         solver_failed = False
         retries_used = 0
         rlog: Optional[RoundLog] = None
         new_plans: Optional[List[np.ndarray]] = cached_plans
-        t0 = time.perf_counter()
+        t0 = clock()
         if want is not None:
             def attempt(a: int, _want=want):
                 nonlocal retries_used
@@ -588,27 +637,35 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                     injector.maybe_fail(k)
                 return replan_round(probs, plans, _want, seed=seed + k,
                                     round_no=k, label=ev.label,
-                                    arrivals=arrivals)
+                                    arrivals=arrivals, telemetry=tel)
             try:
-                new_plans, rlog = retry_with_backoff(
-                    attempt, retries=cfg.retries,
-                    backoff_s=cfg.backoff_s, sleeper=sleeper)
+                with maybe_span(tel, "solve", round=k, rung=rung0):
+                    new_plans, rlog = retry_with_backoff(
+                        attempt, retries=cfg.retries,
+                        backoff_s=cfg.backoff_s, sleeper=sleeper)
             except SimulatedFailure:
                 solver_failed = True
-                counters["crashes"] += 1
-            counters["retries"] += retries_used
-        wall = time.perf_counter() - t0
+                _bump("crashes")
+                if tel is not None:
+                    tel.instant("solver_crash", round=k,
+                                retries=retries_used)
+            _bump("retries", retries_used)
+        wall = clock() - t0
         if cache_hit:
             # time-to-plan for a cached round is the lookup+revalidation
             # time; injected solver stalls can't stall a skipped solve.
             wall = cache_wall
         elif cfg.chaos is not None and k in cfg.chaos.stall_rounds:
             wall += cfg.chaos.stall_s
+        if tel is not None:
+            tel.observe("service.round_wall_s", wall)
         stalled = False
         if want is not None:
             stalled = detector.update(wall)
             if stalled:
-                counters["stalls_flagged"] += 1
+                _bump("stalls_flagged")
+                if tel is not None:
+                    tel.instant("stall_flagged", round=k, wall_s=wall)
                 if cfg.treat_stalls_as_failures:
                     solver_failed = True
                     new_plans, rlog = None, None
@@ -617,34 +674,45 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
             if rlog is not None:
                 it_max = int(np.max(rlog.iterations, initial=1))
                 per_iter.update(wall / max(it_max, 1))
-            counters["demotions"] += int(np.sum(rlog.demoted)) \
-                if rlog is not None else 0
+            _bump("demotions", int(np.sum(rlog.demoted))
+                  if rlog is not None else 0)
         elif want is not None:
             opened = breaker.opened
             breaker.record_failure(k)
-            counters["breaker_opened"] += breaker.opened - opened
+            _bump("breaker_opened", breaker.opened - opened)
+            if tel is not None and breaker.opened > opened:
+                tel.instant("breaker_opened", round=k)
 
         # mid-round churn: the environment the plans must RUN on.
         probs_post, env_post = probs, env_k
         if cfg.chaos is not None and k in cfg.chaos.mid_round_down:
             env_post = _down_env(env_k, cfg.chaos.mid_round_down[k])
             probs_post = [SimProblem.build(d, env_post) for d in dags]
+            if tel is not None:
+                tel.instant("mid_round_down", round=k,
+                            server=cfg.chaos.mid_round_down[k])
 
         # the ladder: promote each problem's best available plan.
         rung: List[str] = []
-        for i, (d, pr) in enumerate(zip(dags, probs_post)):
-            if new_plans is not None:
-                cand, r_i = new_plans[i], rung0
-            else:
-                cand, r_i = plans[i], "pinned"
-            if _plan_ok(pr, cand):
-                plans[i] = np.asarray(cand, np.int32)
-            else:
-                r_i, cand = _ladder_tail(d, pr, env_post,
-                                         rcfg.pso.faithful_sim)
-                plans[i] = cand
-            rung.append(r_i)
-            fallback_counts[r_i] += 1
+        with maybe_span(tel, "ladder", round=k):
+            for i, (d, pr) in enumerate(zip(dags, probs_post)):
+                if new_plans is not None:
+                    cand, r_i = new_plans[i], rung0
+                else:
+                    cand, r_i = plans[i], "pinned"
+                if _plan_ok(pr, cand):
+                    plans[i] = np.asarray(cand, np.int32)
+                else:
+                    r_i, cand = _ladder_tail(d, pr, env_post,
+                                             rcfg.pso.faithful_sim)
+                    plans[i] = cand
+                    if tel is not None:
+                        tel.instant("ladder_demote", round=k,
+                                    problem=i, rung=r_i)
+                rung.append(r_i)
+                fallback_counts[r_i] += 1
+                if tel is not None:
+                    tel.inc(f"service.rung.{r_i}")
 
         # store freshly-solved plans for repeat scenarios: only solver
         # rungs (accepted under env_k with their replay invariants) and
@@ -657,6 +725,9 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
                 if r_i in ("warm", "burst") and plans[i] is not None:
                     cache.store(keys_k[i], probs[i], plans[i])
 
+        if tel is not None:
+            tel.set_gauge("service.breaker_open",
+                          0.0 if breaker_state == "closed" else 1.0)
         rounds.append(ServiceRoundLog(
             round=k, label=ev.label, rung=tuple(rung), wall_s=wall,
             budget_iters=budget, breaker_state=breaker_state,
@@ -676,6 +747,26 @@ def run_service(dags: Sequence[LayerDAG], trace: EnvTrace,
         counters["ingest_drained"] = qc["drained"]
         counters["ingest_leftover"] = qc["depth"]
 
+    if tel is not None:
+        # final snapshot stamps: the service.* counters were kept in
+        # sync live by _bump (except the ingest_* totals, owned by the
+        # queue and finalized just above); plancache.* counters catch up
+        # to ``cache.stats()`` — a no-op for a cache this service built
+        # (live-mirrored), the missing delta for a shared external cache
+        # constructed without telemetry; runner-cache totals land as
+        # gauges (its per-lookup counters are runner_cache.lookup_*), so
+        # ONE export carries everything the report does (DESIGN.md §13).
+        for nm in ("ingest_enqueued", "ingest_dropped",
+                   "ingest_drained", "ingest_leftover"):
+            c = tel.registry.counter(f"service.{nm}")
+            c.inc(counters[nm] - c.value)
+        if cache is not None:
+            for nm, v in cache.stats().items():
+                c = tel.registry.counter(f"plancache.{nm}")
+                c.inc(max(0, v - c.value))
+        for nm, v in runner_cache_stats().items():
+            tel.set_gauge(f"runner_cache.{nm}", v)
+
     return ServiceReport(cold=cold, rounds=rounds, plans=plans,
                          fallback_counts=fallback_counts,
                          counters=counters,
@@ -689,7 +780,8 @@ def run_services(fleets: Sequence[Sequence[LayerDAG]],
                              None] = None,
                  seeds: Union[int, Sequence[int]] = 0,
                  plan_cache: Optional[PlanCache] = None,
-                 max_workers: Optional[int] = None
+                 max_workers: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None
                  ) -> List[ServiceReport]:
     """Run N planning services concurrently against one runner pool.
 
@@ -702,6 +794,9 @@ def run_services(fleets: Sequence[Sequence[LayerDAG]],
     broadcast: pass one value for all services or a sequence of
     ``len(fleets)``. An optional shared ``plan_cache`` lets services
     reuse each other's solves (its stats then aggregate all of them).
+    A shared ``telemetry`` (DESIGN.md §13) gives service ``j`` its own
+    Perfetto track (tid ``j``, labeled ``service-j``): the registry and
+    tracer are thread-safe, so the N loops interleave into one timeline.
     """
     n = len(fleets)
     if n == 0:
@@ -721,6 +816,7 @@ def run_services(fleets: Sequence[Sequence[LayerDAG]],
     with ThreadPoolExecutor(max_workers=max_workers or n) as ex:
         futs = [ex.submit(run_service, fleets[j], traces_l[j],
                           cfgs_l[j], seed=seeds_l[j],
-                          plan_cache=plan_cache)
+                          plan_cache=plan_cache, telemetry=telemetry,
+                          track=j if telemetry is not None else None)
                 for j in range(n)]
         return [f.result() for f in futs]

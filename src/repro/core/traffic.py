@@ -662,14 +662,19 @@ class ArrivalQueue:
     sliding window just sees fewer samples). Counters are monotonic:
     ``enqueued`` + ``dropped`` = offered, ``drained`` = consumed,
     ``depth`` = enqueued - drained.
+
+    A ``telemetry`` channel mirrors every count live onto the registry
+    as ``ingest.*`` counters plus an ``ingest.depth`` gauge
+    (DESIGN.md §13); queue behavior is identical without it.
     """
 
-    def __init__(self, capacity: int = 64) -> None:
+    def __init__(self, capacity: int = 64, *, telemetry=None) -> None:
         if int(capacity) < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity!r}")
         self.capacity = int(capacity)
         self._dq: collections.deque = collections.deque()
         self._lock = threading.Lock()
+        self._tel = telemetry
         self.enqueued = 0
         self.dropped = 0
         self.drained = 0
@@ -680,10 +685,15 @@ class ArrivalQueue:
         with self._lock:
             if len(self._dq) >= self.capacity:
                 self.dropped += 1
+                if self._tel is not None:
+                    self._tel.inc("ingest.dropped")
                 return False
             self._dq.append(item)
             self.enqueued += 1
             self.max_depth = max(self.max_depth, len(self._dq))
+            if self._tel is not None:
+                self._tel.inc("ingest.enqueued")
+                self._tel.set_gauge("ingest.depth", float(len(self._dq)))
             return True
 
     def drain(self) -> List[Any]:
@@ -692,6 +702,9 @@ class ArrivalQueue:
             items = list(self._dq)
             self._dq.clear()
             self.drained += len(items)
+            if self._tel is not None:
+                self._tel.inc("ingest.drained", len(items))
+                self._tel.set_gauge("ingest.depth", 0.0)
             return items
 
     def depth(self) -> int:

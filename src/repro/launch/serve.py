@@ -141,6 +141,11 @@ def main() -> None:
                          "planning service over a drift trace of this "
                          "family (DESIGN.md §11): watchdog, fallback "
                          "ladder, admission control, circuit breaker. "
+                         "Accepts a drift family (wifi-fade | congestion "
+                         "| spot-price | node-loss | load-surge) or a "
+                         "traffic family (poisson | diurnal | bursty | "
+                         "flash-crowd) — the latter serves that request "
+                         "stream through a load-surge drift trace. "
                          "Prints per-round rungs and the availability/"
                          "SLO summary, then exits (no LM serving).")
     ap.add_argument("--serve-rounds", type=int, default=6,
@@ -181,6 +186,14 @@ def main() -> None:
                          "rate and load-adjusted cost")
     ap.add_argument("--traffic-rate", type=float, default=0.5,
                     help="mean request arrivals/s per app for --traffic")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="with --plan: write a Chrome trace-event JSON "
+                         "of the planning/serving spans — open in "
+                         "Perfetto or chrome://tracing (DESIGN.md §13)")
+    ap.add_argument("--metrics-out", default=None, metavar="DIR",
+                    help="with --plan: write the telemetry registry "
+                         "snapshot (metrics.jsonl + metrics.prom) to "
+                         "this directory (DESIGN.md §13)")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -193,9 +206,22 @@ def main() -> None:
                  "only exists with --traffic SCENARIO (DESIGN.md §10)")
     if args.serve_scenario and not args.plan:
         ap.error("--serve requires --plan")
+    if args.serve_scenario in TRAFFIC_KINDS:
+        # --serve took a traffic family: serve that request stream
+        # through a load-surge drift trace (the one drift family that
+        # perturbs the stream itself, DESIGN.md §10).
+        if args.traffic and args.traffic != args.serve_scenario:
+            ap.error(f"--serve {args.serve_scenario} conflicts with "
+                     f"--traffic {args.traffic}: pick one arrival "
+                     f"family")
+        args.traffic = args.serve_scenario
+        args.serve_scenario = "load-surge"
     if args.serve_scenario == "load-surge" and not args.traffic:
         ap.error("--serve load-surge drifts the request stream, which "
                  "only exists with --traffic SCENARIO (DESIGN.md §10)")
+    if (args.trace_out or args.metrics_out) and not args.plan:
+        ap.error("--trace-out / --metrics-out instrument the planning "
+                 "path — they require --plan (DESIGN.md §13)")
     if (args.estimate_rates or args.triage_margin > 0.0) \
             and not args.traffic:
         ap.error("--estimate-rates / --triage-margin need --traffic "
@@ -208,9 +234,34 @@ def main() -> None:
     if args.plan:
         # one batched PSO-GA fleet plans every serving shape at once
         # (DESIGN.md §4) instead of re-compiling the solver per shape.
-        from ..core import (PSOGAConfig, TrafficConfig,
-                            plan_offload_batch, tpu_fleet_environment)
+        from ..core import (PSOGAConfig, Telemetry, TrafficConfig,
+                            plan_offload_batch, set_telemetry,
+                            tpu_fleet_environment)
         from .mesh import resolve_mesh
+
+        tel: Optional[Telemetry] = None
+        if args.trace_out or args.metrics_out:
+            # one telemetry channel for the whole planning path; the
+            # global hook is how config-less deep layers (runner cache,
+            # solver history) reach the same registry (DESIGN.md §13).
+            tel = Telemetry()
+            set_telemetry(tel)
+
+        def _export_tel() -> None:
+            if tel is None:
+                return
+            set_telemetry(None)
+            if args.trace_out:
+                tel.export_trace(args.trace_out)
+                n_ev = len(tel.tracer.to_chrome_trace()["traceEvents"])
+                print(f"[serve] telemetry: wrote {n_ev} trace events to "
+                      f"{args.trace_out} (open in Perfetto / "
+                      f"chrome://tracing)")
+            if args.metrics_out:
+                tel.export_metrics(args.metrics_out)
+                print(f"[serve] telemetry: wrote metrics snapshot to "
+                      f"{args.metrics_out}/metrics.{{jsonl,prom}}")
+
         fleet_env = tpu_fleet_environment()
         shapes = [s for s in SHAPES if s.kind != "train"]
         pso_cfg = PSOGAConfig(pop_size=48, max_iters=200, stall_iters=40)
@@ -260,7 +311,7 @@ def main() -> None:
                 [p.dag for p in plans], trace,
                 ReplanConfig(pso=replan_pso, traffic=traffic_cfg,
                              mesh=solver_mesh),
-                initial=[p.result for p in plans])
+                initial=[p.result for p in plans], telemetry=tel)
             for log in report.rounds:
                 n_re = int(log.replanned.sum())
                 print(f"[serve] replan round {log.round} ({log.label}): "
@@ -303,7 +354,8 @@ def main() -> None:
                         if args.async_ingest is not None else None))
             report = run_service([p.dag for p in plans], trace, scfg,
                                  seed=0,
-                                 initial=[p.result for p in plans])
+                                 initial=[p.result for p in plans],
+                                 telemetry=tel)
             for r in report.rounds:
                 flags = "".join(
                     f" [{f}]" for f, on in
@@ -327,7 +379,9 @@ def main() -> None:
                       f"({cs['hits']}/{n_look}), stores {cs['stores']}, "
                       f"evictions {cs['evictions']}, revalidation "
                       f"failures {cs['revalidation_failures']}")
+            _export_tel()
             return
+        _export_tel()
     if args.reduced:
         cfg = cfg.reduced()
     srv = Server(cfg, args.batch, args.prompt_len, args.max_new,

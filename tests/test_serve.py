@@ -102,13 +102,13 @@ def test_serve_service_cli_smoke(monkeypatch, capsys):
                          fitness_backend=fitness_backend, traffic=traffic,
                          mesh=mesh)
 
-    def service_spy(dags, trace, cfg, seed=0, initial=None, sleeper=None):
+    def service_spy(dags, trace, cfg, seed=0, **kw):
         small = dataclasses.replace(
             cfg.replan, pso=dataclasses.replace(
                 cfg.replan.pso, pop_size=8, max_iters=4, stall_iters=2))
         rep = real_service(dags, trace,
                            dataclasses.replace(cfg, replan=small),
-                           seed=seed, initial=initial, sleeper=sleeper)
+                           seed=seed, **kw)
         captured["report"] = rep
         return rep
 

@@ -1,0 +1,445 @@
+"""Unified telemetry layer (repro.core.telemetry, DESIGN.md §13): the
+metric primitives, the registry's thread-safety and exporters, the span
+tracer's Chrome trace-event schema, and the integration invariants the
+layer rests on — telemetry OFF is bit-identical to the seed behavior,
+telemetry ON agrees with every legacy counter surface
+(``ServiceReport.counters`` / ``PlanCache.stats()`` /
+``runner_cache_stats()``), and a chaos run exports a trace that the CI
+validator (scripts/check_trace.py) accepts."""
+import importlib.util
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ChaosConfig, PSOGAConfig, PlanCacheConfig,
+                        ReplanConfig, ServiceConfig, Telemetry,
+                        get_telemetry, maybe_span, run_service,
+                        run_services, sample_environment, sample_trace,
+                        set_telemetry, telemetry_scope,
+                        zero_drift_trace)
+from repro.core.dag import LayerDAG
+from repro.core.telemetry import (Counter, Gauge, Histogram,
+                                  MetricsRegistry, Series, SpanTracer)
+
+#: distinct from every other test config so this file's first solve is a
+#: fresh runner-cache entry
+FAST = PSOGAConfig(pop_size=19, max_iters=40, stall_iters=15)
+RCFG = ReplanConfig(pso=FAST)
+
+
+def _tiny_dag(env, pin):
+    return LayerDAG(
+        compute=np.array([1.1, 1.92, 2.35, 2.12]) * env.power[0],
+        edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]]),
+        edge_mb=np.array([1.0, 1.0, 0.5, 0.5]),
+        app_id=np.zeros(4, np.int32), deadline=np.array([3.7]),
+        pinned=np.array([pin, -1, -1, -1], np.int32))
+
+
+@pytest.fixture(scope="module")
+def tiny_fleet():
+    env = sample_environment()
+    return env, [_tiny_dag(env, 0), _tiny_dag(env, 1)]
+
+
+def _check_trace_module():
+    """Import scripts/check_trace.py — the schema tests exercise the CI
+    gate itself instead of a parallel reimplementation."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "scripts", "check_trace.py")
+    spec = importlib.util.spec_from_file_location("check_trace", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class FakeClock:
+    """Deterministic clock: advances by ``step`` on every call."""
+
+    def __init__(self, step: float = 0.001):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# metric primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_is_monotonic():
+    c = Counter("x")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+    assert c.value == 5
+
+
+def test_gauge_last_value_wins():
+    g = Gauge("x")
+    g.set(3.5)
+    g.set(-1.0)
+    assert g.value == -1.0
+
+
+def test_histogram_exact_moments_and_quantiles():
+    h = Histogram("lat")
+    for v in range(1, 101):
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 100 and s["sum"] == pytest.approx(5050.0)
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    # reservoir holds everything below capacity: quantiles are exact
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p95"] == pytest.approx(np.percentile(np.arange(1, 101), 95))
+    assert h.quantile(0) == 1.0 and h.quantile(100) == 100.0
+
+
+def test_histogram_reservoir_is_bounded_and_deterministic():
+    h1, h2 = Histogram("b", reservoir=64), Histogram("b", reservoir=64)
+    for v in range(10_000):
+        h1.observe(float(v))
+        h2.observe(float(v))
+    assert len(h1._res) == 64                 # bounded under pressure
+    assert h1.count == 10_000                 # exact count survives
+    assert h1.summary()["sum"] == pytest.approx(sum(range(10_000)))
+    # per-name seeded sampling: identical runs sample identically
+    assert h1.summary() == h2.summary()
+    with pytest.raises(ValueError, match="reservoir"):
+        Histogram("bad", reservoir=0)
+
+
+def test_series_bounds_and_extend():
+    s = Series("gbest", max_points=8)
+    s.extend(100.0, np.arange(12.0))
+    assert s.summary() == {"n": 8, "dropped": 4, "last": 11.0}
+    ts = [t for t, _ in s.points()]
+    assert ts == sorted(ts)                   # sub-ticks keep order
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_kind_conflict():
+    r = MetricsRegistry()
+    assert r.counter("a") is r.counter("a")
+    with pytest.raises(TypeError, match="Counter"):
+        r.gauge("a")
+
+
+def test_registry_thread_safety():
+    r = MetricsRegistry()
+    n_threads, n_ops = 8, 1000
+
+    def work():
+        for i in range(n_ops):
+            r.inc("c")
+            r.observe("h", float(i))
+            r.set_gauge("g", float(i))
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert r.counter("c").value == n_threads * n_ops
+    assert r.histogram("h").count == n_threads * n_ops
+
+
+def test_registry_exports_parse():
+    r = MetricsRegistry()
+    r.inc("svc.rounds", 3)
+    r.set_gauge("svc.depth", 2.0)
+    r.observe("svc.wall", 0.25)
+    r.record_series("svc.gbest", [3.0, 2.0, 1.0])
+    for line in r.to_jsonl().splitlines():
+        rec = json.loads(line)
+        assert {"type", "name"} <= set(rec)
+    prom = r.to_prometheus()
+    assert "svc_rounds_total 3" in prom
+    assert 'svc_wall{quantile="0.5"}' in prom
+    assert "svc_gbest_last 1.0" in prom
+    snap = r.snapshot()
+    assert snap["counters"]["svc.rounds"] == 3
+    assert snap["series"]["svc.gbest"]["n"] == 3
+
+
+def test_registry_write_files(tmp_path):
+    r = MetricsRegistry()
+    r.inc("a")
+    paths = r.write(str(tmp_path / "m"))
+    assert json.loads(open(paths["jsonl"]).read())["name"] == "a"
+    assert "# TYPE" in open(paths["prom"]).read()
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_emits_paired_nested_spans():
+    clk = FakeClock()
+    tr = SpanTracer(clock=clk)
+    with tr.span("outer", round=1):
+        with tr.span("inner"):
+            tr.instant("hit", key="k")
+    evs = tr.events()
+    assert [e["ph"] for e in evs] == ["B", "B", "i", "E", "E"]
+    assert [e["name"] for e in evs] == ["outer", "inner", "hit",
+                                       "inner", "outer"]
+    for e in evs:
+        assert {"ph", "ts", "pid", "tid", "name"} <= set(e)
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts) and ts[0] >= 0.0
+    assert evs[0]["args"] == {"round": 1}
+    assert evs[2]["s"] == "t"
+
+
+def test_tracer_span_closes_on_exception():
+    tr = SpanTracer(clock=FakeClock())
+    with pytest.raises(RuntimeError):
+        with tr.span("risky"):
+            raise RuntimeError("boom")
+    assert [e["ph"] for e in tr.events()] == ["B", "E"]
+
+
+def test_tracer_tracks_are_thread_local():
+    tr = SpanTracer(clock=time.perf_counter)
+    tr.set_track(7, label="service-7")
+
+    def other():
+        tr.set_track(9)
+        with tr.span("theirs"):
+            pass
+
+    t = threading.Thread(target=other)
+    t.start()
+    t.join()
+    with tr.span("mine"):
+        pass
+    by_name = {e["name"]: e for e in tr.events() if e["ph"] == "B"}
+    assert by_name["theirs"]["tid"] == 9
+    assert by_name["mine"]["tid"] == 7
+    meta = [e for e in tr.events() if e["ph"] == "M"]
+    assert meta[0]["args"]["name"] == "service-7"
+    assert meta[0]["tid"] == 7
+
+
+def test_tracer_export_is_chrome_trace(tmp_path):
+    tr = SpanTracer(clock=FakeClock())
+    with tr.span("round"):
+        pass
+    path = str(tmp_path / "t.json")
+    tr.export(path)
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    assert len(doc["traceEvents"]) == 2
+
+
+def test_maybe_span_off_is_nullcontext():
+    with maybe_span(None, "anything", round=3):
+        pass  # no telemetry: must be free and silent
+    tel = Telemetry(clock=FakeClock())
+    with maybe_span(tel, "real"):
+        pass
+    assert len(tel.tracer.events()) == 2
+
+
+def test_global_telemetry_scope():
+    assert get_telemetry() is None
+    tel = Telemetry(clock=FakeClock())
+    with telemetry_scope(tel):
+        assert get_telemetry() is tel
+        with telemetry_scope(None):
+            assert get_telemetry() is None
+        assert get_telemetry() is tel
+    assert get_telemetry() is None
+
+
+# ---------------------------------------------------------------------------
+# service integration: parity, agreement, determinism, schema
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_pair(tiny_fleet):
+    """One 10-round chaos service run with telemetry, one without —
+    shared by the parity / agreement / schema tests."""
+    env, dags = tiny_fleet
+    trace = sample_trace("wifi-fade", env, rounds=10, seed=3)
+    cfg = ServiceConfig(
+        replan=RCFG, plan_cache=PlanCacheConfig(),
+        # the straggler detector flags on MEASURED walls, which a loaded
+        # host can skew differently across the two paired runs — keep it
+        # in warmup so every counter compared below is deterministic
+        straggler_warmup=100,
+        chaos=ChaosConfig(crash_rounds=(2,), nan_env_rounds=(4,),
+                          mid_round_down={6: 1}))
+    tel = Telemetry()
+    with_tel = run_service(dags, trace, cfg, seed=7, telemetry=tel)
+    without = run_service(dags, trace, cfg, seed=7)
+    return tel, with_tel, without
+
+
+def test_service_telemetry_off_parity(chaos_pair):
+    """The off-parity invariant: telemetry observes, never steers."""
+    _, a, b = chaos_pair
+    assert a.counters == b.counters
+    assert a.fallback_counts == b.fallback_counts
+    assert a.cache_stats == b.cache_stats
+    for ra, rb in zip(a.rounds, b.rounds):
+        assert ra.rung == rb.rung and ra.label == rb.label
+        assert ra.breaker_state == rb.breaker_state
+        assert ra.solver_failed == rb.solver_failed
+        assert ra.stale_env == rb.stale_env
+        assert ra.cache_hit == rb.cache_hit
+    for pa, pb in zip(a.plans, b.plans):
+        assert np.array_equal(pa, pb)
+
+
+def test_service_counters_agree_with_registry(chaos_pair):
+    """ONE pipeline: the registry snapshot and the legacy dict surfaces
+    must tell the same story."""
+    tel, rep, _ = chaos_pair
+    snap = tel.registry.snapshot()
+    for name, v in rep.counters.items():
+        assert snap["counters"].get(f"service.{name}", 0) == v, name
+    for rung, v in rep.fallback_counts.items():
+        assert snap["counters"].get(f"service.rung.{rung}", 0) == v, rung
+    for name, v in rep.cache_stats.items():
+        assert snap["counters"].get(f"plancache.{name}", 0) == v, name
+
+
+def test_service_trace_passes_ci_validator(chaos_pair, tmp_path):
+    """Satellite: every span of a 10-round chaos run validates against
+    the Chrome trace-event schema — via the actual CI gate."""
+    tel, _, _ = chaos_pair
+    path = str(tmp_path / "chaos_trace.json")
+    tel.export_trace(path)
+    tel.export_metrics(str(tmp_path / "m"))
+    ct = _check_trace_module()
+    n = ct.check_trace(path, require=["round", "solve", "cache_lookup",
+                                      "ladder", "replan_round",
+                                      "fleet_solve", "cold_solve"])
+    assert n > 0
+    ct.check_metrics(str(tmp_path / "m"))
+
+
+def test_service_ingest_counters_always_present(chaos_pair):
+    """Satellite regression: the ingest_* keys are part of the stable
+    counter schema even with ingestion unconfigured."""
+    _, rep, without = chaos_pair
+    for r in (rep, without):
+        for k in ("ingest_enqueued", "ingest_dropped",
+                  "ingest_drained", "ingest_leftover"):
+            assert k in r.counters and r.counters[k] == 0
+
+
+def test_service_walls_use_injectable_clock(tiny_fleet):
+    """Satellite: with a fake telemetry clock every wall measurement is
+    a deterministic multiple of the tick — and replays identically."""
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=3)
+    cfg = ServiceConfig(replan=RCFG)
+
+    def run():
+        tel = Telemetry(clock=FakeClock(step=0.001))
+        rep = run_service(dags, trace, cfg, seed=7, telemetry=tel)
+        return [r.wall_s for r in rep.rounds]
+
+    walls_a, walls_b = run(), run()
+    assert walls_a == walls_b                     # replayable timings
+    for w in walls_a:
+        assert w > 0.0
+        assert round(w / 0.001) == pytest.approx(w / 0.001)
+
+
+def test_run_services_shared_telemetry_tracks(tiny_fleet):
+    """Thread-safety under run_services: two concurrent services share
+    one telemetry and land on their own Perfetto tracks."""
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=2)
+    cfg = ServiceConfig(replan=RCFG)
+    tel = Telemetry()
+    reports = run_services([dags, dags], trace, cfg, seeds=5,
+                           telemetry=tel)
+    solo = run_service(dags, trace, cfg, seed=5)
+    for rep in reports:
+        assert rep.counters == solo.counters
+        for x, x_solo in zip(rep.plans, solo.plans):
+            assert np.array_equal(x, x_solo)
+    evs = tel.tracer.events()
+    labels = {e["tid"]: e["args"]["name"] for e in evs
+              if e["ph"] == "M"}
+    assert labels == {0: "service-0", 1: "service-1"}
+    span_tids = {e["tid"] for e in evs if e["ph"] == "B"}
+    assert span_tids == {0, 1}
+    # per-track B/E pairing survives the interleaving
+    for tid in (0, 1):
+        stack = []
+        for e in evs:
+            if e["tid"] != tid:
+                continue
+            if e["ph"] == "B":
+                stack.append(e["name"])
+            elif e["ph"] == "E":
+                assert stack and stack.pop() == e["name"]
+        assert stack == []
+    # both services' rounds aggregate into one registry
+    snap = tel.registry.snapshot()
+    assert snap["histograms"]["service.round_wall_s"]["count"] == \
+        2 * len(solo.rounds)
+
+
+def test_telemetry_overhead_is_small(tiny_fleet):
+    """Telemetry ON must not meaningfully slow the service. The bench
+    (benchmarks/bench_service.py) stamps the precise number; here we
+    only guard against a pathological regression."""
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=3)
+    cfg = ServiceConfig(replan=RCFG)
+    run_service(dags, trace, cfg, seed=9)         # warm the jit caches
+    t0 = time.perf_counter()
+    run_service(dags, trace, cfg, seed=9)
+    base = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_service(dags, trace, cfg, seed=9, telemetry=Telemetry())
+    instrumented = time.perf_counter() - t0
+    assert instrumented < base * 1.25 + 0.05
+
+
+def test_solver_history_becomes_series(tiny_fleet):
+    """record_history publishes the gBest convergence curve as the
+    ``solver.gbest`` metric series."""
+    from repro.core import run_pso_ga
+    env, dags = tiny_fleet
+    cfg = PSOGAConfig(pop_size=8, max_iters=12, stall_iters=12)
+    tel = Telemetry()
+    res = run_pso_ga(dags[0], env, cfg, seed=1, record_history=True,
+                     telemetry=tel)
+    pts = tel.registry.series("solver.gbest").points()
+    assert [v for _, v in pts] == [float(v) for v in res.history]
+    assert tel.registry.counter("solver.history_runs").value == 1
+
+
+def test_global_channel_reaches_deep_layers(tiny_fleet):
+    """The runner cache and solver history have no config path: the
+    process-global channel is how they join the session's telemetry."""
+    env, dags = tiny_fleet
+    trace = zero_drift_trace(env, rounds=2)
+    tel = Telemetry()
+    with telemetry_scope(tel):
+        run_service(dags, trace, ServiceConfig(replan=RCFG), seed=3)
+    snap = tel.registry.snapshot()
+    lookups = (snap["counters"].get("runner_cache.lookup_hits", 0)
+               + snap["counters"].get("runner_cache.lookup_misses", 0))
+    assert lookups > 0
+    assert "service.round_wall_s" in snap["histograms"]
+    assert set_telemetry(None) is None            # scope restored
